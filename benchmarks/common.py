@@ -1,0 +1,31 @@
+"""Shared timing + reporting helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+ROWS: List[tuple] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall-clock microseconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

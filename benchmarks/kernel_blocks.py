@@ -1,0 +1,77 @@
+"""Structural block-shape analysis for the spamm_mm Pallas kernel (the
+"Pallas-specific" §Perf methodology: no TPU wall-clock exists here, so block
+shapes are chosen by reasoning from VMEM footprint, MXU alignment and
+arithmetic intensity — then validated for correctness in interpret mode).
+
+v5e: ~128 MiB VMEM/core usable ≈ 64 MiB budget for a double-buffered
+pipeline; MXU is 128×128 systolic.
+
+Per grid step the kernel holds (double-buffered ×2):
+  A block  (tile × tile)            dtype_bytes
+  B block  (tile × tile·block_n)    dtype_bytes
+  C scratch(tile × tile·block_n)    f32 (accumulator, single copy)
+Arithmetic intensity per k-step = 2·tile²·(tile·block_n) FLOPs over
+(tile² + tile²·block_n)·dtype_bytes fetched.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+
+VMEM_BUDGET = 64 * 2**20
+MXU = 128
+
+
+def run(quick: bool = False):
+    best = None
+    for dtype_bytes, dname in ((4, "f32"), (2, "bf16")):
+        for tile in (64, 128, 256, 512):
+            for block_n in (1, 2, 4, 8):
+                a_b = tile * tile * dtype_bytes
+                b_b = tile * tile * block_n * dtype_bytes
+                acc = tile * tile * block_n * 4
+                vmem = 2 * (a_b + b_b) + acc  # double-buffered in, 1× scratch
+                if vmem > VMEM_BUDGET:
+                    continue
+                flops = 2 * tile * tile * tile * block_n
+                bytes_in = a_b + b_b
+                ai = flops / bytes_in
+                mxu_ok = tile % MXU == 0
+                # ridge point of v5e: 197e12/819e9 ≈ 241 FLOP/byte
+                compute_bound = ai >= 241
+                row(
+                    f"kernel_blocks/{dname}/tile={tile}/bn={block_n}",
+                    0.0,
+                    f"vmem={vmem/2**20:.1f}MiB;AI={ai:.0f}flop/B;"
+                    f"mxu_aligned={mxu_ok};compute_bound={compute_bound}",
+                )
+                score = (compute_bound, mxu_ok, ai, -vmem)
+                if mxu_ok and (best is None or score > best[0]):
+                    best = (score, dname, tile, block_n)
+    if best:
+        _, dname, tile, bn = best
+        row(
+            "kernel_blocks/bandwidth_optimal",
+            0.0,
+            f"dtype={dname};tile={tile};block_n={bn} — crosses the v5e ridge "
+            f"(AI≥241), but see granularity row below",
+        )
+        # Granularity counter-force (measured, EXPERIMENTS.md §Perf): at
+        # fixed τ on an exponential-decay matrix, executed-tile fraction is
+        # 0.85% @tile=64 vs 40.6% @tile=512 (N=2048) — 48× more work for the
+        # same error. For decay matrices the skip granularity dominates the
+        # 8× arithmetic-intensity gain: the paper's LoNum≈64–128 default is
+        # the right choice on TPU as well; large tiles only pay off for
+        # unstructured near-sparse operands (uniform tile norms).
+        row(
+            "kernel_blocks/granularity_optimal",
+            0.0,
+            "decay matrices: tile=64-128, block_n=2-4 (bound 5.6us vs 35.4us "
+            "at tile=512 on the N=2048 exponential-decay workload)",
+        )
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

@@ -1,0 +1,40 @@
+"""Microbenchmarks of the two cuSpAMM kernels: pure-jnp oracle vs the Pallas
+kernel body in interpret mode (CPU correctness path; interpret-mode timing
+is NOT TPU performance — the TPU numbers are the §Roofline/§Perf analysis).
+Derived column carries the tile-skip accounting the kernels achieve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import spamm as cs
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = False):
+    n, tile = (512, 64) if quick else (1024, 64)
+    a = jnp.asarray(cs.exponential_decay(n, lam=0.7, seed=0))
+    b = jnp.asarray(cs.exponential_decay(n, lam=0.7, seed=1))
+
+    t_norm_ref = timeit(jax.jit(lambda x: ref.tile_norms_ref(x, tile)), a)
+    row("kernels/getnorm/jnp", t_norm_ref, f"N={n};tile={tile}")
+    t_norm_pal = timeit(
+        jax.jit(lambda x: ops.tile_norms(x, tile, backend="interpret")), a)
+    row("kernels/getnorm/pallas-interpret", t_norm_pal,
+        "interpret-mode (correctness path)")
+
+    for tau, label in [(0.0, "dense-equivalent"), (1e-2, "gated")]:
+        c, info = ops.spamm_matmul(a, b, tau, tile=tile, backend="jnp")
+        t = timeit(
+            jax.jit(lambda x, y: ops.spamm_matmul(x, y, tau, tile=tile,
+                                                  backend="jnp")[0]), a, b)
+        row(f"kernels/spamm_mm/jnp/tau={tau:g}", t,
+            f"{label};valid={float(info['valid_fraction']):.3f}")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

@@ -1,0 +1,129 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSON artifacts. Usage:
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import SHAPES, cells
+
+HW = "197 TFLOP/s bf16 · 819 GB/s HBM · 50 GB/s/link ICI (v5e)"
+
+
+def load(d, mesh, arch, shape):
+    fn = os.path.join(d, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        return json.load(f)
+
+
+def fmt_b(x):
+    if x is None:
+        return "—"
+    for u, s in [(2**40, "TiB"), (2**30, "GiB"), (2**20, "MiB")]:
+        if abs(x) >= u:
+            return f"{x/u:.2f}{s}"
+    return f"{x:.0f}B"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def dryrun_table(d, mesh):
+    rows = [
+        "| arch | shape | compile | args/dev | peak-temp/dev | HLO GFLOP/dev | "
+        "HBM GB/dev (staging%) | collective wire GB/dev | top collectives (count×op) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, skip in cells(include_skipped=True):
+        if skip:
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                        f"SKIP (full attention @512k, DESIGN.md §6) |")
+            continue
+        j = load(d, mesh, arch, shape)
+        if j is None:
+            rows.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+            continue
+        h = j["hlo"]
+        coll = sorted(h["collectives"].items(),
+                      key=lambda kv: -kv[1]["wire_bytes"])[:3]
+        cstr = ", ".join(f"{int(v['count'])}×{k}" for k, v in coll) or "none"
+        staging = (100.0 * h.get("hbm_staging_bytes_per_device", 0)
+                   / max(h["hbm_bytes_per_device"], 1))
+        rows.append(
+            f"| {arch} | {shape} | {j['compile_s']:.0f}s "
+            f"| {fmt_b(j['memory']['argument_bytes'])} "
+            f"| {fmt_b(j['memory']['peak_bytes'])} "
+            f"| {h['flops_per_device']/1e9:.0f} "
+            f"| {h['hbm_bytes_per_device']/1e9:.0f} ({staging:.0f}%) "
+            f"| {h['collective_wire_bytes_per_device']/1e9:.1f} "
+            f"| {cstr} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(d, mesh):
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS/HLO | roofline frac | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("memory_s", "train"): "bf16 param storage + dots-only remat (fewer f32 re-reads)",
+        ("memory_s", "prefill"): "larger attention KV chunks; fused flash (Pallas) keeps probs in VMEM",
+        ("memory_s", "decode"): "KV-cache quantization (int8/fp8) halves cache reads",
+        ("collective_s", "train"): "sequence-parallel activations (psum→RS+AG) + bf16 FSDP gathers",
+        ("collective_s", "prefill"): "shard seq over model for activations; defer TP psum",
+        ("collective_s", "decode"): "replicate params over data for serving (no FSDP gathers/token)",
+        ("compute_s", "train"): "causal-aware flash (skip masked KV blocks) halves attention FLOPs",
+        ("compute_s", "prefill"): "causal-aware flash (skip masked KV blocks)",
+        ("compute_s", "decode"): "already compute-light; batch more requests",
+    }
+    for arch, shape, skip in cells(include_skipped=True):
+        if skip:
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                        f"SKIP (DESIGN.md §6) |")
+            continue
+        j = load(d, mesh, arch, shape)
+        if j is None:
+            rows.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+            continue
+        r = j["roofline"]
+        kind = SHAPES[shape].kind
+        frac = r["compute_s"] / max(r["step_time_bound_s"], 1e-30)
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r['useful_flops_ratio']:.2f} | {frac:.3f} "
+            f"| {hints.get((r['dominant'], kind), '—')} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    for mesh in ("16x16", "2x16x16"):
+        if args.section in ("all", "dryrun"):
+            print(f"\n### Dry-run — mesh {mesh}\n")
+            print(dryrun_table(args.dir, mesh))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline — single-pod 16×16 (hardware: " + HW + ")\n")
+        print(roofline_table(args.dir, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

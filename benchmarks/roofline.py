@@ -1,0 +1,52 @@
+"""Roofline report: reads the dry-run artifacts (experiments/dryrun/) and
+prints the per-(arch × shape × mesh) three-term table that EXPERIMENTS.md
+§Roofline embeds. Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+from repro.configs import cells
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(mesh: str, arch: str, shape: str):
+    fn = os.path.join(DRYRUN_DIR, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        return json.load(f)
+
+
+def run(quick: bool = False):
+    for mesh in ("16x16", "2x16x16"):
+        for arch, shape, skip in cells(include_skipped=True):
+            if skip:
+                row(f"roofline/{mesh}/{arch}/{shape}", 0.0,
+                    "SKIP(full-attention arch at 512k ctx; DESIGN.md §6)")
+                continue
+            d = load(mesh, arch, shape)
+            if d is None:
+                row(f"roofline/{mesh}/{arch}/{shape}", 0.0, "MISSING")
+                continue
+            r = d["roofline"]
+            step_us = r["step_time_bound_s"] * 1e6
+            row(
+                f"roofline/{mesh}/{arch}/{shape}",
+                step_us,
+                f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
+                f"collective={r['collective_s']:.3e}s;dom={r['dominant']};"
+                f"useful_flops_ratio={r['useful_flops_ratio']:.3f}",
+            )
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + roofline readout.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableN]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured cell).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU-friendly trimmed sweep")
+    ap.add_argument("--only", default=None,
+                    help="run a single module (table2|table3|table4|table5|"
+                         "loadbalance|kernels|roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (kernel_blocks, kernels_micro, loadbalance,
+                            roofline, table1_taus, table2_dense,
+                            table3_sparse, table4_ergo, table5_vgg)
+    from benchmarks.common import header
+
+    mods = {
+        "table1": table1_taus,
+        "table2": table2_dense,
+        "table3": table3_sparse,
+        "table4": table4_ergo,
+        "table5": table5_vgg,
+        "loadbalance": loadbalance,
+        "kernels": kernels_micro,
+        "kernel_blocks": kernel_blocks,
+        "roofline": roofline,
+    }
+    header()
+    for name, mod in mods.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        mod.run(quick=args.quick)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,42 @@
+"""Paper §4.3.1 scenario: accelerate matrix powers of electronic-structure
+style decay matrices with SpAMM, sweeping τ (the paper's Table 4 / Fig. 6).
+
+  PYTHONPATH=src python examples/ergo_power.py [--n 2048] [--power 4]
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spamm as cs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--power", type=int, default=4)
+    ap.add_argument("--lam", type=float, default=0.75)
+    args = ap.parse_args()
+
+    a = jnp.asarray(cs.exponential_decay(args.n, lam=args.lam, seed=0))
+    exact = np.asarray(a, np.float64)
+    for _ in range(args.power - 1):
+        exact = exact @ np.asarray(a, np.float64)
+
+    print(f"A^{args.power}, N={args.n}, exponential decay λ={args.lam}")
+    print(f"{'tau':>10} {'rel err':>12} {'avg tiles executed':>20}")
+    for tau in (1e-10, 1e-8, 1e-6, 1e-4, 1e-2):
+        acc = a
+        fracs = []
+        for _ in range(args.power - 1):
+            acc, info = cs.spamm(acc, a, tau, tile=64, backend="jnp")
+            fracs.append(float(info.valid_fraction))
+        err = np.linalg.norm(np.asarray(acc, np.float64) - exact)
+        rel = err / np.linalg.norm(exact)
+        print(f"{tau:>10.0e} {rel:>12.2e} {np.mean(fracs):>19.1%}")
+    print("\n(cf. paper Table 4: error →0 as τ→1e-10 while work stays skipped;"
+          "\n work reduction on TPU = 1/executed-fraction per §Roofline)")
+
+
+if __name__ == "__main__":
+    main()

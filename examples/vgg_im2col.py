@@ -1,0 +1,35 @@
+"""Paper §4.3.2 scenario: conv layers as im2col GEMMs (VGG13 conv21/conv31
+shapes) with ReLU-sparse activations + pruned weights, gated by valid-ratio
+(the paper's DNN-facing knob).
+
+  PYTHONPATH=src python examples/vgg_im2col.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spamm as cs
+from repro.data.pipeline import relu_sparse_matrix, vgg_im2col_shapes
+
+
+def main():
+    print(f"{'layer':>8} {'ratio':>7} {'achieved':>9} {'rel err':>9} "
+          f"{'work reduction':>15}")
+    for name, (m, k, n) in vgg_im2col_shapes().items():
+        n = min(n, 6400)
+        x = jnp.asarray(relu_sparse_matrix(m, k, sparsity=0.55, seed=1))
+        w = np.random.default_rng(2).standard_normal((k, n)).astype(np.float32)
+        w *= np.abs(w) > 0.8  # weight pruning (paper §1)
+        w = jnp.asarray(w)
+        dense = x @ w
+        for ratio in (0.97, 0.85, 0.63, 0.43):
+            c, info = cs.spamm(x, w, valid_ratio=ratio, tile=64, backend="jnp")
+            rel = float(jnp.linalg.norm(c - dense) / jnp.linalg.norm(dense))
+            f = float(info.valid_fraction)
+            print(f"{name:>8} {ratio:>6.0%} {f:>9.1%} {rel:>9.3f} "
+                  f"{1/max(f,1e-9):>14.1f}x")
+    print("\n(the paper reports ≤1.1% VGG13 accuracy loss down to ratio 43% —"
+          "\n GEMM-level error is absorbed by the network's decision margins)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Distributed SpAMM (paper §3.4 + §3.5.1, extended beyond the paper).
+
+Paper-faithful mode (`spamm_rowpart`): C is row-partitioned across devices on
+one mesh axis, B is replicated — the multi-GPU scheme of §3.4 (the paper
+streams B/A in batches over PCIe; on a TPU pod the replication is an
+all-gather the XLA scheduler overlaps with the local get-norm compute, which
+plays the role of the paper's batched-UM transfer overlap). Load balance is
+the §3.5.1 strided (cyclic) tile-row assignment.
+
+Beyond-paper mode (`spamm_2d`): C sharded 2-D over (row_axis × col_axis); the
+contraction dimension is sharded over col_axis, each device norm-gates its
+local k-slice and the partial products are combined with a psum_scatter
+(ring reduce-scatter, overlapped by XLA) — the SUMMA-style extension the
+paper explicitly leaves as future work ("can be further integrated with
+CANNON and SUMMA").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import schedule as _schedule
+from repro.kernels import ops as kops
+
+
+def _local_spamm(a_loc, b, tau, tile, backend, block_n):
+    c, info = kops.spamm_matmul(
+        a_loc, b, tau, tile=tile, backend=backend, block_n=block_n
+    )
+    return c, info["valid_fraction"].reshape(1)
+
+
+def spamm_rowpart(
+    a: jax.Array,
+    b: jax.Array,
+    tau,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    tile: int = 64,
+    backend: str = "auto",
+    block_n: int = 1,
+    schedule: str = "contiguous",
+):
+    """Paper §3.4: row-partition C over `axis`, B replicated.
+
+    a: (M, K), b: (K, N); M/tile divisible by mesh.shape[axis].
+    schedule: 'contiguous' (paper default), 'cyclic' (§3.5.1 load balance —
+    NOTE: permutes tile-rows *inside the step*, which lowers to a large
+    collective; production jobs should store A pre-permuted and pass
+    'pre_permuted', which is free: identical HLO to contiguous with cyclic
+    balance. See EXPERIMENTS.md §Perf c1), or 'pre_permuted'.
+    Returns (C, mean_valid_fraction).
+    """
+    m, k = a.shape
+    ndev = mesh.shape[axis]
+    gm = m // tile
+    assert gm % ndev == 0, (gm, ndev)
+
+    in_step_perm = schedule == "cyclic"
+    if in_step_perm:
+        perm = _schedule.device_permutation(ndev, gm, schedule)
+        inv = np.argsort(perm)
+        a = a.reshape(gm, tile, k)[perm].reshape(m, k)
+
+    fn = jax.shard_map(
+        functools.partial(
+            _local_spamm, tau=tau, tile=tile, backend=backend, block_n=block_n
+        ),
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=(P(axis, None), P(axis)),
+    )
+    c, fracs = fn(a, b)
+    if in_step_perm:
+        c = c.reshape(gm, tile, -1)[inv].reshape(m, -1)
+    return c, jnp.mean(fracs)
+
+
+def _local_spamm_psum(a_loc, b_loc, tau, tile, backend, block_n, col_axis):
+    # gate on LOCAL k-slice norms: global bitmap decomposes per k, so the
+    # union over shards equals the flat single-device bitmap (exactness).
+    c_part, info = kops.spamm_matmul(
+        a_loc, b_loc, tau, tile=tile, backend=backend, block_n=block_n
+    )
+    # ring reduce-scatter of the partial products over the contraction axis;
+    # scatter along N so C ends fully 2-D sharded.
+    c = jax.lax.psum_scatter(c_part, col_axis, scatter_dimension=1, tiled=True)
+    return c, info["valid_fraction"].reshape(1, 1)
+
+
+def spamm_2d(
+    a: jax.Array,
+    b: jax.Array,
+    tau,
+    mesh: Mesh,
+    *,
+    row_axis: str = "data",
+    col_axis: str = "model",
+    tile: int = 64,
+    backend: str = "auto",
+    block_n: int = 1,
+    schedule: str = "contiguous",
+):
+    """Beyond-paper SUMMA-style 2-D SpAMM.
+
+    A sharded (rows over row_axis, K over col_axis); B sharded (K over
+    col_axis); C comes back sharded (rows over row_axis, cols over col_axis)
+    via psum_scatter. Norm gating happens on local k-slices — exact.
+    Returns (C, mean_valid_fraction).
+    """
+    m, k = a.shape
+    row_axes = row_axis if isinstance(row_axis, tuple) else (row_axis,)
+    nrow = 1
+    for ax in row_axes:
+        nrow *= mesh.shape[ax]
+    ncol = mesh.shape[col_axis]
+    gm = m // tile
+    assert gm % nrow == 0 and (k // tile) % ncol == 0
+
+    in_step_perm = schedule == "cyclic"
+    if in_step_perm:
+        perm = _schedule.device_permutation(nrow, gm, schedule)
+        inv = np.argsort(perm)
+        a = a.reshape(gm, tile, k)[perm].reshape(m, k)
+
+    fn = jax.shard_map(
+        functools.partial(
+            _local_spamm_psum,
+            tau=tau,
+            tile=tile,
+            backend=backend,
+            block_n=block_n,
+            col_axis=col_axis,
+        ),
+        mesh=mesh,
+        in_specs=(P(row_axes, col_axis), P(col_axis, None)),
+        out_specs=(P(row_axes, col_axis), P(row_axes, col_axis)),
+    )
+    c, fracs = fn(a, b)
+    if in_step_perm:
+        c = c.reshape(gm, tile, -1)[inv].reshape(m, -1)
+    return c, jnp.mean(fracs)

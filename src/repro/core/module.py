@@ -1,0 +1,112 @@
+"""SpAMM as a drop-in layer for the model zoo (paper §4.3: ergo + VGG13 show
+SpAMM embedded in larger applications; here it replaces x @ W GEMMs).
+
+`spamm_linear(x, w, ...)` flattens leading dims, zero-pads to tile multiples,
+runs the SpAMM pipeline, and un-pads. Differentiable via custom_vjp:
+
+  * bwd="dense" (default): exact dense gradients — the paper accelerates
+    inference only, so training keeps unbiased grads while the forward enjoys
+    tile skipping.
+  * bwd="spamm": gradients computed with the SAME forward bitmap transposed
+    (dx uses mask[i,j,k]→[i,k,j]-gated g @ Wᵀ, dw uses xᵀ @ g gated) — a
+    beyond-paper mode trading gradient exactness for symmetric FLOP savings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spamm as _spamm
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _flatten_pad(x, tile):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    m = 1
+    for s in lead:
+        m *= s
+    x2 = x.reshape(m, k)
+    return _spamm.pad_to_tile(x2, tile), (lead, m, k)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def spamm_linear(
+    x: jax.Array,
+    w: jax.Array,
+    tau: jax.Array,
+    tile: int = 64,
+    backend: str = "auto",
+    bwd: str = "dense",
+    block_n: int = 1,
+) -> jax.Array:
+    """y[..., n] = SpAMM(x[..., k] @ w[k, n], tau). Output dtype follows x."""
+    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n)
+    return y
+
+
+def _fwd_impl(x, w, tau, tile, backend, block_n):
+    xp, (lead, m, k) = _flatten_pad(x, tile)
+    wp = _spamm.pad_to_tile(w, tile)
+    n = w.shape[-1]
+    c, info = kops.spamm_matmul(
+        xp, wp, tau, tile=tile, block_n=block_n, backend=backend
+    )
+    y = c[:m, :n].reshape(*lead, n).astype(x.dtype)
+    return y, info
+
+
+def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n):
+    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n)
+    return y, (x, w, tau)
+
+
+def _spamm_linear_bwd(tile, backend, bwd, block_n, res, g):
+    x, w, tau = res
+    lead = x.shape[:-1]
+    k, n = w.shape
+    m = 1
+    for s in lead:
+        m *= s
+    g2 = g.reshape(m, n)
+    x2 = x.reshape(m, k)
+    if bwd == "dense":
+        dx = (g2 @ w.T).reshape(x.shape).astype(x.dtype)
+        dw = (x2.T @ g2).astype(w.dtype)
+    elif bwd == "spamm":
+        gp = _spamm.pad_to_tile(g2, tile)
+        xp = _spamm.pad_to_tile(x2, tile)
+        wp = _spamm.pad_to_tile(w, tile)
+        dxp, _ = kops.spamm_matmul(gp, wp.T, tau, tile=tile, backend=backend)
+        dwp, _ = kops.spamm_matmul(xp.T, gp, tau, tile=tile, backend=backend)
+        dx = dxp[:m, :k].reshape(x.shape).astype(x.dtype)
+        dw = dwp[:k, :n].astype(w.dtype)
+    else:
+        raise ValueError(f"bwd={bwd!r}")
+    dtau = jnp.zeros_like(jnp.asarray(tau, jnp.float32))
+    return dx, dw, dtau
+
+
+spamm_linear.defvjp(_spamm_linear_fwd, _spamm_linear_bwd)
+
+
+def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any) -> jax.Array:
+    """The hook the model zoo calls for every eligible GEMM: dense when
+    spamm_cfg is disabled, spamm_linear when enabled."""
+    if spamm_cfg is None or not getattr(spamm_cfg, "enable", False):
+        return x @ w
+    return spamm_linear(
+        x,
+        w,
+        jnp.asarray(spamm_cfg.tau, jnp.float32),
+        spamm_cfg.tile,
+        spamm_cfg.backend,
+        spamm_cfg.bwd,
+        spamm_cfg.block_n,
+    )

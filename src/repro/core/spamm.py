@@ -1,0 +1,185 @@
+"""SpAMM core — the paper's contribution as a composable JAX module.
+
+Functional API over the two kernels (get-norm, multiplication) with:
+  * arbitrary (M, K) @ (K, N) shapes (auto zero-padding to tile multiples,
+    paper §3 "the matrices are padded with zeros"),
+  * tau- or valid-ratio-driven gating (ratio → tau via core.tau_search),
+  * the original *recursive* Algorithm 1 as an oracle for the equivalence
+    property test (paper §3.1 claims re-design ≡ recursion),
+  * scalable valid-ratio counting that never materializes the O(BDIM³)
+    product tensor (sorted normmap + searchsorted).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# padding helpers
+# ---------------------------------------------------------------------------
+
+def pad_to_tile(x: jax.Array, tile: int) -> jax.Array:
+    m, n = x.shape
+    pm, pn = (-m) % tile, (-n) % tile
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+# ---------------------------------------------------------------------------
+# scalable valid-ratio counting (no O(gm·gn·gk) tensor)
+# ---------------------------------------------------------------------------
+
+def count_valid(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
+    """#{(i,j,k): na[i,k]·nb[k,j] >= tau} in O(gm·gk·log gn) memory-light form."""
+    gm, gk = norm_a.shape
+    gk2, gn = norm_b.shape
+    assert gk == gk2
+    tau = jnp.asarray(tau, jnp.float32)
+    sorted_nb = jnp.sort(norm_b, axis=1)  # (gk, gn)
+    # threshold per (i, k): nb >= tau / na  (na==0 ⇒ nothing passes unless tau<=0)
+    thr = tau / jnp.maximum(norm_a, 1e-38)  # (gm, gk)
+    counts = jax.vmap(
+        lambda row, t: gn - jnp.searchsorted(row, t, side="left"),
+        in_axes=(0, 1),
+        out_axes=1,
+    )(sorted_nb, thr)  # (gm, gk)
+    # na == 0: products are 0; valid iff tau <= 0
+    zero_a = norm_a <= 0.0
+    counts = jnp.where(zero_a, jnp.where(tau <= 0.0, gn, 0), counts)
+    return jnp.sum(counts, dtype=jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32)
+
+
+def valid_ratio_of(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
+    """paper §3.5.2: valid ratio = Σ V[i,j] / BDIM³ (generalized to gm·gn·gk)."""
+    gm, gk = norm_a.shape
+    _, gn = norm_b.shape
+    return count_valid(norm_a, norm_b, tau) / (gm * gk * gn)
+
+
+# ---------------------------------------------------------------------------
+# top-level SpAMM
+# ---------------------------------------------------------------------------
+
+class SpammInfo(NamedTuple):
+    tau: jax.Array            # threshold actually used
+    valid_fraction: jax.Array # executed-tile fraction (== paper valid ratio)
+    effective_flops: jax.Array  # 2·M·K·N · valid_fraction
+
+
+def spamm(
+    a: jax.Array,
+    b: jax.Array,
+    tau=None,
+    *,
+    valid_ratio=None,
+    tile: int = 64,
+    block_n: int = 1,
+    backend: str = "auto",
+    use_mxu_norm: bool = False,
+    out_dtype=None,
+):
+    """C ≈ A @ B with norm-gated tile skipping. Returns (C, SpammInfo).
+
+    Exactly one of `tau` / `valid_ratio` must be given. Arbitrary shapes are
+    zero-padded to tile multiples (paper §3) and the result is un-padded.
+    """
+    if (tau is None) == (valid_ratio is None):
+        raise ValueError("give exactly one of tau / valid_ratio")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap, bp = pad_to_tile(a, tile), pad_to_tile(b, tile)
+
+    if valid_ratio is not None:
+        from repro.core.tau_search import search_tau  # circular-safe
+
+        na = kops.tile_norms(ap, tile, backend=backend, use_mxu=use_mxu_norm)
+        nb = kops.tile_norms(bp, tile, backend=backend, use_mxu=use_mxu_norm)
+        tau, _ = search_tau(na, nb, valid_ratio)
+
+    c, info = kops.spamm_matmul(
+        ap,
+        bp,
+        tau,
+        tile=tile,
+        block_n=block_n,
+        backend=backend,
+        use_mxu_norm=use_mxu_norm,
+        out_dtype=out_dtype,
+    )
+    c = c[:m, :n]
+    frac = info["valid_fraction"]
+    return c, SpammInfo(
+        tau=jnp.asarray(tau, jnp.float32),
+        valid_fraction=frac,
+        effective_flops=frac * (2.0 * m * k * n),
+    )
+
+
+# ---------------------------------------------------------------------------
+# original recursive Algorithm 1 (oracle for the equivalence test)
+# ---------------------------------------------------------------------------
+
+def recursive_spamm(a: np.ndarray, b: np.ndarray, tau: float, leaf: int) -> np.ndarray:
+    """Paper Algorithm 1, verbatim quad-tree recursion (numpy, test oracle).
+
+    Square matrices with N a power-of-two multiple of `leaf`.
+    """
+    n = a.shape[0]
+    assert a.shape == b.shape == (n, n)
+
+    def fnorm(x):
+        return float(np.sqrt(np.sum(np.asarray(x, np.float64) ** 2)))
+
+    def rec(ab, bb):
+        nn = ab.shape[0]
+        if nn == leaf:
+            return np.asarray(ab, np.float64) @ np.asarray(bb, np.float64)
+        h = nn // 2
+        c = np.zeros((nn, nn), np.float64)
+        for i in (0, 1):
+            for j in (0, 1):
+                acc = np.zeros((h, h), np.float64)
+                for k in (0, 1):
+                    asub = ab[i * h:(i + 1) * h, k * h:(k + 1) * h]
+                    bsub = bb[k * h:(k + 1) * h, j * h:(j + 1) * h]
+                    if fnorm(asub) * fnorm(bsub) >= tau:
+                        acc += rec(asub, bsub)
+                c[i * h:(i + 1) * h, j * h:(j + 1) * h] = acc
+        return c
+
+    return rec(a, b)
+
+
+# ---------------------------------------------------------------------------
+# decay-matrix generators (paper §2.1 / §4.1)
+# ---------------------------------------------------------------------------
+
+def algebraic_decay(n: int, c: float = 0.1, lam: float = 0.1, seed=None) -> np.ndarray:
+    """a_ij = c / (|i-j|^lam + 1); with seed, sign-randomized (keeps |a_ij|)."""
+    d = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :]).astype(np.float64)
+    m = (c / (d ** lam + 1.0)).astype(np.float32)
+    if seed is not None:
+        rng = np.random.default_rng(seed)
+        m = m * rng.choice(np.float32([-1.0, 1.0]), size=m.shape)
+    return m
+
+
+def exponential_decay(n: int, c: float = 1.0, lam: float = 0.9, seed=None) -> np.ndarray:
+    """|a_ij| <= c·lam^|i-j| (ergo-style matrices in §4.3.1 decay this way)."""
+    d = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :]).astype(np.float64)
+    m = (c * np.power(lam, d)).astype(np.float32)
+    if seed is not None:
+        rng = np.random.default_rng(seed)
+        m = m * rng.uniform(0.5, 1.0, size=m.shape).astype(np.float32)
+        m = m * rng.choice(np.float32([-1.0, 1.0]), size=m.shape)
+    return m

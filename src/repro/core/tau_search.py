@@ -1,0 +1,86 @@
+"""valid-ratio → τ search (paper §3.5.2).
+
+Users of non-scientific applications specify `valid_ratio` (fraction of
+sub-matrix products actually executed) instead of the numerical threshold τ.
+Per the paper: binary search over [0, k·ave] where ave is the mean norm
+product, k the expansion coefficient starting at 1 and incremented whenever
+the upper bound cannot satisfy the demand; iteration count and tolerance are
+user-bounded. Implemented as a lax.while_loop so it jits and shards.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spamm as _spamm
+
+
+class TauSearchResult(NamedTuple):
+    tau: jax.Array
+    achieved_ratio: jax.Array
+    iterations: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def search_tau(
+    norm_a: jax.Array,
+    norm_b: jax.Array,
+    target_ratio,
+    *,
+    tol: float = 0.01,
+    max_iters: int = 20,
+):
+    """Find τ s.t. valid_ratio(τ) ≈ target_ratio. Returns (tau, result).
+
+    valid_ratio is monotone non-increasing in τ; ratio(0)=1, ratio(∞)=0.
+    """
+    target = jnp.asarray(target_ratio, jnp.float32)
+    # mean norm product without materializing the product tensor:
+    # mean_{i,j,k} na[i,k]·nb[k,j] = (1/(gm·gn·gk)) Σ_k (Σ_i na[i,k])(Σ_j nb[k,j])
+    gm, gk = norm_a.shape
+    _, gn = norm_b.shape
+    ave = jnp.sum(jnp.sum(norm_a, 0) * jnp.sum(norm_b, 1)) / (gm * gn * gk)
+
+    def ratio(tau):
+        return _spamm.valid_ratio_of(norm_a, norm_b, tau).astype(jnp.float32)
+
+    # --- expand upper bound: k ← k+1 until ratio(k·ave) <= target (paper) ---
+    def exp_cond(state):
+        k, _ = state
+        return jnp.logical_and(ratio(k * ave) > target, k < 1024.0)
+
+    def exp_body(state):
+        k, it = state
+        return k + 1.0, it + 1
+
+    k, exp_iters = jax.lax.while_loop(exp_cond, exp_body, (jnp.float32(1.0), jnp.int32(0)))
+
+    # --- binary search in [0, k·ave], tracking the best candidate seen ---
+    def bin_cond(state):
+        lo, hi, it, best_tau, best_r = state
+        return jnp.logical_and(it < max_iters,
+                               jnp.abs(best_r - target) > tol)
+
+    def bin_body(state):
+        lo, hi, it, best_tau, best_r = state
+        mid = 0.5 * (lo + hi)
+        r = ratio(mid)
+        better = jnp.abs(r - target) < jnp.abs(best_r - target)
+        best_tau = jnp.where(better, mid, best_tau)
+        best_r = jnp.where(better, r, best_r)
+        # ratio too high → τ too small → move lo up
+        lo = jnp.where(r > target, mid, lo)
+        hi = jnp.where(r > target, hi, mid)
+        return lo, hi, it + 1, best_tau, best_r
+
+    mid0 = 0.5 * k * ave
+    r0 = ratio(mid0)
+    lo, hi, iters, tau, r = jax.lax.while_loop(
+        bin_cond, bin_body,
+        (jnp.float32(0.0), k * ave, jnp.int32(1), mid0, r0),
+    )
+    res = TauSearchResult(tau=tau, achieved_ratio=r, iterations=iters + exp_iters)
+    return tau, res

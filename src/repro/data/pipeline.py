@@ -1,0 +1,86 @@
+"""Data pipeline: deterministic synthetic token/embedding streams + the
+paper's decay-matrix workloads (§4.1 synthesized, §4.3 ergo/VGG-like).
+
+The token stream is seeded per (epoch, step) so a restart from checkpoint
+resumes at exactly the batch it would have seen (fault-tolerance contract:
+the data state is just `step`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import spamm as core_spamm
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Zipf-ish synthetic token stream with next-token labels."""
+
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        v = self.cfg.vocab
+        # zipf-like marginal over vocab with a repeating n-gram structure so
+        # the LM has something learnable
+        base = rng.zipf(1.3, size=(self.global_batch, self.seq_len + 1)) % (v - 2)
+        period = 1 + (np.arange(self.seq_len + 1) % 17)
+        toks = ((base + period[None, :]) % (v - 2)).astype(np.int32) + 1
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+        if self.cfg.frontend:
+            rngj = jax.random.key(hash((self.seed, step)) % (2**31))
+            batch = {
+                "embeds": 0.02
+                * jax.random.normal(
+                    rngj, (self.global_batch, self.seq_len, self.cfg.d_model),
+                    jnp.float32,
+                ),
+                "labels": batch["labels"],
+            }
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+# ---------------------------------------------------------------------------
+# paper workloads
+# ---------------------------------------------------------------------------
+
+def synthesized_decay(n: int, seed: int = 0) -> np.ndarray:
+    """Paper §4.1: a_ij = 0.1 / (|i-j|^0.1 + 1), sign-randomized."""
+    return core_spamm.algebraic_decay(n, c=0.1, lam=0.1, seed=seed)
+
+
+def ergo_like(n: int, lam: float = 0.7, seed: int = 0) -> np.ndarray:
+    """Exponential-decay matrices standing in for the ergo §4.3.1 matrices
+    (the real ones come from ErgoSCF water-cluster runs; same decay law)."""
+    return core_spamm.exponential_decay(n, c=1.0, lam=lam, seed=seed)
+
+
+def vgg_im2col_shapes():
+    """Paper §4.3.2: (M, K, N) of conv21 and conv31 after im2col."""
+    return {"conv21": (128, 576, 25_600), "conv31": (256, 1_152, 6_400)}
+
+
+def relu_sparse_matrix(m: int, n: int, sparsity: float = 0.55, seed: int = 0):
+    """Near-sparse activation-like matrix (paper §1: ReLU ⇒ >50% zeros)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, n)).astype(np.float32)
+    thresh = np.quantile(x, sparsity)
+    return np.maximum(x - thresh, 0.0)

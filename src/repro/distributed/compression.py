@@ -1,0 +1,42 @@
+"""Gradient compression with error feedback (beyond-paper, DESIGN.md §9).
+
+Int8EF: per-leaf symmetric int8 quantization of gradients with an error-
+feedback residual (Seide et al. / EF-SGD): the quantization error of step t
+is added back into the gradient of step t+1, preserving convergence. In a
+real deployment the int8 payload is what crosses the DP all-reduce (4×
+fewer wire bytes on the `data`/`pod` axes); here the quantize/dequantize
+pair runs right before the optimizer so the numerics (and the EF state)
+are exactly those of the compressed collective.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Int8EF(NamedTuple):
+    enabled: bool = True
+
+    def apply(self, grads, state):
+        """grads/state['ef']: matching pytrees (f32). Returns (deq, state')."""
+        ef = state["ef"]
+
+        def comp(g, e):
+            g = g + e
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+            return deq, g - deq
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef)
+        outs = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+        deq = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_ef = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return deq, dict(state, ef=new_ef)
+
+    def wire_bytes_saved(self, grads) -> float:
+        total = sum(g.size for g in jax.tree.leaves(grads))
+        return total * (4 - 1)  # f32 → int8 payload

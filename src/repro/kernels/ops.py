@@ -1,0 +1,136 @@
+"""jit'd wrappers for the cuSpAMM kernels with backend dispatch.
+
+backends:
+  "pallas"    — compiled Pallas TPU kernels (requires a real TPU).
+  "interpret" — Pallas kernels executed with interpret=True (CPU-correctness
+                path; runs the exact kernel body in Python/XLA emulation).
+  "jnp"       — pure-jnp oracles from ref.py (used for the CPU dry-run and as
+                the differentiable path inside models).
+  "auto"      — "pallas" when a TPU is attached, else "jnp".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import getnorm as _getnorm
+from repro.kernels import ref as _ref
+from repro.kernels import spamm_mm as _spamm_mm
+
+VALID_BACKENDS = ("auto", "pallas", "interpret", "jnp")
+
+
+@functools.cache
+def _has_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # no backend
+        return False
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in VALID_BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {VALID_BACKENDS}")
+    if backend == "auto":
+        return "pallas" if _has_tpu() else "jnp"
+    return backend
+
+
+def tile_norms(
+    x: jax.Array, tile: int = 64, *, backend: str = "auto", use_mxu: bool = False
+) -> jax.Array:
+    """normmap of x — paper get-norm kernel (§3.2)."""
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return _ref.tile_norms_ref(x, tile)
+    return _getnorm.tile_norms(
+        x, tile, use_mxu=use_mxu, interpret=(backend == "interpret")
+    )
+
+
+def spamm_compact(mask: jax.Array):
+    """Compacted valid-k lists from a bitmap — paper map_offset (§3.3)."""
+    return _ref.spamm_compact_ref(mask)
+
+
+def spamm_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    tau,
+    *,
+    tile: int = 64,
+    block_n: int = 1,
+    backend: str = "auto",
+    use_mxu_norm: bool = False,
+    out_dtype=None,
+):
+    """End-to-end SpAMM: get-norm → mask/compact → multiplication kernel.
+
+    Shapes (M, K) @ (K, N) with all dims divisible by tile (and N by
+    tile*block_n). Use repro.core.spamm.spamm for auto-padding + extras.
+    Returns (C, info) where info carries the normmaps, nvalid and the
+    executed-tile fraction (== the paper's valid ratio for this product).
+    """
+    backend = resolve_backend(backend)
+    m, k = a.shape
+    _, n = b.shape
+    gm, gk, gn = m // tile, k // tile, n // tile
+    na = tile_norms(a, tile, backend=backend, use_mxu=use_mxu_norm)
+    nb = tile_norms(b, tile, backend=backend, use_mxu=use_mxu_norm)
+    tau = jnp.asarray(tau, jnp.float32)
+
+    if block_n > 1:
+        # group gn into gn//block_n super-columns; a super-column is valid for
+        # k if ANY of its member columns is (superset mask keeps exactness).
+        assert gn % block_n == 0, (gn, block_n)
+        nb_g = nb.reshape(gk, gn // block_n, block_n)
+        mask_fine = na[:, None, :, None] * jnp.swapaxes(nb_g, 0, 1)[None] >= tau
+        mask = jnp.any(mask_fine, axis=-1)  # (gm, gn//block_n, gk)
+    else:
+        mask = _ref.spamm_mask_ref(na, nb, tau)
+
+    nvalid_total = jnp.sum(mask, dtype=jnp.int32)
+    info = {
+        "norm_a": na,
+        "norm_b": nb,
+        "valid_tiles": nvalid_total,
+        "total_tiles": mask.shape[0] * mask.shape[1] * mask.shape[2],
+        "valid_fraction": nvalid_total / (mask.shape[0] * mask.shape[1] * mask.shape[2]),
+    }
+
+    out_dtype = out_dtype or jnp.float32
+    if backend == "jnp":
+        if block_n > 1:
+            mask_full = jnp.repeat(mask, block_n, axis=1)
+        else:
+            mask_full = mask
+        a4 = a.reshape(gm, tile, gk, tile)
+        b4 = b.reshape(gk, tile, gn, tile)
+        out = jnp.einsum(
+            "ijk,ipks,ksjq->ipjq",
+            mask_full.astype(jnp.float32).astype(a.dtype),
+            a4,
+            b4,
+            preferred_element_type=jnp.float32,
+        )
+        c = out.reshape(m, n).astype(out_dtype)
+    else:
+        kidx, nvalid = _ref.spamm_compact_ref(mask)
+        c = _spamm_mm.spamm_mm(
+            a,
+            b,
+            kidx,
+            nvalid,
+            tile=tile,
+            block_n=block_n,
+            out_dtype=out_dtype,
+            interpret=(backend == "interpret"),
+        )
+    return c, info
+
+
+def spamm_effective_flops(m: int, k: int, n: int, valid_fraction) -> jax.Array:
+    """FLOPs actually executed by SpAMM = valid_fraction × dense 2·M·K·N."""
+    return valid_fraction * (2.0 * m * k * n)

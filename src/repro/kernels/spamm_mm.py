@@ -1,0 +1,117 @@
+"""Pallas TPU multiplication kernel (paper §3.3, Alg. 2/3).
+
+C[i,j] = sum over *valid* k of A[i,k] @ B[k,j], where validity is the norm
+test normA[i,k] * normB[k,j] >= tau computed by the get-norm kernel.
+
+TPU-native mapping of the paper's design:
+
+  * paper `map_offset` (Fig. 3b — compacted list of valid k's so the bitmap
+    walk is contiguous)  →  an int32 scalar-prefetch table `kidx[i, j, t]`
+    (t-th valid k for output tile (i,j)) driving the BlockSpec index_maps.
+    Padding slots repeat the last valid k; Pallas' revisiting optimization
+    sees an unchanged block index and skips the HBM→VMEM copy, so an invalid
+    step costs ~nothing — the same effect as the paper's "prefetch only valid
+    blocks" but implemented in the pipeline itself.
+  * paper double buffering (half-block prefetch / half-block compute)  →
+    Pallas' built-in multi-buffered grid pipeline.
+  * paper per-thread register accumulation  →  a persistent f32 VMEM scratch
+    accumulator revisited across the (arbitrary) k grid dimension.
+  * paper tensor-core path (Alg. 3, fp16 fragments / fp32 accumulator)  →
+    bf16 inputs into the MXU via jnp.dot(..., preferred_element_type=f32).
+
+The mask/compaction (paper Alg. 2 lines 3–14) runs as fused XLA ops over the
+normmaps — see `repro.core.spamm` — because on TPU the compaction is a cheap
+O(gm·gn·gk) elementwise+sort pass, not a per-block recomputation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spamm_mm_kernel(kidx_ref, nv_ref, a_ref, b_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # paper Alg. 2 line 19: iterate only over valid products; here invalid
+    # trailing steps are masked out (their block fetches are revisits = free).
+    @pl.when(t < nv_ref[i, j])
+    def _compute():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "out_dtype", "interpret", "block_n"),
+)
+def spamm_mm(
+    a: jax.Array,
+    b: jax.Array,
+    kidx: jax.Array,
+    nvalid: jax.Array,
+    *,
+    tile: int = 64,
+    block_n: int = 1,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked tiled matmul driven by compacted valid-k lists.
+
+    a: (M, K); b: (K, N); kidx: (gm, gn, gk) int32; nvalid: (gm, gn) int32,
+    where gm = M//tile, gk = K//tile, gn = N//tile (see spamm_compact_ref).
+
+    block_n: number of consecutive B/C tiles handled per grid step in the N
+    dimension (wider MXU blocks → better arithmetic intensity; requires the
+    *same* kidx for the grouped j's, i.e. kidx/nvalid built at block_n
+    granularity — callers use `repro.core.spamm.plan`).
+    Returns C: (M, N) in out_dtype (f32 accumulate regardless of input dtype).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    gm, gk = m // tile, k // tile
+    gn = n // (tile * block_n)
+    assert kidx.shape == (gm, gn, gk), (kidx.shape, (gm, gn, gk))
+    assert nvalid.shape == (gm, gn)
+
+    grid = (gm, gn, gk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, t, kidx, nv: (i, kidx[i, j, t])),
+            pl.BlockSpec(
+                (tile, tile * block_n), lambda i, j, t, kidx, nv: (kidx[i, j, t], j)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (tile, tile * block_n), lambda i, j, t, kidx, nv: (i, j)
+        ),
+        scratch_shapes=[pltpu.VMEM((tile, tile * block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spamm_mm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="spamm_mm",
+    )(kidx, nvalid, a, b)

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh, record memory/cost/HLO-derived roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Per cell it writes experiments/dryrun/<mesh>/<arch>__<shape>.json with:
+  memory_analysis (bytes/device), cost_analysis, HLO-walker totals (FLOPs,
+  HBM bytes, collective schedule with trip-count multipliers), and the
+  analytic MODEL_FLOPS (6·N·D / 6·N_active·D or serve equivalents).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ParallelConfig, SHAPES, TrainConfig, cells, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models import model as M
+from repro.models.transformer import NetCtx
+from repro.optim.adamw import AdamW
+
+# v5e-ish hardware model (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link (wire-byte model already per chip)
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop sharding on dims the axis sizes don't divide (e.g. vocab 50280 on
+    a 16-way axis): argument shardings must divide evenly; GSPMD still
+    re-shards internal ops as it sees fit."""
+    out = []
+    for i, entry in enumerate(list(spec) + [None] * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(entry if shape[i] % n == 0 else None)
+    return P(*out)
+
+
+def shard_tree(mesh, spec_tree, shape_tree):
+    """SDS tree with NamedShardings attached."""
+    return jax.tree.map(
+        lambda sd, sp: sds(
+            sd.shape, sd.dtype,
+            NamedSharding(mesh, sanitize_spec(mesh, sp, sd.shape)),
+        ),
+        shape_tree,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+def batch_specs(cfg, shape, mesh, batch_axes):
+    ba = batch_axes if batch_axes else None
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.frontend:
+        inp = {
+            "embeds": sds((gb, s, cfg.d_model), jnp.bfloat16,
+                          NamedSharding(mesh, P(ba, None, None)))
+        }
+    else:
+        inp = {
+            "tokens": sds((gb, s), jnp.int32, NamedSharding(mesh, P(ba, None)))
+        }
+    return inp
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D per generated/prefilled token
+    (N = active params, excluding embed table; attention ignored — this is
+    the standard 6ND yardstick the task prescribes)."""
+    d, l = cfg.d_model, cfg.num_layers
+    if cfg.family == "ssm":
+        import repro.models.ssm as S
+        dims = S.ssm_dims(cfg.ssm, d)
+        per_layer = d * dims.proj_out + dims.d_inner * d
+    elif cfg.family == "hybrid":
+        w = cfg.rglru.lru_width or d
+        hd, hq, hk = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+        attn = d * hd * (hq + 2 * hk) + hq * hd * d
+        rec = 3 * d * w + 2 * (w // 16) * w  # in×2 + out + blockdiag gates
+        mlp = 3 * d * cfg.d_ff
+        n_attn = cfg.num_layers // 3
+        n_rec = cfg.num_layers - n_attn
+        per_layer = 0.0
+        total = n_attn * (attn + mlp) + n_rec * (rec + mlp)
+        n_active = total + cfg.vocab * d  # + unembed
+        toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        mult = 6.0 if shape.kind == "train" else 2.0
+        return mult * n_active * toks
+    else:
+        hd, hq, hk = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+        attn = d * hd * (hq + 2 * hk) + hq * hd * d
+        if cfg.moe is not None:
+            mcfg = cfg.moe
+            ffn = 3 * d * mcfg.expert_ff * mcfg.top_k
+            if mcfg.num_shared:
+                ffn += 3 * d * mcfg.shared_ff
+            ffn += d * mcfg.num_experts  # router
+        else:
+            n_mats = 3 if cfg.act in ("silu", "gelu") else 2
+            ffn = n_mats * d * cfg.d_ff
+        per_layer = attn + ffn
+    n_active = l * per_layer + cfg.vocab * d  # + unembed (embed lookup ~free)
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * toks
+
+
+def build_cell(arch: str, shape_name: str, mesh, pcfg: ParallelConfig,
+               spamm_cfg=None):
+    """Returns (lowered, meta) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ctx = make_ctx(mesh)
+    ndata = 1
+    for a in ctx.batch_axes:
+        ndata *= mesh.shape[a]
+    if shape.global_batch % ndata:
+        ctx = NetCtx(mesh=mesh, batch_axes=None, model_axis="model")
+        ndata = 1
+    model_axis_size = mesh.shape["model"]
+
+    params_shape = jax.eval_shape(
+        lambda k: M.init_params(cfg, pcfg, k, model_axis_size), jax.random.key(0)
+    )
+    pspecs = M.param_pspecs(cfg, pcfg, params_shape)
+    params_sds = shard_tree(mesh, pspecs, params_shape)
+
+    if shape.kind == "train":
+        opt = AdamW(TrainConfig())
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        opt_specs = {"mu": pspecs, "nu": pspecs}
+        opt_sds = shard_tree(mesh, opt_specs, opt_shape)
+        inp = batch_specs(cfg, shape, mesh, ctx.batch_axes)
+        ba = ctx.batch_axes if ctx.batch_axes else None
+        inp["labels"] = sds((shape.global_batch, shape.seq_len), jnp.int32,
+                            NamedSharding(mesh, P(ba, None)))
+        step = M.make_train_step(cfg, pcfg, ctx, opt, spamm_cfg=spamm_cfg)
+        fn = jax.jit(step)
+        with mesh:
+            lowered = fn.lower(params_sds, opt_sds, inp,
+                               sds((), jnp.int32, NamedSharding(mesh, P())))
+    elif shape.kind == "prefill":
+        inp = batch_specs(cfg, shape, mesh, ctx.batch_axes)
+        step = M.make_prefill_step(cfg, pcfg, ctx)
+        fn = jax.jit(step)
+        with mesh:
+            lowered = fn.lower(params_sds, inp)
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: M.init_cache(cfg, pcfg, shape.global_batch, shape.seq_len)
+        )
+        cspecs = M.cache_pspecs(cfg, pcfg, cache_shape,
+                                batch_axes=ctx.batch_axes or ("data",),
+                                model_axis="model",
+                                batch_replicated=ctx.batch_axes is None)
+        cache_sds = shard_tree(mesh, cspecs, cache_shape)
+        ba = ctx.batch_axes if ctx.batch_axes else None
+        if cfg.frontend:
+            tok = sds((shape.global_batch, 1, cfg.d_model), jnp.bfloat16,
+                      NamedSharding(mesh, P(ba, None, None)))
+        else:
+            tok = sds((shape.global_batch, 1), jnp.int32,
+                      NamedSharding(mesh, P(ba, None)))
+        step = M.make_decode_step(cfg, pcfg, ctx)
+        fn = jax.jit(step)
+        with mesh:
+            lowered = fn.lower(params_sds, tok, cache_sds,
+                               sds((), jnp.int32, NamedSharding(mesh, P())))
+    return lowered, {"cfg": cfg, "shape": shape}
+
+
+def run_cell(arch, shape_name, multi_pod, pcfg, out_dir):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lowered, meta = build_cell(arch, shape_name, mesh, pcfg)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    an = hlo_analysis.HloAnalysis(txt, ndev)
+    totals = an.totals()
+
+    mf = model_flops_estimate(meta["cfg"], meta["shape"])
+    flops_dev = totals["flops_per_device"]
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": totals["hbm_bytes_per_device"] / HBM_BW,
+        "collective_s": totals["collective_wire_bytes_per_device"] / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": ndev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "xla_cost_analysis_flops": cost.get("flops"),
+        "hlo": totals,
+        "roofline": {
+            **{k: v for k, v in terms.items()},
+            "dominant": dom,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / ndev,
+            "useful_flops_ratio": (mf / ndev) / flops_dev if flops_dev else None,
+            "step_time_bound_s": max(terms.values()),
+        },
+    }
+    fn = f"{out_dir}/{out['mesh']}/{arch}__{shape_name}.json"
+    os.makedirs(os.path.dirname(fn), exist_ok=True)
+    with open(fn, "w") as f:
+        json.dump(out, f, indent=1)
+    print(
+        f"[OK] {arch} × {shape_name} ({out['mesh']}): compile={t_compile:.0f}s "
+        f"peak={out['memory']['temp_bytes']/2**30:.2f}GiB/dev "
+        f"terms(c/m/coll)={terms['compute_s']:.3e}/{terms['memory_s']:.3e}/"
+        f"{terms['collective_s']:.3e}s dom={dom}",
+        flush=True,
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--loss-chunk", type=int, default=1024)
+    ap.add_argument("--seq-shard-acts", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the output dir")
+    args = ap.parse_args()
+
+    pcfg = ParallelConfig(remat=args.remat, param_dtype=args.param_dtype,
+                          fsdp=not args.no_fsdp,
+                          attn_q_chunk=args.q_chunk,
+                          attn_kv_chunk=args.kv_chunk,
+                          loss_chunk=args.loss_chunk,
+                          seq_shard_acts=args.seq_shard_acts)
+    if args.tag:
+        args.out = args.out.rstrip("/") + "_" + args.tag
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if not skip]
+    else:
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, pcfg, args.out)
+            except Exception as e:
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[FAIL] {arch} × {shape} mp={mp}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+      --steps 200 --batch 8 --seq 256 [--spamm --valid-ratio 0.3] \
+      [--resume auto] [--reduced]
+
+On a pod this is the per-host entrypoint (jax.distributed.initialize is
+called when JAX_COORDINATOR is set); on CPU it runs the same code on a
+1×1 mesh. `--resume auto` restarts from the latest checkpoint — combined
+with the cluster scheduler's restart policy this is the node-failure story
+(see DESIGN.md §9, tests/test_train_loop.py for the injected-failure test).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+
+from repro.configs import ParallelConfig, SpammConfig, TrainConfig, get_config
+from repro.launch.mesh import make_ctx, make_host_mesh, make_production_mesh
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--spamm", action="store_true",
+                    help="enable SpAMM on all eligible GEMMs")
+    ap.add_argument("--tau", type=float, default=0.0)
+    ap.add_argument("--spamm-tile", type=int, default=64)
+    ap.add_argument("--resume", default="no", choices=["no", "auto"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    pcfg = ParallelConfig(
+        compute_dtype="float32" if not args.production_mesh else "bfloat16",
+        remat="none" if args.reduced else "full",
+        attn_q_chunk=64, attn_kv_chunk=64, loss_chunk=128,
+        decode_seq_shard=False,
+        grad_compression=args.grad_compression,
+    )
+    tcfg = TrainConfig(
+        lr=args.lr, total_steps=args.steps, warmup=min(100, args.steps // 10),
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    ctx = make_ctx(mesh)
+    spamm_cfg = (
+        SpammConfig(enable=True, tau=args.tau, tile=args.spamm_tile,
+                    backend="auto")
+        if args.spamm else None
+    )
+    res = train(
+        cfg, pcfg, tcfg, ctx,
+        global_batch=args.batch, seq_len=args.seq, spamm_cfg=spamm_cfg,
+        resume=(args.resume == "auto"),
+    )
+    print(
+        f"done: steps={res.final_step} first_loss={res.losses[0]:.4f} "
+        f"last_loss={res.losses[-1]:.4f} stragglers={res.straggler_steps}"
+    )
+
+
+if __name__ == "__main__":
+    main()

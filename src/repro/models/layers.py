@@ -1,0 +1,117 @@
+"""Shared layer primitives for the model zoo (pure JAX, no flax).
+
+Parameters are plain dict pytrees; every GEMM routes through
+`core.module.maybe_spamm_matmul` so the paper's technique is a config switch
+on any architecture (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.module import maybe_spamm_matmul
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(params: dict, x: jax.Array, act: str, spamm_cfg=None) -> jax.Array:
+    """SwiGLU ('silu'), GeGLU ('gelu'), or classic 4x MLP ('gelu_mlp')."""
+    cdt = x.dtype
+    if act in ("silu", "gelu"):
+        g = maybe_spamm_matmul(x, params["w1"].astype(cdt), spamm_cfg)
+        u = maybe_spamm_matmul(x, params["w3"].astype(cdt), spamm_cfg)
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        return maybe_spamm_matmul(g * u, params["w2"].astype(cdt), spamm_cfg)
+    if act == "gelu_mlp":
+        h = jax.nn.gelu(maybe_spamm_matmul(x, params["w1"].astype(cdt), spamm_cfg))
+        return maybe_spamm_matmul(h, params["w2"].astype(cdt), spamm_cfg)
+    raise ValueError(act)
+
+
+def mlp_params(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_ff = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w1": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w2": jax.random.normal(k2, (d_ff, d_model), dtype) * s_ff,
+    }
+    if act in ("silu", "gelu"):
+        p["w3"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed(params: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return params["embedding"].astype(compute_dtype)[tokens]
+
+
+def chunked_ce_loss(
+    h: jax.Array,            # (B, S, d) final hidden states (already normed)
+    unembed: jax.Array,      # (d, V)
+    labels: jax.Array,       # (B, S) int32, -1 = masked
+    chunk: int,
+) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits: scan over seq
+    chunks; the chunk body is rematerialized in backward."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+
+    @jax.checkpoint
+    def chunk_loss(hc, lc):
+        logits = (hc @ unembed).astype(jnp.float32)  # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        hc, lc = xs
+        l, m = chunk_loss(hc, lc)
+        return (carry[0] + l, carry[1] + m), None
+
+    hs = h[:, : n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    ls = labels[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+    if rem:
+        l, m = chunk_loss(h[:, n * chunk :], labels[:, n * chunk :])
+        tot, cnt = tot + l, cnt + m
+    return tot / jnp.maximum(cnt, 1.0)

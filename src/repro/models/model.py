@@ -1,0 +1,310 @@
+"""Top-level model API: init, sharding specs, train/prefill/decode steps.
+
+* `init_params(cfg, pcfg, key)` — full parameter pytree (use under
+  jax.eval_shape for the dry-run: no allocation).
+* `param_pspecs(cfg, pcfg, params)` — PartitionSpec pytree implementing the
+  DP(+pod)/FSDP/TP/EP rules of DESIGN.md §5.
+* `loss_fn / make_train_step / make_prefill_step / make_decode_step` — the
+  jit-able step functions the launcher lowers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import transformer as tr
+from repro.models.layers import chunked_ce_loss, rms_norm
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import NetCtx
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, pcfg: ParallelConfig, key,
+                model_axis_size: int = 1) -> dict:
+    pdt = _dtype(pcfg.param_dtype)
+    k_emb, k_layers, k_un = jax.random.split(key, 3)
+    params: dict = {
+        "embed": {
+            "embedding": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), pdt)
+            * (1.0 / math.sqrt(cfg.d_model))
+        },
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "unembed": {
+            "kernel": jax.random.normal(k_un, (cfg.d_model, cfg.vocab), pdt)
+            * (1.0 / math.sqrt(cfg.d_model))
+        },
+    }
+    kind = tr.stack_kinds(cfg)
+    if kind == "hybrid":
+        n_groups, gkinds, tail = tr.hybrid_pattern(cfg)
+        gkeys = jax.random.split(k_layers, n_groups + len(tail))
+
+        def one_group(k):
+            ks = jax.random.split(k, len(gkinds))
+            return {
+                f"l{i}": tr.layer_params(ks[i], cfg, pdt, gk, model_axis_size)
+                for i, gk in enumerate(gkinds)
+            }
+
+        params["groups"] = jax.vmap(one_group)(gkeys[:n_groups])
+        params["tail"] = {
+            f"l{i}": tr.layer_params(gkeys[n_groups + i], cfg, pdt, tk,
+                                     model_axis_size)
+            for i, tk in enumerate(tail)
+        }
+    else:
+        lkeys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: tr.layer_params(k, cfg, pdt, kind, model_axis_size)
+        )(lkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(path: str, shape, cfg: ModelConfig, pcfg: ParallelConfig,
+               stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf; `stacked` = has leading L dim."""
+    fsdp = "data" if pcfg.fsdp else None
+    m = "model"
+    rules = []
+    if "embedding" in path:
+        rules = [m, fsdp]
+    elif "unembed" in path:
+        rules = [fsdp, m]
+    elif "moe" in path:
+        ep = cfg.moe is not None and cfg.moe.impl == "ep"
+        if "router" in path or "gate" in path:
+            rules = [None] * len(shape)
+        elif "shared" in path:
+            rules = [fsdp, m] if path.endswith("w1") or path.endswith("w3") else [m, fsdp]
+        elif ep:
+            rules = [m, None, None]           # experts over model, replicated DP
+        elif path.endswith("w2"):
+            rules = [None, m, fsdp]           # (E, ff, d)
+        else:
+            rules = [None, fsdp, m]           # (E, d, ff)
+    elif any(k in path for k in ("wq", "wk", "wv", "in_proj", "in_gelu",
+                                 "in_rec", "w1", "w3")):
+        rules = [fsdp, m]
+    elif any(k in path for k in ("wo", "out_proj", "w2")) or path.endswith("out"):
+        rules = [m, fsdp]
+    elif path.endswith("conv") or "conv" in path.split("/")[-1]:
+        rules = [None, m] if len(shape) >= 2 else [None]
+    else:
+        rules = [None] * len(shape)
+    base = len(shape) - len(rules)
+    if base < 0:  # rank-1 leaf (biases) matched a 2-D rule
+        rules = [None] * len(shape)
+        base = 0
+    return P(*([None] * base + rules))
+
+
+def param_pspecs(cfg: ModelConfig, pcfg: ParallelConfig, params) -> Any:
+    def walk(tree, prefix, stacked):
+        if isinstance(tree, dict):
+            return {
+                k: walk(v, f"{prefix}/{k}",
+                        stacked or k in ("layers", "groups"))
+                for k, v in tree.items()
+            }
+        return _leaf_spec(prefix, tree.shape, cfg, pcfg, stacked)
+
+    return walk(params, "", False)
+
+
+def shardings_for(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward_hidden(cfg, pcfg, ctx: NetCtx, params, batch, *, spamm_cfg=None):
+    """tokens or embeds → final-normed hidden states (B, S, d)."""
+    cdt = _dtype(pcfg.compute_dtype)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cdt)
+    else:
+        x = params["embed"]["embedding"].astype(cdt)[batch["tokens"]]
+    x = ctx.shard(x, ctx.batch_axes, None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, aux = tr.stack_fwd(params, x, cfg, pcfg, ctx, positions,
+                          spamm_cfg=spamm_cfg)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def loss_fn(cfg, pcfg, ctx, params, batch, *, spamm_cfg=None):
+    h, aux = forward_hidden(cfg, pcfg, ctx, params, batch, spamm_cfg=spamm_cfg)
+    unembed = params["unembed"]["kernel"].astype(h.dtype)
+    ce = chunked_ce_loss(h, unembed, batch["labels"], pcfg.loss_chunk)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    return ce + aux_w * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, pcfg: ParallelConfig, batch: int,
+               max_len: int) -> dict:
+    """Zeroed decode caches (use under eval_shape for specs)."""
+    cdt = _dtype(pcfg.compute_dtype)
+    kind = tr.stack_kinds(cfg)
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def attn_cache():
+        s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        return {
+            "k": jnp.zeros((batch, s, hk, hd), cdt),
+            "v": jnp.zeros((batch, s, hk, hd), cdt),
+        }
+
+    def ssm_cache():
+        dims = ssm_mod.ssm_dims(cfg.ssm, cfg.d_model)
+        return {
+            "state": jnp.zeros((batch, dims.heads, cfg.ssm.head_dim,
+                                cfg.ssm.state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, dims.conv_ch), cdt),
+        }
+
+    def rec_cache():
+        w = cfg.rglru.lru_width or cfg.d_model
+        return {
+            "h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru.conv_dim - 1, w), cdt),
+        }
+
+    def stack_cache(mk, n):
+        one = mk()
+        return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n, *t.shape)), one)
+
+    if kind == "ssm":
+        return {"layers": stack_cache(ssm_cache, cfg.num_layers)}
+    if kind == "hybrid":
+        n_groups, gkinds, tail = tr.hybrid_pattern(cfg)
+        group = {
+            f"l{i}": (rec_cache() if k == "rec" else attn_cache())
+            for i, k in enumerate(gkinds)
+        }
+        groups = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (n_groups, *t.shape)), group
+        )
+        tailc = {f"l{i}": rec_cache() for i, _ in enumerate(tail)}
+        return {"groups": groups, "tail": tailc}
+    return {"layers": stack_cache(attn_cache, cfg.num_layers)}
+
+
+def cache_pspecs(cfg: ModelConfig, pcfg: ParallelConfig, cache,
+                 batch_axes=("data",), model_axis="model",
+                 batch_replicated: bool = False) -> Any:
+    """Sequence-sharded attention caches; states sharded over model width."""
+    ba = None if batch_replicated else batch_axes
+
+    def leaf(path, t):
+        if path.endswith("/k") or path.endswith("/v"):
+            # (L, B, S, Hk, hd) or (B, S, Hk, hd)
+            lead = [None] * (t.ndim - 4)
+            return P(*lead, ba, model_axis, None, None)
+        if path.endswith("state"):        # (L, B, H, P, N)
+            lead = [None] * (t.ndim - 4)
+            return P(*lead, ba, model_axis, None, None)
+        if path.endswith("/h"):           # (L, B, W)
+            lead = [None] * (t.ndim - 2)
+            return P(*lead, ba, model_axis)
+        if path.endswith("conv"):         # (L, B, K-1, ch)
+            lead = [None] * (t.ndim - 3)
+            return P(*lead, ba, None, model_axis)
+        return P(*([None] * t.ndim))
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        return leaf(prefix, tree)
+
+    return walk(cache, "")
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
+                    optimizer, *, spamm_cfg=None):
+    """Returns fn(params, opt_state, batch, step) → (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch, step_no):
+        (loss, met), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, pcfg, ctx, p, batch, spamm_cfg=spamm_cfg),
+            has_aux=True,
+        )(params)
+        params, opt_state, gnorm = optimizer.update(params, grads, opt_state,
+                                                    step_no)
+        metrics = {"loss": loss, "grad_norm": gnorm, **met}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
+                      *, spamm_cfg=None):
+    """fn(params, batch) → (cache, last_logits). Logits only for the final
+    position (materializing (B, S, V) at 32k is not a production thing)."""
+
+    def step(params, batch):
+        cdt = _dtype(pcfg.compute_dtype)
+        if "embeds" in batch:
+            x = batch["embeds"].astype(cdt)
+        else:
+            x = params["embed"]["embedding"].astype(cdt)[batch["tokens"]]
+        x = ctx.shard(x, ctx.batch_axes, None, None)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        cache_len = (min(cfg.sliding_window, s) if cfg.sliding_window else s)
+        x, cache = tr.stack_prefill(params, x, cfg, pcfg, ctx, positions,
+                                    cache_len)
+        h_last = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+        logits = (h_last @ params["unembed"]["kernel"].astype(cdt)).astype(jnp.float32)
+        return cache, logits
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx):
+    """fn(params, tokens_or_embeds (B,1[,d]), cache, pos) → (logits, cache)."""
+
+    def step(params, inp, cache, pos):
+        cdt = _dtype(pcfg.compute_dtype)
+        if inp.ndim == 3:
+            x = inp.astype(cdt)
+        else:
+            x = params["embed"]["embedding"].astype(cdt)[inp]
+        x = ctx.shard(x, ctx.batch_axes, None, None)
+        x, cache = tr.stack_decode(params, x, cache, pos, cfg, pcfg, ctx)
+        h = rms_norm(x[:, 0], params["final_norm"], cfg.norm_eps)
+        logits = (h @ params["unembed"]["kernel"].astype(cdt)).astype(jnp.float32)
+        return logits, cache
+
+    return step

@@ -1,0 +1,122 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU + causal conv (2402.19427).
+
+Block: x → (linear → GELU) ⊙ (linear → conv1d(4) → RG-LRU) → linear.
+RG-LRU:  r_t = σ(blockdiag(W_a) x_t + b_a)      (recurrence gate)
+         i_t = σ(blockdiag(W_x) x_t + b_x)      (input gate)
+         a_t = exp(-c · softplus(Λ) · r_t)
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan over time (the recurrence is linear);
+decode is the O(1) per-token update. Gate matrices are block-diagonal
+(num_blocks heads) as in Griffin.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+
+_NUM_BLOCKS = 16
+
+
+def rglru_params(key, cfg: RGLRUConfig, d_model: int, dtype) -> dict:
+    w = cfg.lru_width or d_model
+    nb = _NUM_BLOCKS
+    ks = jax.random.split(key, 7)
+    s_d = 1.0 / math.sqrt(d_model)
+    s_b = 1.0 / math.sqrt(w // nb)
+    # Λ init so that a^c = exp(-c·softplus(Λ)) ∈ [0.9, 0.999] at r=1
+    lo, hi = 0.9, 0.999
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, lo**2, hi**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * cfg.c_exponent)))
+    return {
+        "in_gelu": jax.random.normal(ks[1], (d_model, w), dtype) * s_d,
+        "in_rec": jax.random.normal(ks[2], (d_model, w), dtype) * s_d,
+        "conv": jax.random.normal(ks[3], (cfg.conv_dim, w), dtype) * 0.1,
+        "conv_bias": jnp.zeros((w,), jnp.float32),
+        "wa": jax.random.normal(ks[4], (nb, w // nb, w // nb), jnp.float32) * s_b,
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": jax.random.normal(ks[5], (nb, w // nb, w // nb), jnp.float32) * s_b,
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": jax.random.normal(ks[6], (w, d_model), dtype) / math.sqrt(w),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (..., W); w: (nb, W/nb, W/nb)."""
+    nb, bw, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bw)
+    out = jnp.einsum("...nh,nhk->...nk", xs.astype(jnp.float32), w)
+    return out.reshape(*x.shape) + b
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(_block_diag(x, params["wa"], params["ba"]))
+    i = jax.nn.sigmoid(_block_diag(x, params["wx"], params["bx"]))
+    return r, i
+
+
+def _log_a(params, r, c):
+    return -c * jax.nn.softplus(params["lam"]) * r  # (..., W) ≤ 0
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :].astype(out.dtype)
+
+
+def rglru_scan(params, x, cfg: RGLRUConfig, init_h=None):
+    """x: (B, S, W) post-conv inputs. Returns (y, final_h)."""
+    r, i = _gates(params, x)
+    log_a = _log_a(params, r, cfg.c_exponent)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    if init_h is not None:
+        # fold the carried state in as a virtual step 0 input
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * init_h)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_block(params, x, cfg: RGLRUConfig):
+    """Full recurrent block (train/prefill). x: (B, S, d) → (y, cache)."""
+    cdt = x.dtype
+    gate = jax.nn.gelu(x @ params["in_gelu"].astype(cdt))
+    rec = x @ params["in_rec"].astype(cdt)
+    conv_cache = rec[:, -(cfg.conv_dim - 1):, :]
+    rec = _causal_conv(rec, params["conv"].astype(cdt), params["conv_bias"])
+    y, h = rglru_scan(params, rec, cfg)
+    out = (gate * y) @ params["out"].astype(cdt)
+    return out, {"h": h, "conv": conv_cache}
+
+
+def rglru_decode_step(params, x, cache, cfg: RGLRUConfig):
+    """x: (B, d); cache {"h": (B,W), "conv": (B, K-1, W)}."""
+    cdt = x.dtype
+    gate = jax.nn.gelu(x @ params["in_gelu"].astype(cdt))
+    rec = x @ params["in_rec"].astype(cdt)
+    hist = jnp.concatenate([cache["conv"], rec[:, None, :]], axis=1)  # (B,K,W)
+    w = params["conv"].astype(cdt)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_bias"].astype(cdt)
+    r, i = _gates(params, conv_out)
+    log_a = _log_a(params, r, cfg.c_exponent)
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * conv_out.astype(jnp.float32)
+    )
+    out = (gate * h.astype(cdt)) @ params["out"].astype(cdt)
+    return out, {"h": h, "conv": hist[:, 1:, :]}

@@ -1,0 +1,218 @@
+"""Mamba2 — SSD (state-space duality) sequence mixing, chunked (arXiv 2405.21060).
+
+Training/prefill run the chunked SSD algorithm as a lax.scan over sequence
+chunks (intra-chunk quadratic term + carried inter-chunk state) — O(S·Q)
+compute, O(Q²) transient memory per chunk, sub-quadratic end to end.
+Decode is the O(1)-per-token recurrent update on the carried (h, p, n) state.
+
+Sharding: d_inner (heads) shards over `model`; the scan is over time. The
+conv + gates are elementwise in channels so GSPMD propagates cleanly.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import rms_norm
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    heads: int
+    conv_ch: int     # channels through the causal conv (d_inner + 2*g*state)
+    proj_out: int    # in_proj output width
+
+
+def ssm_dims(cfg: SSMConfig, d_model: int) -> SSMDims:
+    d_inner = cfg.expand * d_model
+    heads = d_inner // cfg.head_dim
+    conv_ch = d_inner + 2 * cfg.n_groups * cfg.state
+    proj_out = d_inner + conv_ch + heads  # z, (x,B,C) through conv, dt
+    return SSMDims(d_inner, heads, conv_ch, proj_out)
+
+
+def ssm_params(key, cfg: SSMConfig, d_model: int, dtype) -> dict:
+    dims = ssm_dims(cfg, d_model)
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (dims.heads,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    return {
+        "in_proj": jax.random.normal(ks[1], (d_model, dims.proj_out), dtype)
+        / math.sqrt(d_model),
+        "conv": jax.random.normal(ks[2], (cfg.conv_dim, dims.conv_ch), dtype) * 0.1,
+        "conv_bias": jnp.zeros((dims.conv_ch,), jnp.float32),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (dims.heads,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((dims.heads,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "norm": jnp.zeros((dims.d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (dims.d_inner, d_model), dtype)
+        / math.sqrt(dims.d_inner),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :].astype(out.dtype)
+
+
+def _split_proj(cfg: SSMConfig, dims: SSMDims, proj: jax.Array):
+    z, xbc, dt = jnp.split(
+        proj, [dims.d_inner, dims.d_inner + dims.conv_ch], axis=-1
+    )
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: SSMConfig, dims: SSMDims, xbc: jax.Array):
+    gn = cfg.n_groups * cfg.state
+    x, bb, cc = jnp.split(xbc, [dims.d_inner, dims.d_inner + gn], axis=-1)
+    return x, bb, cc
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) inputs (already conv'd + silu'd)
+    dt: jax.Array,     # (B, S, H) softplus'd step sizes
+    a: jax.Array,      # (H,) negative decay rates (-exp(A_log))
+    bmat: jax.Array,   # (B, S, N) input projections (n_groups=1 squeezed)
+    cmat: jax.Array,   # (B, S, N) output projections
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+):
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xd = (x * dt[..., None]).astype(jnp.float32)          # discretized input
+    da = dt * a[None, None, :]                            # (B, S, H) ≤ 0
+
+    def to_chunks(t):
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)  # (nc, B, q, ...)
+
+    xs = (to_chunks(xd), to_chunks(da), to_chunks(bmat.astype(jnp.float32)),
+          to_chunks(cmat.astype(jnp.float32)))
+
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(state, xs_c):
+        xc, dac, bc, cc = xs_c                    # (B,q,H,P) (B,q,H) (B,q,N) (B,q,N)
+        acs = jnp.cumsum(dac, axis=1)             # (B,q,H) cumulative decay
+        asum = acs[:, -1]                         # (B,H)
+        # intra-chunk: L[b,h,i,j] = exp(acs_i - acs_j) for j<=i else 0
+        seg = acs[:, :, None, :] - acs[:, None, :, :]          # (B,q,q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)            # (B,q,q)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", scores, l_mat, xc)
+        # inter-chunk: contribution of carried state
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", cc, state, jnp.exp(acs))
+        # state update
+        decay_out = jnp.exp(asum[:, None, :] - acs)            # (B,q,H)
+        new_state = state * jnp.exp(asum)[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhpn", bc, decay_out, xc
+        )
+        return new_state, y_diag + y_off
+
+    final, ys = jax.lax.scan(body, s0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssm_block(
+    params: dict,
+    x: jax.Array,       # (B, S, d)
+    cfg: SSMConfig,
+    *,
+    norm_eps: float = 1e-5,
+):
+    """Full Mamba2 block (train/prefill). Returns (y, final_cache)."""
+    bsz, s, d = x.shape
+    dims = ssm_dims(cfg, d)
+    cdt = x.dtype
+    proj = x @ params["in_proj"].astype(cdt)
+    z, xbc, dt = _split_proj(cfg, dims, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv"].astype(cdt),
+                                   params["conv_bias"]))
+    xin, bmat, cmat = _split_xbc(cfg, dims, xbc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    xh = xin.reshape(bsz, s, dims.heads, cfg.head_dim)
+    # chunked main run + remainder (arbitrary sequence lengths)
+    q = min(cfg.chunk, s)
+    s_main = (s // q) * q
+    y, state = ssd_chunked(
+        xh[:, :s_main], dt[:, :s_main], a, bmat[:, :s_main], cmat[:, :s_main], q
+    )
+    if s_main < s:
+        y2, state = ssd_chunked(
+            xh[:, s_main:], dt[:, s_main:], a, bmat[:, s_main:], cmat[:, s_main:],
+            s - s_main, init_state=state,
+        )
+        y = jnp.concatenate([y, y2], axis=1)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, dims.d_inner).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], norm_eps)
+    out = y @ params["out_proj"].astype(cdt)
+    conv_cache = xbc_tail(x, params, cfg, dims)  # last (K-1) pre-conv inputs
+    return out, {"state": state, "conv": conv_cache}
+
+
+def xbc_tail(x, params, cfg: SSMConfig, dims: SSMDims):
+    """Pre-conv xbc values for the last (conv_dim-1) positions → decode cache."""
+    cdt = x.dtype
+    tail = x[:, -(cfg.conv_dim - 1):, :]
+    proj = tail @ params["in_proj"].astype(cdt)
+    _, xbc, _ = _split_proj(cfg, dims, proj)
+    return xbc
+
+
+def ssm_decode_step(
+    params: dict,
+    x: jax.Array,       # (B, d) one token
+    cache: dict,        # {"state": (B,H,P,N), "conv": (B, K-1, conv_ch)}
+    cfg: SSMConfig,
+    *,
+    norm_eps: float = 1e-5,
+):
+    bsz, d = x.shape
+    dims = ssm_dims(cfg, d)
+    cdt = x.dtype
+    proj = x @ params["in_proj"].astype(cdt)
+    z, xbc, dt = _split_proj(cfg, dims, proj)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,ch)
+    w = params["conv"].astype(cdt)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_bias"].astype(cdt)
+    xbc_t = jax.nn.silu(conv_out)
+    xin, bmat, cmat = _split_xbc(cfg, dims, xbc_t)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    xh = xin.reshape(bsz, dims.heads, cfg.head_dim).astype(jnp.float32)
+    state = cache["state"]
+    decay = jnp.exp(dt * a[None, :])                                   # (B,H)
+    xd = xh * dt[..., None]
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bmat.astype(jnp.float32), xd
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, dims.d_inner).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], norm_eps)
+    out = y @ params["out_proj"].astype(cdt)
+    return out, {"state": state, "conv": hist[:, 1:, :]}

@@ -1,0 +1,448 @@
+"""Decoder stack assembly: layer bodies, scan-over-layers, caches.
+
+One generic stack covers all 10 archs:
+  dense / vlm / audio : attention + MLP
+  moe                 : attention + MoE block (shard_map inside the layer)
+  ssm                 : Mamba2 block only
+  hybrid              : 12 × (rec, rec, local-attn) groups + 2 rec tail,
+                        each sub-layer followed by an MLP (Griffin residual
+                        pattern: temporal-mix block and MLP block alternate)
+
+Scan-over-layers keeps the HLO small (mandatory for the 512-chip dry-run);
+per-layer FSDP all-gathers overlap with compute via the XLA scheduler.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.module import maybe_spamm_matmul
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_rope, embed, mlp, mlp_params, rms_norm
+
+
+class NetCtx(NamedTuple):
+    mesh: Mesh
+    batch_axes: tuple = ("data",)
+    model_axis: str = "model"
+
+    def shard(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec))
+        )
+
+
+# ---------------------------------------------------------------------------
+# attention layer
+# ---------------------------------------------------------------------------
+
+def attn_params(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hk * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hk * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), dtype) / math.sqrt(hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hk * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hk * hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, ctx: NetCtx, positions, spamm_cfg=None):
+    b, s, d = x.shape
+    hq, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    cdt = x.dtype
+    q = maybe_spamm_matmul(x, p["wq"].astype(cdt), spamm_cfg)
+    k = maybe_spamm_matmul(x, p["wk"].astype(cdt), spamm_cfg)
+    v = maybe_spamm_matmul(x, p["wv"].astype(cdt), spamm_cfg)
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hk, hd)
+    v = v.reshape(b, s, hk, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.shard(q, ctx.batch_axes, None, ctx.model_axis, None)
+    return q, k, v
+
+
+def attention_layer(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    positions: jax.Array,
+    *,
+    window: Optional[int] = None,
+    spamm_cfg=None,
+    return_kv: bool = False,
+):
+    q, k, v = _qkv(p, x, cfg, ctx, positions, spamm_cfg)
+    o = attn_mod.flash_attention(
+        q, k, v,
+        causal=True,
+        window=window,
+        q_chunk=pcfg.attn_q_chunk,
+        kv_chunk=pcfg.attn_kv_chunk,
+    )
+    o = o.reshape(*x.shape[:2], -1)
+    out = maybe_spamm_matmul(o, p["wo"].astype(x.dtype), spamm_cfg)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,            # (B, 1, d)
+    cache_k: jax.Array,      # (B, S, Hk, hd) — full or ring buffer
+    cache_v: jax.Array,
+    pos: jax.Array,          # scalar int32: index of the incoming token
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    *,
+    window: Optional[int] = None,
+    ring: bool = False,
+):
+    b = x.shape[0]
+    hq, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, ctx, jnp.full((b, 1), pos, jnp.int32), None)
+    q1 = q[:, 0]  # (B, Hq, hd)
+    if pcfg.decode_seq_shard and ctx.mesh is not None and ctx.mesh.shape[ctx.model_axis] > 1:
+        o, cache_k, cache_v = attn_mod.decode_attention_seqsharded(
+            q1, k, v, cache_k, cache_v, pos + 1,
+            mesh=ctx.mesh, batch_axes=ctx.batch_axes, axis=ctx.model_axis,
+            window=window, ring=ring,
+        )
+    else:
+        slot = (pos % cache_k.shape[1]) if ring else pos
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+        o = attn_mod.decode_attention(
+            q1, cache_k, cache_v, pos + 1, window=window, ring=ring,
+        )
+    out = o.reshape(b, 1, hq * hd) @ p["wo"].astype(x.dtype)
+    return out, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def layer_params(key, cfg: ModelConfig, dtype, kind: str, model_axis_size: int):
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {
+            "ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ssm": ssm_mod.ssm_params(ks[0], cfg.ssm, cfg.d_model, dtype),
+        }
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if kind == "rec":
+        p["mix"] = rglru_mod.rglru_params(ks[0], cfg.rglru, cfg.d_model, dtype)
+    else:
+        p["mix"] = attn_params(ks[0], cfg, dtype)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_params(ks[1], cfg.moe, cfg.d_model, dtype,
+                                      model_axis_size)
+    else:
+        p["mlp"] = mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _ffn(p, h, cfg: ModelConfig, ctx: NetCtx, spamm_cfg):
+    """MLP or MoE sub-layer on normalized input h. Returns (out, aux)."""
+    if cfg.moe is not None:
+        return moe_mod.moe_block(
+            p["moe"], h, cfg.moe, cfg.act,
+            mesh=ctx.mesh, batch_axes=ctx.batch_axes,
+            model_axis=ctx.model_axis, spamm_cfg=spamm_cfg,
+        )
+    return mlp(p["mlp"], h, cfg.act, spamm_cfg), jnp.float32(0.0)
+
+
+def layer_fwd(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    positions: jax.Array,
+    kind: str,                  # "attn" | "rec" | "ssm"
+    *,
+    spamm_cfg=None,
+    collect_cache: bool = False,
+):
+    """One residual layer. Returns (x, aux, cache)."""
+    if pcfg.seq_shard_acts and x.shape[1] > 1:
+        # Megatron-SP: residual stream seq-sharded over the model axis; GSPMD
+        # turns the TP psum into reduce-scatter + all-gather (half the wire
+        # bytes) and shards norms/elementwise over seq.
+        x = ctx.shard(x, ctx.batch_axes, ctx.model_axis, None)
+    else:
+        x = ctx.shard(x, ctx.batch_axes, None, None)
+    if kind == "ssm":
+        h, cache = ssm_mod.ssm_block(p["ssm"], rms_norm(x, p["ln"], cfg.norm_eps),
+                                     cfg.ssm, norm_eps=cfg.norm_eps)
+        return x + h, jnp.float32(0.0), (cache if collect_cache else None)
+
+    window = cfg.sliding_window if kind == "attn" else None
+    if kind == "attn":
+        if collect_cache:
+            h, (k, v) = attention_layer(
+                p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, pcfg, ctx,
+                positions, window=window, spamm_cfg=spamm_cfg, return_kv=True,
+            )
+            cache = {"k": k, "v": v}
+        else:
+            h = attention_layer(
+                p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, pcfg, ctx,
+                positions, window=window, spamm_cfg=spamm_cfg,
+            )
+            cache = None
+    else:  # rec
+        h, cache = rglru_mod.rglru_block(
+            p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg.rglru
+        )
+        cache = cache if collect_cache else None
+    x = x + h
+    f, aux = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, spamm_cfg)
+    return x + f, aux, cache
+
+
+def layer_decode(
+    p: dict,
+    x: jax.Array,               # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    kind: str,
+):
+    if kind == "ssm":
+        h, new = ssm_mod.ssm_decode_step(
+            p["ssm"], rms_norm(x[:, 0], p["ln"], cfg.norm_eps), cache, cfg.ssm,
+            norm_eps=cfg.norm_eps,
+        )
+        return x + h[:, None], new
+
+    if kind == "attn":
+        # ring buffer iff the cache is exactly the sliding window (static)
+        ring = (
+            cfg.sliding_window is not None
+            and cache["k"].shape[1] <= cfg.sliding_window
+        )
+        h, (ck, cv) = attention_decode(
+            p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps),
+            cache["k"], cache["v"], pos, cfg, pcfg, ctx,
+            window=cfg.sliding_window, ring=ring,
+        )
+        new = dict(cache, k=ck, v=cv)
+    else:
+        h1, new = rglru_mod.rglru_decode_step(
+            p["mix"], rms_norm(x[:, 0], p["ln1"], cfg.norm_eps), cache, cfg.rglru
+        )
+        h = h1[:, None]
+    x = x + h
+    f, _ = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, None)
+    return x + f, new
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def hybrid_pattern(cfg: ModelConfig):
+    """(n_groups, group_kinds, tail_kinds) for the hybrid arch."""
+    pat = cfg.rglru.block_pattern  # ("rec", "rec", "attn")
+    kinds = {"rec": "rec", "attn": "attn"}
+    glen = len(pat)
+    n_groups = cfg.num_layers // glen
+    tail = cfg.num_layers - n_groups * glen
+    return n_groups, tuple(kinds[k] for k in pat), ("rec",) * tail
+
+
+def stack_kinds(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    return "attn"
+
+
+def _remat(fn, pcfg: ParallelConfig):
+    if pcfg.remat == "none":
+        return fn
+    if pcfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def stack_fwd(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    positions: jax.Array,
+    *,
+    spamm_cfg=None,
+):
+    """Run all layers (train/loss path, no caches). Returns (x, aux)."""
+    kind = stack_kinds(cfg)
+
+    if kind == "hybrid":
+        n_groups, gkinds, tail = hybrid_pattern(cfg)
+
+        def gbody(carry, p):
+            h, aux = carry
+            for i, k in enumerate(gkinds):
+                h, a, _ = layer_fwd(p[f"l{i}"], h, cfg, pcfg, ctx, positions, k,
+                                    spamm_cfg=spamm_cfg)
+                aux = aux + a
+            return (h, aux), None
+
+        (x, aux), _ = jax.lax.scan(
+            _remat(gbody, pcfg), (x, jnp.float32(0.0)), params["groups"]
+        )
+        for i, k in enumerate(tail):
+            x, a, _ = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
+                                positions, k, spamm_cfg=spamm_cfg)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, p):
+        h, aux = carry
+        h, a, _ = layer_fwd(p, h, cfg, pcfg, ctx, positions, kind,
+                            spamm_cfg=spamm_cfg)
+        return (h, aux + a), None
+
+    if pcfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(
+            _remat(body, pcfg), (x, jnp.float32(0.0)), params["layers"]
+        )
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda t: t[i], params["layers"])
+            (x, aux), _ = _remat(body, pcfg)((x, aux), p)
+    return x, aux
+
+
+def stack_prefill(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    positions: jax.Array,
+    cache_len: int,
+):
+    """Forward + collect caches. Returns (x, cache_pytree)."""
+    kind = stack_kinds(cfg)
+    s = x.shape[1]
+
+    def trim(c):
+        """Ring-ify sliding-window KV caches: token t lives at slot t % W."""
+        if c is None:
+            return None
+        if "k" in c and c["k"].shape[1] > cache_len:
+            w = cache_len
+            tail_k, tail_v = c["k"][:, -w:], c["v"][:, -w:]
+            shift = s % w  # tail index i holds token (s - w + i) → slot (s+i)%w
+            if shift:
+                tail_k = jnp.roll(tail_k, shift, axis=1)
+                tail_v = jnp.roll(tail_v, shift, axis=1)
+            c = dict(c, k=tail_k, v=tail_v)
+        return c
+
+    if kind == "hybrid":
+        n_groups, gkinds, tail = hybrid_pattern(cfg)
+
+        def gbody(h, p):
+            caches = {}
+            for i, k in enumerate(gkinds):
+                h, _, c = layer_fwd(p[f"l{i}"], h, cfg, pcfg, ctx, positions, k,
+                                    collect_cache=True)
+                caches[f"l{i}"] = trim(c)
+            return h, caches
+
+        x, gcaches = jax.lax.scan(gbody, x, params["groups"])
+        tcaches = {}
+        for i, k in enumerate(tail):
+            x, _, c = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
+                                positions, k, collect_cache=True)
+            tcaches[f"l{i}"] = trim(c)
+        return x, {"groups": gcaches, "tail": tcaches}
+
+    def body(h, p):
+        h, _, c = layer_fwd(p, h, cfg, pcfg, ctx, positions, kind,
+                            collect_cache=True)
+        return h, trim(c)
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    return x, {"layers": caches}
+
+
+def stack_decode(
+    params: dict,
+    x: jax.Array,          # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+):
+    kind = stack_kinds(cfg)
+
+    if kind == "hybrid":
+        n_groups, gkinds, tail = hybrid_pattern(cfg)
+
+        def gbody(h, pc):
+            p, c = pc
+            newc = {}
+            for i, k in enumerate(gkinds):
+                h, nc = layer_decode(p[f"l{i}"], h, c[f"l{i}"], pos, cfg, pcfg,
+                                     ctx, k)
+                newc[f"l{i}"] = nc
+            return h, newc
+
+        x, gcaches = jax.lax.scan(gbody, x, (params["groups"], cache["groups"]))
+        tcaches = {}
+        for i, k in enumerate(tail):
+            x, nc = layer_decode(params["tail"][f"l{i}"], x, cache["tail"][f"l{i}"],
+                                 pos, cfg, pcfg, ctx, k)
+            tcaches[f"l{i}"] = nc
+        return x, {"groups": gcaches, "tail": tcaches}
+
+    def body(h, pc):
+        p, c = pc
+        h, nc = layer_decode(p, h, c, pos, cfg, pcfg, ctx, kind)
+        return h, nc
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    return x, {"layers": caches}

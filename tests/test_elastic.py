@@ -1,0 +1,45 @@
+"""Elastic re-mesh: save on one mesh, reshard+resume on a smaller surviving
+device set (DESIGN.md §9) — 8 fake devices, subprocess."""
+from conftest import run_subprocess
+
+CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import ParallelConfig, get_config
+from repro.distributed import elastic
+from repro.models import model as M
+
+pcfg = ParallelConfig(compute_dtype="float32", param_dtype="float32",
+                      remat="none", decode_seq_shard=False)
+cfg = get_config("starcoder2-7b").reduced()
+
+# full mesh: 4 data x 2 model
+mesh8 = elastic.build_elastic_mesh(jax.devices(), model_parallel=2)
+assert dict(mesh8.shape) == {"data": 4, "model": 2}
+params = M.init_params(cfg, pcfg, jax.random.key(0))
+state = {"params": params}
+sharded = elastic.reshard_state(state, cfg, pcfg, mesh8)
+
+# two "nodes" die -> 6 devices survive -> best grid is 3x2
+mesh6 = elastic.build_elastic_mesh(jax.devices()[:6], model_parallel=2)
+assert dict(mesh6.shape) == {"data": 3, "model": 2}
+resharded = elastic.reshard_state(sharded, cfg, pcfg, mesh6)
+
+for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(resharded["params"])):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# and the model still steps on the shrunken mesh
+from repro.launch.mesh import make_ctx
+ctx = make_ctx(mesh6)
+inp = {"tokens": jnp.zeros((6, 32), jnp.int32) + 3,
+       "labels": jnp.ones((6, 32), jnp.int32)}
+with mesh6:
+    loss, _ = jax.jit(lambda p, b: M.loss_fn(cfg, pcfg, ctx, p, b))(
+        resharded["params"], inp)
+assert bool(jnp.isfinite(loss))
+print("OK", float(loss))
+"""
+
+
+def test_elastic_reshard_8_to_6():
+    out = run_subprocess(CODE, devices=8)
+    assert "OK" in out

@@ -1,0 +1,48 @@
+"""Error-behavior validation against the paper's §5.1 citation (Artemov
+2019): for exponential-decay matrices, ‖E‖_F = O(√N · τ^{p/2}) with p < 2 —
+i.e. log‖E‖ grows sub-linearly in log τ with slope ≤ ~1, and the relative
+error stays tiny for small τ (paper Table 4 behavior)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spamm as cs
+
+
+def _run(n, tau, lam=0.8, tile=32):
+    a = cs.exponential_decay(n, lam=lam, seed=0)
+    b = cs.exponential_decay(n, lam=lam, seed=1)
+    dense = a.astype(np.float64) @ b.astype(np.float64)
+    c, info = cs.spamm(jnp.asarray(a), jnp.asarray(b), tau, tile=tile,
+                       backend="jnp")
+    err = np.linalg.norm(np.asarray(c, np.float64) - dense)
+    return err, np.linalg.norm(dense), float(info.valid_fraction)
+
+
+def test_error_slope_in_tau():
+    taus = [1e-4, 1e-3, 1e-2, 1e-1]
+    errs = []
+    for t in taus:
+        err, normc, frac = _run(512, t)
+        errs.append(max(err, 1e-14))
+    logs = np.log10(errs)
+    # O(τ^{p/2}), p<2 ⇒ AVERAGE slope ≤ ~1 per decade of τ (individual
+    # decades staircase with the discrete tile structure)
+    avg_slope = (logs[-1] - logs[0]) / (len(logs) - 1)
+    assert avg_slope <= 1.2, (avg_slope, logs)
+    # error must actually grow over 3 decades and never shrink
+    assert logs[-1] > logs[0]
+    assert np.all(np.diff(logs) >= -1e-9)
+
+
+def test_relative_error_small_at_small_tau():
+    """Table 4 behavior: ‖E‖/‖C‖ ≪ 1 at τ=1e-4 while work drops."""
+    err, normc, frac = _run(1024, 1e-4, lam=0.7)
+    assert err / normc < 1e-4
+    assert frac < 0.6  # meaningful skipping
+
+
+def test_error_norm_scaling_with_n():
+    """√N scaling: quadrupling N should grow error by ≲ 4× at fixed τ."""
+    e1, _, _ = _run(256, 1e-2)
+    e2, _, _ = _run(1024, 1e-2)
+    assert e2 < 8 * max(e1, 1e-12)

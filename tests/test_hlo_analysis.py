@@ -1,0 +1,43 @@
+"""The roofline HLO walker: trip-count multiplication, dot FLOPs, collective
+accounting (the dry-run's measurement instrument must itself be tested)."""
+from conftest import run_subprocess
+
+CODE = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from repro.launch.hlo_analysis import HloAnalysis
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+
+def scanned(x, ws):
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+    y, _ = jax.lax.scan(body, x, ws)
+    return jnp.sum(y)
+
+x = jax.ShapeDtypeStruct((256, 512), jnp.bfloat16)
+ws = jax.ShapeDtypeStruct((7, 512, 512), jnp.bfloat16)
+with mesh:
+    comp = jax.jit(
+        scanned,
+        in_shardings=(NamedSharding(mesh, P("data", None)),
+                      NamedSharding(mesh, P(None, "data", "model"))),
+    ).lower(x, ws).compile()
+an = HloAnalysis(comp.as_text(), 8)
+t = an.totals()
+
+# per-device: 7 iterations x dot of (64,512)@(512,256)
+expected = 7 * 2 * 64 * 512 * 256
+assert abs(t["flops_per_device"] - expected) / expected < 1e-6, t["flops_per_device"]
+# two all-gathers per iteration (w over data, x over model)
+assert t["collectives"]["all-gather"]["count"] == 14, t["collectives"]
+# loss reduction all-reduce present
+assert "all-reduce" in t["collectives"]
+assert not t["warnings"], t["warnings"]
+print("OK")
+"""
+
+
+def test_hlo_walker_on_sharded_scan():
+    out = run_subprocess(CODE, devices=8)
+    assert "OK" in out

@@ -1,0 +1,36 @@
+"""Unit tests for the HLO analyzer's parsing primitives (shape bytes, dot
+FLOPs, wire-byte model, group-size parsing) — the §Roofline instrument."""
+import pytest
+
+from repro.launch.hlo_analysis import (_group_size, _wire_bytes, shape_bytes,
+                                       shape_dims)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[256,512]{1,0}") == 256 * 512 * 4
+    assert shape_bytes("bf16[2,3,4]{2,1,0}") == 24 * 2
+    assert shape_bytes("pred[]") == 1
+    assert shape_bytes("(s32[], bf16[64,256]{1,0})") == 4 + 64 * 256 * 2
+    assert shape_bytes("token[]") == 0
+
+
+def test_shape_dims():
+    dims, dt = shape_dims("f32[7,128,256]{2,1,0}")
+    assert dims == [7, 128, 256] and dt == "f32"
+    assert shape_dims("s32[]")[0] == []
+
+
+def test_group_size_iota_and_list():
+    assert _group_size("replica_groups=[4,2]<=[8]", 99) == 2
+    assert _group_size("replica_groups=[2,4]<=[4,2]T(1,0)", 99) == 4
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 99) == 4
+    assert _group_size("no groups here", 7) == 7
+
+
+def test_wire_bytes_ring_model():
+    g = 4
+    assert _wire_bytes("all-gather", 100, 400, g) == 400 * 3 / 4
+    assert _wire_bytes("all-reduce", 400, 400, g) == 2 * 400 * 3 / 4
+    assert _wire_bytes("reduce-scatter", 400, 100, g) == 400 * 3 / 4
+    assert _wire_bytes("collective-permute", 256, 256, g) == 256
+    assert _wire_bytes("all-reduce", 400, 400, 1) == 0.0

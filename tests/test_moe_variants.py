@@ -1,0 +1,57 @@
+"""MoE strategy equivalence: TP (ff-sharded) and EP (expert-sharded) must
+compute the SAME function — they differ only in collective schedule.
+Subprocess with 8 fake devices (mesh 2×4: data=2, model=4)."""
+from conftest import run_subprocess
+
+CODE = r"""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_mod
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+d, e, ff, topk = 32, 8, 16, 2
+base = MoEConfig(num_experts=e, top_k=topk, expert_ff=ff, impl="tp",
+                 capacity_factor=8.0)  # no drops → exact equivalence
+
+key = jax.random.key(0)
+p_tp = moe_mod.moe_params(key, base, d, jnp.float32, model_axis_size=4)
+cfg_ep = dataclasses.replace(base, impl="ep")
+p_ep = moe_mod.moe_params(key, cfg_ep, d, jnp.float32, model_axis_size=4)
+# same expert weights (EP pads expert dim to a multiple of model axis = 8 ✓)
+for k in ("router", "w1", "w3", "w2"):
+    np.testing.assert_array_equal(np.asarray(p_tp[k]), np.asarray(p_ep[k]))
+
+x = 0.5 * jax.random.normal(jax.random.key(1), (4, 16, d), jnp.float32)
+with mesh:
+    y_tp, aux_tp = jax.jit(lambda p, x: moe_mod.moe_block(
+        p, x, base, "silu", mesh=mesh, batch_axes=("data",)))(p_tp, x)
+    y_ep, aux_ep = jax.jit(lambda p, x: moe_mod.moe_block(
+        p, x, cfg_ep, "silu", mesh=mesh, batch_axes=("data",)))(p_ep, x)
+np.testing.assert_allclose(np.asarray(y_tp), np.asarray(y_ep), atol=2e-5)
+np.testing.assert_allclose(float(aux_tp), float(aux_ep), atol=1e-5)
+
+# and both match a plain dense per-token expert evaluation
+def dense_moe(p, x):
+    t = x.reshape(-1, d)
+    logits = t @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, topk)
+    gates = gates / gates.sum(-1, keepdims=True)
+    out = jnp.zeros_like(t)
+    for slot in range(topk):
+        w1 = p["w1"][idx[:, slot]]; w3 = p["w3"][idx[:, slot]]; w2 = p["w2"][idx[:, slot]]
+        h = jax.nn.silu(jnp.einsum("td,tdf->tf", t, w1)) * jnp.einsum("td,tdf->tf", t, w3)
+        out += gates[:, slot:slot+1] * jnp.einsum("tf,tfd->td", h, w2)
+    return out.reshape(x.shape)
+
+ref = dense_moe(p_tp, x)
+np.testing.assert_allclose(np.asarray(y_tp), np.asarray(ref), atol=2e-5)
+print("OK")
+"""
+
+
+def test_tp_ep_equivalence():
+    out = run_subprocess(CODE, devices=8)
+    assert "OK" in out

@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) for the system's SpAMM invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spamm as cs
+from repro.kernels import ops, ref
+
+
+def _mat(n, m, seed, decay=0.5):
+    rng = np.random.default_rng(seed)
+    d = np.abs(np.arange(n)[:, None] - np.arange(m)[None, :])
+    return ((0.3 / (d ** decay + 1)) * rng.standard_normal((n, m))).astype(
+        np.float32
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 192]),
+    tile=st.sampled_from([32, 64]),
+    seed=st.integers(0, 10_000),
+)
+def test_tau_zero_is_exact(n, tile, seed):
+    """paper §3.1: τ=0 ⇒ SpAMM ≡ GEMM (every norm product ≥ 0)."""
+    a, b = _mat(n, n, seed), _mat(n, n, seed + 1)
+    c, info = cs.spamm(jnp.asarray(a), jnp.asarray(b), 0.0, tile=tile,
+                       backend="jnp")
+    np.testing.assert_allclose(np.asarray(c), a @ b, rtol=1e-4, atol=1e-5)
+    assert float(info.valid_fraction) == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_error_and_work_monotone_in_tau(seed):
+    """Larger τ ⇒ (weakly) fewer executed tiles and (weakly) larger error —
+    the tradeoff curve behind paper Tables 2/4."""
+    n, tile = 192, 32
+    a, b = _mat(n, n, seed, 0.9), _mat(n, n, seed + 1, 0.9)
+    dense = a @ b
+    prev_frac, prev_err = 1.1, -1.0
+    for tau in [0.0, 0.05, 0.2, 0.8, 3.2]:
+        c, info = cs.spamm(jnp.asarray(a), jnp.asarray(b), tau, tile=tile,
+                           backend="jnp")
+        frac = float(info.valid_fraction)
+        err = float(np.linalg.norm(np.asarray(c) - dense))
+        assert frac <= prev_frac + 1e-9
+        assert err >= prev_err - 1e-4
+        prev_frac, prev_err = frac, err
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    tau=st.floats(0.01, 2.0),
+)
+def test_flat_equals_recursive(seed, tau):
+    """paper §3.1 equivalence claim: one-level leaf gating ≡ Algorithm 1's
+    quad-tree recursion (ancestor norms dominate leaf norms)."""
+    n, leaf = 128, 32
+    a, b = _mat(n, n, seed, 0.8), _mat(n, n, seed + 1, 0.8)
+    flat, _ = cs.spamm(jnp.asarray(a), jnp.asarray(b), tau, tile=leaf,
+                       backend="jnp")
+    rec = cs.recursive_spamm(a, b, tau, leaf=leaf)
+    np.testing.assert_allclose(np.asarray(flat, np.float64), rec, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(10, 200),
+    k=st.integers(10, 200),
+    n=st.integers(10, 200),
+    seed=st.integers(0, 1000),
+)
+def test_arbitrary_shapes_pad_unpad(m, k, n, seed):
+    a, b = _mat(m, k, seed), _mat(k, n, seed + 1)
+    c, _ = cs.spamm(jnp.asarray(a), jnp.asarray(b), 0.0, tile=64, backend="jnp")
+    assert c.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(c), a @ b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), tau=st.floats(0.0, 3.0))
+def test_count_valid_matches_mask(seed, tau):
+    """The memory-light searchsorted counter == the materialized mask sum."""
+    na = jnp.asarray(np.random.default_rng(seed).uniform(0, 1, (7, 5)),
+                     jnp.float32)
+    nb = jnp.asarray(np.random.default_rng(seed + 1).uniform(0, 1, (5, 9)),
+                     jnp.float32)
+    want = int(np.sum(np.asarray(ref.spamm_mask_ref(na, nb, jnp.float32(tau)))))
+    got = int(cs.count_valid(na, nb, tau))
+    assert got == want
+
+
+def test_effective_flops_equals_valid_fraction():
+    """The work-reduction mechanism behind paper Table 2: executed FLOPs are
+    exactly valid_fraction × dense FLOPs."""
+    n, tile = 256, 64
+    a, b = _mat(n, n, 3, 0.9), _mat(n, n, 4, 0.9)
+    c, info = cs.spamm(jnp.asarray(a), jnp.asarray(b), 0.5, tile=tile,
+                       backend="jnp")
+    frac = float(info.valid_fraction)
+    assert 0.0 < frac < 1.0  # non-trivial case
+    assert float(info.effective_flops) == pytest.approx(frac * 2 * n**3)
