@@ -1,0 +1,78 @@
+"""Planned vs. unplanned serving-style repeated SpAMM matmuls.
+
+The serving hot path multiplies a stream of activation batches against the
+SAME weight matrix. Unplanned `spamm_matmul` re-runs the full gating phase
+(both normmaps + mask + compaction) per call; the plan/execute split
+(`repro.core.plan`) computes the weight-side normmap/padding once
+(WeightPlanCache) and — when the activation statistics are stable enough to
+freeze the whole plan, as for the paper's decay matrices — reuses the entire
+gating phase, leaving only the multiplication kernel per call.
+
+Three serving strategies over the same request stream:
+  unplanned    — ops.spamm_matmul per request (gating phase every call)
+  weight-cache — per-request plan, weight side from WeightPlanCache
+  frozen-plan  — plan built once on the first request, execute-only after
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import plan as planner
+from repro.core import spamm as cs
+from repro.kernels import ops
+
+
+def run(quick: bool = False):
+    n, tile, tau = (512, 64, 1e-2) if quick else (1024, 64, 1e-2)
+    nreq = 8
+    w = jnp.asarray(cs.exponential_decay(n, lam=0.7, seed=0))
+    rng = np.random.default_rng(1)
+    xs = [
+        jnp.asarray(cs.exponential_decay(n, lam=0.7, seed=2 + i))
+        for i in range(nreq)
+    ]
+
+    _, info = ops.spamm_matmul(xs[0], w, tau, tile=tile, backend="jnp")
+    derived = f"N={n};reqs={nreq};valid={float(info['valid_fraction']):.3f}"
+
+    def unplanned():
+        for x in xs:
+            c, _ = ops.spamm_matmul(x, w, tau, tile=tile, backend="jnp")
+        return c
+
+    t_unplanned = timeit(unplanned)
+    row("plan_cache/unplanned", t_unplanned, derived)
+
+    cache = planner.WeightPlanCache()
+
+    def weight_cached():
+        for x in xs:
+            p, wp = cache.plan_for(x, w, tau, tile=tile, backend="jnp")
+            c = planner.execute(p, x, wp)
+        return c
+
+    t_cached = timeit(weight_cached)
+    row("plan_cache/weight-cache", t_cached,
+        f"{derived};hits={cache.hits};speedup={t_unplanned / t_cached:.2f}x")
+
+    frozen = planner.plan(xs[0], w, tau, tile=tile, backend="jnp")
+    exec_jit = jax.jit(planner.execute)
+
+    def frozen_plan():
+        for x in xs:
+            c = exec_jit(frozen, x, w)
+        return c
+
+    t_frozen = timeit(frozen_plan)
+    row("plan_cache/frozen-plan", t_frozen,
+        f"{derived};speedup={t_unplanned / t_frozen:.2f}x")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

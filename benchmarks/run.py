@@ -20,7 +20,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernel_blocks, kernels_micro, loadbalance,
-                            roofline, table1_taus, table2_dense,
+                            plan_cache, roofline, table1_taus, table2_dense,
                             table3_sparse, table4_ergo, table5_vgg)
     from benchmarks.common import header
 
@@ -33,6 +33,7 @@ def main() -> None:
         "loadbalance": loadbalance,
         "kernels": kernels_micro,
         "kernel_blocks": kernel_blocks,
+        "plan_cache": plan_cache,
         "roofline": roofline,
     }
     header()

@@ -48,3 +48,17 @@ w = jnp.asarray(0.02 * np.random.default_rng(1).standard_normal((256, 512)),
 y = spamm_linear(x, w, jnp.float32(0.05), 64, "jnp")
 g = jax.grad(lambda x: jnp.sum(spamm_linear(x, w, jnp.float32(0.05), 64, "jnp") ** 2))(x)
 print(f"SpAMMLinear: y{y.shape}, grad ok {g.shape}")
+
+# 6. serving hot path: plan the gating phase once, execute per request
+from repro.core import plan as planner
+
+p = planner.plan(a, b, 1e-3, tile=64, backend="jnp")   # get-norm + bitmap (+ compaction)
+c3 = planner.execute(p, a, b)                          # multiplication only
+print(f"plan/execute: {float(p.valid_fraction):.1%} of tiles executed, "
+      f"plan reusable across calls")
+
+# 7. batched execution: (B, M, K) @ (K, N) with the weight plan shared
+xb = jnp.asarray(np.random.default_rng(2).standard_normal((4, 256, n)),
+                 jnp.float32) * 0.05
+cb, binfo = planner.spamm_bmm(xb, b, 1e-3, tile=64, backend="jnp")
+print(f"spamm_bmm: {cb.shape} at {float(binfo.valid_fraction):.1%} valid")

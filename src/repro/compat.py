@@ -1,0 +1,22 @@
+"""jax version-compat shims (no deps on the rest of the repo).
+
+The repo targets the jax >= 0.5 API surface; this module backfills the few
+names that moved since 0.4.x so the same code runs on both:
+
+  * `shard_map` — `jax.shard_map` (new) vs `jax.experimental.shard_map`
+  * `CompilerParams` — pallas-TPU params, renamed from `TPUCompilerParams`
+  * mesh `AxisType` handling lives in `repro.launch.mesh` (it also needs
+    the mesh builders)
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+try:  # jax >= 0.6 exposes it at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+# jax >= 0.5 renamed TPUCompilerParams → CompilerParams
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

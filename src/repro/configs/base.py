@@ -25,6 +25,11 @@ class SpammConfig:
     block_n: int = 1                    # super-column width in the mm kernel
     backend: str = "auto"               # pallas | interpret | jnp | auto
     bwd: str = "dense"                  # dense | spamm gradient path
+    moe_bmm: bool = False               # inference-only: run MoE grouped FFNs
+                                        # through the batched spamm_bmm path
+                                        # (per-expert weight plans; grads flow
+                                        # through the gated product, so keep
+                                        # False for bwd="dense" training)
 
 
 @dataclass(frozen=True)

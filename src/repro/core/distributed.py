@@ -24,15 +24,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.core import plan as _plan
 from repro.core import schedule as _schedule
-from repro.kernels import ops as kops
 
 
 def _local_spamm(a_loc, b, tau, tile, backend, block_n):
-    c, info = kops.spamm_matmul(
-        a_loc, b, tau, tile=tile, backend=backend, block_n=block_n
-    )
-    return c, info["valid_fraction"].reshape(1)
+    # gating on the device-local shard: plans are built per shard (each
+    # shard's normmap slice is its own) and executed in place — the same
+    # single gating implementation (core.plan) as the flat call path.
+    p = _plan.plan(a_loc, b, tau, tile=tile, backend=backend, block_n=block_n)
+    c = _plan.execute(p, a_loc, b)
+    return c, p.valid_fraction.reshape(1)
 
 
 def spamm_rowpart(
@@ -68,7 +71,7 @@ def spamm_rowpart(
         inv = np.argsort(perm)
         a = a.reshape(gm, tile, k)[perm].reshape(m, k)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(
             _local_spamm, tau=tau, tile=tile, backend=backend, block_n=block_n
         ),
@@ -85,13 +88,13 @@ def spamm_rowpart(
 def _local_spamm_psum(a_loc, b_loc, tau, tile, backend, block_n, col_axis):
     # gate on LOCAL k-slice norms: global bitmap decomposes per k, so the
     # union over shards equals the flat single-device bitmap (exactness).
-    c_part, info = kops.spamm_matmul(
-        a_loc, b_loc, tau, tile=tile, backend=backend, block_n=block_n
-    )
+    p = _plan.plan(a_loc, b_loc, tau, tile=tile, backend=backend,
+                   block_n=block_n)
+    c_part = _plan.execute(p, a_loc, b_loc)
     # ring reduce-scatter of the partial products over the contraction axis;
     # scatter along N so C ends fully 2-D sharded.
     c = jax.lax.psum_scatter(c_part, col_axis, scatter_dimension=1, tiled=True)
-    return c, info["valid_fraction"].reshape(1, 1)
+    return c, p.valid_fraction.reshape(1, 1)
 
 
 def spamm_2d(
@@ -129,7 +132,7 @@ def spamm_2d(
         inv = np.argsort(perm)
         a = a.reshape(gm, tile, k)[perm].reshape(m, k)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(
             _local_spamm_psum,
             tau=tau,

@@ -2,26 +2,62 @@
 SpAMM embedded in larger applications; here it replaces x @ W GEMMs).
 
 `spamm_linear(x, w, ...)` flattens leading dims, zero-pads to tile multiples,
-runs the SpAMM pipeline, and un-pads. Differentiable via custom_vjp:
+builds a `SpammPlan` (weight side optionally served from a `WeightPlanCache`)
+and executes it. Differentiable via custom_vjp:
 
   * bwd="dense" (default): exact dense gradients — the paper accelerates
     inference only, so training keeps unbiased grads while the forward enjoys
     tile skipping.
-  * bwd="spamm": gradients computed with the SAME forward bitmap transposed
-    (dx uses mask[i,j,k]→[i,k,j]-gated g @ Wᵀ, dw uses xᵀ @ g gated) — a
-    beyond-paper mode trading gradient exactness for symmetric FLOP savings.
+  * bwd="spamm": gradients gated with plans DERIVED from the forward plan's
+    normmaps (dx gates g @ Wᵀ with norms(g)·norms(W)ᵀ, dw gates xᵀ @ g with
+    norms(x)ᵀ·norms(g)) — a beyond-paper mode trading gradient exactness for
+    symmetric FLOP savings. The weight/activation normmaps are computed once
+    in the forward and reused, not recomputed per gradient.
+
+The model zoo threads a single `SpammContext` (config + shared
+WeightPlanCache) instead of raw (tau, tile, backend, block_n) tuples — see
+`maybe_spamm_matmul`.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import spamm as _spamm
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+from repro.core import plan as _plan
+from repro.core.plan import WeightPlanCache, pad_to_tile
+
+
+class SpammContext:
+    """Static SpAMM execution context for the model zoo: the `SpammConfig`
+    plus a `WeightPlanCache` shared across every gated GEMM of a model.
+
+    Hashed by identity (usable as a jit static / custom_vjp nondiff arg);
+    create one per model/engine, not per call.
+    """
+
+    __slots__ = ("cfg", "cache")
+
+    def __init__(self, cfg: Any, cache: Optional[WeightPlanCache] = None):
+        self.cfg = cfg
+        self.cache = cache if cache is not None else WeightPlanCache()
+
+    def __repr__(self):
+        return f"SpammContext({self.cfg!r}, cache={len(self.cache)} entries)"
+
+    @property
+    def enable(self) -> bool:
+        return bool(getattr(self.cfg, "enable", False))
+
+
+def as_context(spamm_cfg) -> Optional[SpammContext]:
+    """Normalize what the model zoo threads: None / SpammConfig /
+    SpammContext all become an Optional[SpammContext]."""
+    if spamm_cfg is None or isinstance(spamm_cfg, SpammContext):
+        return spamm_cfg
+    return SpammContext(spamm_cfg)
 
 
 def _flatten_pad(x, tile):
@@ -31,11 +67,11 @@ def _flatten_pad(x, tile):
     for s in lead:
         m *= s
     x2 = x.reshape(m, k)
-    return _spamm.pad_to_tile(x2, tile), (lead, m, k)
+    return pad_to_tile(x2, tile), (lead, m, k)
 
 
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
 )
 def spamm_linear(
     x: jax.Array,
@@ -45,30 +81,42 @@ def spamm_linear(
     backend: str = "auto",
     bwd: str = "dense",
     block_n: int = 1,
+    ctx: Optional[SpammContext] = None,
 ) -> jax.Array:
-    """y[..., n] = SpAMM(x[..., k] @ w[k, n], tau). Output dtype follows x."""
-    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n)
+    """y[..., n] = SpAMM(x[..., k] @ w[k, n], tau). Output dtype follows x.
+
+    `ctx` (optional, static) supplies the WeightPlanCache so eager callers
+    (serving) pay the weight-side gating once per weight.
+    """
+    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n, ctx)
     return y
 
 
-def _fwd_impl(x, w, tau, tile, backend, block_n):
+def _fwd_impl(x, w, tau, tile, backend, block_n, ctx):
+    """Plan + execute one gated GEMM; returns (y, plan)."""
     xp, (lead, m, k) = _flatten_pad(x, tile)
-    wp = _spamm.pad_to_tile(w, tile)
     n = w.shape[-1]
-    c, info = kops.spamm_matmul(
-        xp, wp, tau, tile=tile, block_n=block_n, backend=backend
-    )
+    if ctx is not None:
+        p, wp = ctx.cache.plan_for(
+            xp, w, tau, tile=tile, block_n=block_n, backend=backend
+        )
+    else:
+        wp = pad_to_tile(w, tile)
+        p = _plan.plan(xp, wp, tau, tile=tile, block_n=block_n, backend=backend)
+    c = _plan.execute(p, xp, wp)
     y = c[:m, :n].reshape(*lead, n).astype(x.dtype)
-    return y, info
+    return y, p
 
 
-def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n):
-    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n)
-    return y, (x, w, tau)
+def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n, ctx):
+    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx)
+    # residuals carry the forward normmaps so bwd="spamm" replans without
+    # re-running get-norm on x or w
+    return y, (x, w, tau, p.norm_a, p.norm_b)
 
 
-def _spamm_linear_bwd(tile, backend, bwd, block_n, res, g):
-    x, w, tau = res
+def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, res, g):
+    x, w, tau, norm_x, norm_w = res
     lead = x.shape[:-1]
     k, n = w.shape
     m = 1
@@ -80,11 +128,19 @@ def _spamm_linear_bwd(tile, backend, bwd, block_n, res, g):
         dx = (g2 @ w.T).reshape(x.shape).astype(x.dtype)
         dw = (x2.T @ g2).astype(w.dtype)
     elif bwd == "spamm":
-        gp = _spamm.pad_to_tile(g2, tile)
-        xp = _spamm.pad_to_tile(x2, tile)
-        wp = _spamm.pad_to_tile(w, tile)
-        dxp, _ = kops.spamm_matmul(gp, wp.T, tau, tile=tile, backend=backend)
-        dwp, _ = kops.spamm_matmul(xp.T, gp, tau, tile=tile, backend=backend)
+        gp = pad_to_tile(g2, tile)
+        xp = pad_to_tile(x2, tile)
+        wp = pad_to_tile(w, tile)
+        # dx = (g @ Wᵀ) gated by norms(g)·norms(W)ᵀ — the forward bitmap
+        # with its (k, j) axes transposed, built from the cached weight norms
+        p_dx = _plan.plan(gp, None, tau, norm_b=norm_w.T, tile=tile,
+                          backend=backend)
+        norm_g = p_dx.norm_a
+        dxp = _plan.execute(p_dx, gp, wp.T)
+        # dw = (xᵀ @ g) gated by norms(x)ᵀ·norms(g)
+        p_dw = _plan.plan(None, None, tau, norm_a=norm_x.T, norm_b=norm_g,
+                          tile=tile, backend=backend)
+        dwp = _plan.execute(p_dw, xp.T, gp)
         dx = dxp[:m, :k].reshape(x.shape).astype(x.dtype)
         dw = dwp[:k, :n].astype(w.dtype)
     else:
@@ -96,17 +152,34 @@ def _spamm_linear_bwd(tile, backend, bwd, block_n, res, g):
 spamm_linear.defvjp(_spamm_linear_fwd, _spamm_linear_bwd)
 
 
+def spamm_bmm_linear(x: jax.Array, w: jax.Array, spamm_ctx) -> jax.Array:
+    """Batched gated GEMM for per-slice weights (B, K, N) — the MoE grouped
+    FFN shape — via `core.plan.spamm_bmm` with a shared τ. Forward-gated
+    only (used on inference/eval paths; training MoE keeps dense grads)."""
+    cfg = spamm_ctx.cfg
+    c, _ = _plan.spamm_bmm(
+        x, w, jnp.asarray(cfg.tau, jnp.float32),
+        tile=cfg.tile, block_n=cfg.block_n, backend=cfg.backend,
+        cache=spamm_ctx.cache,
+    )
+    return c.astype(x.dtype)
+
+
 def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any) -> jax.Array:
     """The hook the model zoo calls for every eligible GEMM: dense when
-    spamm_cfg is disabled, spamm_linear when enabled."""
-    if spamm_cfg is None or not getattr(spamm_cfg, "enable", False):
+    spamm_cfg is disabled, plan-routed spamm_linear when enabled.
+    `spamm_cfg` may be a SpammConfig or a SpammContext (cfg + plan cache)."""
+    ctx = as_context(spamm_cfg)
+    if ctx is None or not ctx.enable:
         return x @ w
+    cfg = ctx.cfg
     return spamm_linear(
         x,
         w,
-        jnp.asarray(spamm_cfg.tau, jnp.float32),
-        spamm_cfg.tile,
-        spamm_cfg.backend,
-        spamm_cfg.bwd,
-        spamm_cfg.block_n,
+        jnp.asarray(cfg.tau, jnp.float32),
+        cfg.tile,
+        cfg.backend,
+        cfg.bwd,
+        cfg.block_n,
+        ctx,
     )

@@ -1,0 +1,411 @@
+"""Plan/execute split for the SpAMM pipeline.
+
+The paper's pipeline has two phases with very different reuse behavior:
+
+  * a cheap **gating** phase — get-norm (§3.2) → bitmap → `map_offset`
+    compaction (§3.3) — that depends only on the operands' normmaps and τ;
+  * an expensive **multiplication** phase (Alg. 2/3) that consumes the
+    gating artifacts and the operand data.
+
+For serving-style workloads the right-hand operand (a weight matrix) is
+static across requests, so its half of the gating phase can be planned once
+and reused for every token batch — the "preprocess once, multiply many"
+structure Acc-SpMM and tSparse use to make sparse tensor-core kernels pay
+off. This module is the ONE implementation of the gating phase (mask,
+super-column grouping, compaction); every other call site
+(`kernels.ops.spamm_matmul`, `core.spamm.spamm`, `core.module.spamm_linear`,
+`core.distributed.spamm_rowpart/_2d`) builds a `SpammPlan` here and runs it
+through `execute`.
+
+API:
+  plan(a, b, tau | valid_ratio=...)  → SpammPlan   (or from precomputed
+                                       normmaps via norm_a= / norm_b=)
+  execute(plan, a, b)                → C
+  WeightPlanCache                    — per-weight gating artifacts, keyed on
+                                       weight identity/shape/tile
+  spamm_bmm(x, w, tau)               — batched (B,M,K)@(K,N) / (B,K,N) with
+                                       the weight-side plan shared across
+                                       the batch
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# padding helper (shared by every caller that accepts arbitrary shapes)
+# ---------------------------------------------------------------------------
+
+def pad_to_tile(x: jax.Array, tile: int) -> jax.Array:
+    """Zero-pad the trailing two dims of x up to multiples of `tile`."""
+    m, n = x.shape[-2:]
+    pm, pn = (-m) % tile, (-n) % tile
+    if pm == 0 and pn == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)]
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# SpammPlan
+# ---------------------------------------------------------------------------
+
+class SpammInfo(NamedTuple):
+    tau: jax.Array              # threshold actually used
+    valid_fraction: jax.Array   # executed-tile fraction (== paper valid ratio)
+    effective_flops: jax.Array  # 2·M·K·N · valid_fraction
+
+
+@jax.tree_util.register_pytree_node_class
+class SpammPlan:
+    """Cached gating phase of one SpAMM product.
+
+    Array fields (pytree children — a plan passes through jit/vmap):
+      tau         f32 scalar
+      norm_a      (gm, gk)  A-side normmap
+      norm_b      (gk, gn)  B-side normmap
+      mask        (gm, gn//block_n, gk) bool — validity bitmap at
+                  super-column granularity (block_n=1 ⇒ per-tile)
+      kidx        (gm, gn//block_n, gk) int32 compacted valid-k lists, or
+                  None when the backend gates from `mask` directly
+      nvalid      (gm, gn//block_n) int32, or None (as above)
+      valid_tiles i32 scalar — Σ mask
+
+    Static metadata (aux): tile, block_n, backend (resolved name).
+    """
+
+    def __init__(self, tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
+                 *, tile: int, block_n: int, backend: str):
+        self.tau = tau
+        self.norm_a = norm_a
+        self.norm_b = norm_b
+        self.mask = mask
+        self.kidx = kidx
+        self.nvalid = nvalid
+        self.valid_tiles = valid_tiles
+        self.tile = tile
+        self.block_n = block_n
+        self.backend = backend
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.tau, self.norm_a, self.norm_b, self.mask,
+                    self.kidx, self.nvalid, self.valid_tiles)
+        return children, (self.tile, self.block_n, self.backend)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tile, block_n, backend = aux
+        return cls(*children, tile=tile, block_n=block_n, backend=backend)
+
+    # -- derived quantities -------------------------------------------------
+    @property
+    def total_tiles(self) -> int:
+        gm, gnb, gk = self.mask.shape
+        return gm * gnb * gk
+
+    @property
+    def valid_fraction(self) -> jax.Array:
+        return self.valid_tiles / self.total_tiles
+
+    def info(self) -> dict:
+        """The info dict `kernels.ops.spamm_matmul` has always returned."""
+        return {
+            "norm_a": self.norm_a,
+            "norm_b": self.norm_b,
+            "valid_tiles": self.valid_tiles,
+            "total_tiles": self.total_tiles,
+            "valid_fraction": self.valid_fraction,
+        }
+
+
+# ---------------------------------------------------------------------------
+# the gating phase — THE single implementation
+# ---------------------------------------------------------------------------
+
+def gate_mask(norm_a: jax.Array, norm_b: jax.Array, tau, block_n: int = 1):
+    """Validity bitmap from normmaps (paper Alg. 2 lines 3–8).
+
+    block_n > 1 groups gn into gn//block_n super-columns; a super-column is
+    valid for k if ANY of its member columns is (superset mask ⇒ exactness).
+    Returns (gm, gn//block_n, gk) bool.
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    if block_n > 1:
+        gk, gn = norm_b.shape
+        assert gn % block_n == 0, (gn, block_n)
+        nb_g = norm_b.reshape(gk, gn // block_n, block_n)
+        fine = norm_a[:, None, :, None] * jnp.swapaxes(nb_g, 0, 1)[None] >= tau
+        return jnp.any(fine, axis=-1)
+    return kref.spamm_mask_ref(norm_a, norm_b, tau)
+
+
+def _maybe_compact(mask, backend: str):
+    """map_offset compaction (§3.3) when the backend's kernel consumes it."""
+    if kops.get_backend(backend).needs_compaction:
+        return kref.spamm_compact_ref(mask)
+    return None, None
+
+
+def plan(
+    a: Optional[jax.Array] = None,
+    b: Optional[jax.Array] = None,
+    tau=None,
+    *,
+    valid_ratio=None,
+    norm_a: Optional[jax.Array] = None,
+    norm_b: Optional[jax.Array] = None,
+    tile: int = 64,
+    block_n: int = 1,
+    backend: str = "auto",
+    use_mxu_norm: bool = False,
+) -> SpammPlan:
+    """Build the gating phase for (M, K) @ (K, N), dims divisible by tile
+    (and N by tile·block_n) — pad upstream (see `pad_to_tile` /
+    `core.spamm.spamm`).
+
+    Either side may be given as the matrix (positional) or as a precomputed
+    normmap (norm_a= / norm_b= keywords; the matrix argument may then be
+    omitted). Exactly one of `tau` / `valid_ratio` must be set; valid_ratio
+    runs the §3.5.2 τ-search on the normmaps.
+    """
+    if (tau is None) == (valid_ratio is None):
+        raise ValueError("give exactly one of tau / valid_ratio")
+    bk = kops.get_backend(backend)
+    if norm_a is None:
+        if a is None:
+            raise ValueError("need `a` or `norm_a`")
+        norm_a = bk.norms(a, tile, use_mxu=use_mxu_norm)
+    if norm_b is None:
+        if b is None:
+            raise ValueError("need `b` or `norm_b`")
+        norm_b = bk.norms(b, tile, use_mxu=use_mxu_norm)
+
+    if valid_ratio is not None:
+        from repro.core.tau_search import search_tau  # circular-safe
+
+        tau, _ = search_tau(norm_a, norm_b, valid_ratio)
+    tau = jnp.asarray(tau, jnp.float32)
+
+    mask = gate_mask(norm_a, norm_b, tau, block_n)
+    kidx, nvalid = _maybe_compact(mask, bk.name)
+    valid_tiles = jnp.sum(mask, dtype=jnp.int32)
+    return SpammPlan(tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
+                     tile=tile, block_n=block_n, backend=bk.name)
+
+
+def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
+    """Run the multiplication phase of a prebuilt plan on (a, b).
+
+    a/b must have the tile-padded shapes the plan was built for. Executing
+    the same plan twice on the same operands is bit-identical to the
+    unplanned `kernels.ops.spamm_matmul` — the plan IS that call's first
+    half.
+    """
+    gm, gk = p.norm_a.shape
+    _, gn = p.norm_b.shape
+    t = p.tile
+    assert a.shape == (gm * t, gk * t), (a.shape, (gm * t, gk * t))
+    assert b.shape == (gk * t, gn * t), (b.shape, (gk * t, gn * t))
+    bk = kops.get_backend(p.backend)
+    return bk.matmul(a, b, p.mask, p.kidx, p.nvalid, p.tile, p.block_n,
+                     out_dtype or jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-weight plan cache (serving hot path)
+# ---------------------------------------------------------------------------
+
+class _WeightEntry(NamedTuple):
+    weight: Any          # strong ref: anchors the id() key (no stale reuse)
+    padded: jax.Array
+    norms: jax.Array
+
+
+class WeightPlanCache:
+    """Caches the weight-side gating artifacts (tile padding + normmap),
+    keyed on weight identity/shape/dtype/tile/backend.
+
+    Serving engines and eager model forward passes call the same weight
+    matrix against a stream of activations; the activation-side normmap and
+    the bitmap depend on the batch, but the weight normmap (the expensive
+    O(K·N) half of get-norm) and the padded copy do not — compute them once
+    per weight instead of per token batch.
+
+    Tracers are never cached (inside jit the trace itself is cached, and
+    tracer ids are meaningless); the cache is an eager-path optimization.
+    LRU-bounded; `hits`/`misses` expose effectiveness for tests/benchmarks.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _cacheable(w) -> bool:
+        return isinstance(w, (np.ndarray, jax.Array)) and not isinstance(
+            w, jax.core.Tracer
+        )
+
+    def weight_side(self, w, *, tile: int, backend: str,
+                    use_mxu: bool = False):
+        """(padded_weight, weight_normmap) for w, cached on identity.
+
+        w may be 2-D (K, N) → normmap (gk, gn), or 3-D batched (B, K, N) —
+        the per-expert MoE shape — → normmap (B, gk, gn) from one reshaped
+        get-norm pass (row tiles never cross slices after padding)."""
+        bk = kops.get_backend(backend)
+
+        def compute():
+            wp = pad_to_tile(jnp.asarray(w), tile)
+            if wp.ndim == 3:
+                bsz, kp, np_ = wp.shape
+                nw = bk.norms(wp.reshape(bsz * kp, np_), tile,
+                              use_mxu=use_mxu).reshape(bsz, kp // tile, -1)
+                return wp, nw
+            return wp, bk.norms(wp, tile, use_mxu=use_mxu)
+
+        if not self._cacheable(w):
+            return compute()
+        key = (id(w), w.shape, str(w.dtype), tile, bk.name, use_mxu)
+        ent = self._entries.get(key)
+        if ent is not None and ent.weight is w:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return ent.padded, ent.norms
+        self.misses += 1
+        wp, nw = compute()
+        self._entries[key] = _WeightEntry(w, wp, nw)
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return wp, nw
+
+    def plan_for(self, x_padded, w, tau=None, *, valid_ratio=None,
+                 tile: int = 64, block_n: int = 1, backend: str = "auto",
+                 use_mxu_norm: bool = False):
+        """Full plan for x @ w with the weight side served from the cache.
+        x_padded must already be tile-padded. Returns (plan, padded_weight).
+        """
+        wp, nw = self.weight_side(w, tile=tile, backend=backend,
+                                  use_mxu=use_mxu_norm)
+        p = plan(x_padded, None, tau, valid_ratio=valid_ratio, norm_b=nw,
+                 tile=tile, block_n=block_n, backend=backend,
+                 use_mxu_norm=use_mxu_norm)
+        return p, wp
+
+    def clear(self):
+        self._entries.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self):
+        return len(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+def spamm_bmm(
+    x: jax.Array,
+    w: jax.Array,
+    tau=None,
+    *,
+    valid_ratio=None,
+    tile: int = 64,
+    block_n: int = 1,
+    backend: str = "auto",
+    use_mxu_norm: bool = False,
+    out_dtype=None,
+    cache: Optional[WeightPlanCache] = None,
+):
+    """Batched SpAMM: (B, M, K) @ (K, N) or (B, M, K) @ (B, K, N).
+
+    Shared-weight case: the batch dim folds into the row-tile grid — the
+    whole batch runs as ONE (B·M, K) @ (K, N) product whose row tiles never
+    cross slice boundaries, so the gating is exactly the per-slice gating
+    while the weight-side plan (normmap + padding, optionally from `cache`)
+    is computed once and shared across the batch. Per-batch-weight case:
+    normmaps for every slice come from one reshaped get-norm call, gating is
+    vmapped, and the multiplication runs per slice under lax.map (jnp
+    backend: vmapped masked einsum).
+
+    Arbitrary shapes are zero-padded to tile multiples and un-padded.
+    Returns (C (B, M, N), SpammInfo).
+    """
+    if (tau is None) == (valid_ratio is None):
+        raise ValueError("give exactly one of tau / valid_ratio")
+    bsz, m, k = x.shape
+    bk = kops.get_backend(backend)
+    out_dtype = out_dtype or jnp.float32
+
+    if w.ndim == 2:  # (B, M, K) @ (K, N): fold batch into the row-tile grid
+        k2, n = w.shape
+        assert k == k2, (x.shape, w.shape)
+        xp = pad_to_tile(x, tile)
+        mp, kp = xp.shape[1:]
+        if cache is not None:
+            wp, nw = cache.weight_side(w, tile=tile, backend=backend,
+                                       use_mxu=use_mxu_norm)
+        else:
+            wp = pad_to_tile(w, tile)
+            nw = bk.norms(wp, tile, use_mxu=use_mxu_norm)
+        x2 = xp.reshape(bsz * mp, kp)
+        p = plan(x2, None, tau, valid_ratio=valid_ratio, norm_b=nw,
+                 tile=tile, block_n=block_n, backend=backend,
+                 use_mxu_norm=use_mxu_norm)
+        c = execute(p, x2, wp, out_dtype=out_dtype)
+        c = c.reshape(bsz, mp, -1)[:, :m, :n]
+        frac = p.valid_fraction
+        tau_used = p.tau
+    else:  # (B, M, K) @ (B, K, N): per-slice plans, weight norms in one pass
+        if valid_ratio is not None:
+            raise ValueError("valid_ratio needs a shared weight; pass tau for "
+                             "per-batch weights")
+        assert w.shape[0] == bsz and w.shape[1] == k, (x.shape, w.shape)
+        n = w.shape[2]
+        xp = pad_to_tile(x, tile)
+        mp, kp = xp.shape[1:]
+        gm, gk = mp // tile, kp // tile
+        if cache is not None:
+            wp, nw = cache.weight_side(w, tile=tile, backend=backend,
+                                       use_mxu=use_mxu_norm)
+        else:
+            wp = pad_to_tile(w, tile)
+            np_ = wp.shape[2]
+            nw = bk.norms(wp.reshape(bsz * kp, np_), tile,
+                          use_mxu=use_mxu_norm).reshape(bsz, gk, -1)
+        na = bk.norms(xp.reshape(bsz * mp, kp), tile,
+                      use_mxu=use_mxu_norm).reshape(bsz, gm, gk)
+        tau_used = jnp.asarray(tau, jnp.float32)
+        mask = jax.vmap(lambda a_, b_: gate_mask(a_, b_, tau_used, block_n))(
+            na, nw)
+        if bk.needs_compaction:
+            kidx, nvalid = jax.vmap(kref.spamm_compact_ref)(mask)
+            c = jax.lax.map(
+                lambda s: bk.matmul(s[0], s[1], s[2], s[3], s[4], tile,
+                                    block_n, out_dtype),
+                (xp, wp, mask, kidx, nvalid),
+            )
+        else:
+            c = jax.vmap(
+                lambda a_, b_, m_: bk.matmul(a_, b_, m_, None, None, tile,
+                                             block_n, out_dtype)
+            )(xp, wp, mask)
+        c = c[:, :m, :n]
+        frac = jnp.sum(mask, dtype=jnp.int32) / mask.size
+
+    return c, SpammInfo(
+        tau=jnp.asarray(tau_used, jnp.float32),
+        valid_fraction=frac,
+        effective_flops=frac * (2.0 * bsz * m * k * n),
+    )

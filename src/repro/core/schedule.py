@@ -17,12 +17,10 @@ import numpy as np
 
 def v_matrix(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
     """V[i,j] = Σ_k bitmap[i,j,k] — the paper's per-tile valid-multiplication
-    count. O(gm·gk·log gn)-style memory-light version (no gm·gn·gk tensor):
-    here gn is usually modest so we compute per-k membership directly."""
-    tau = jnp.asarray(tau, jnp.float32)
-    # mask[i, j, k] = na[i,k] * nb[k,j] >= tau, summed over k
-    prod = norm_a[:, None, :] * jnp.swapaxes(norm_b, 0, 1)[None, :, :]
-    return jnp.sum(prod >= tau, axis=-1, dtype=jnp.int32)
+    count, summed from the planner's bitmap (core.plan owns the gating)."""
+    from repro.core.plan import gate_mask  # circular-safe
+
+    return jnp.sum(gate_mask(norm_a, norm_b, tau), axis=-1, dtype=jnp.int32)
 
 
 def rows_for_device(d: int, num_devices: int, gm: int, schedule: str) -> np.ndarray:

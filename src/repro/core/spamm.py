@@ -1,6 +1,6 @@
 """SpAMM core — the paper's contribution as a composable JAX module.
 
-Functional API over the two kernels (get-norm, multiplication) with:
+Functional API over the plan/execute pipeline (repro.core.plan) with:
   * arbitrary (M, K) @ (K, N) shapes (auto zero-padding to tile multiples,
     paper §3 "the matrices are padded with zeros"),
   * tau- or valid-ratio-driven gating (ratio → tau via core.tau_search),
@@ -11,27 +11,12 @@ Functional API over the two kernels (get-norm, multiplication) with:
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
-
-
-# ---------------------------------------------------------------------------
-# padding helpers
-# ---------------------------------------------------------------------------
-
-def pad_to_tile(x: jax.Array, tile: int) -> jax.Array:
-    m, n = x.shape
-    pm, pn = (-m) % tile, (-n) % tile
-    if pm == 0 and pn == 0:
-        return x
-    return jnp.pad(x, ((0, pm), (0, pn)))
+from repro.core import plan as _plan
+from repro.core.plan import SpammInfo, pad_to_tile  # re-exported API
 
 
 # ---------------------------------------------------------------------------
@@ -39,7 +24,14 @@ def pad_to_tile(x: jax.Array, tile: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def count_valid(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
-    """#{(i,j,k): na[i,k]·nb[k,j] >= tau} in O(gm·gk·log gn) memory-light form."""
+    """#{(i,j,k): na[i,k]·nb[k,j] >= tau} in O(gm·gk·log gn) memory-light form.
+
+    The count can exceed int32 for production grids — gm·gk·gn overflows 2³¹
+    already at gm = gk = gn = 1290, i.e. an N ≈ 82k matrix at tile 64. When
+    the grid makes overflow possible the sum falls back to i64 (f32 without
+    jax_enable_x64 — approximate above 2²⁴ but monotone, which is all the
+    τ-bisection needs); smaller grids keep the exact int32 sum.
+    """
     gm, gk = norm_a.shape
     gk2, gn = norm_b.shape
     assert gk == gk2
@@ -51,29 +43,30 @@ def count_valid(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
         lambda row, t: gn - jnp.searchsorted(row, t, side="left"),
         in_axes=(0, 1),
         out_axes=1,
-    )(sorted_nb, thr)  # (gm, gk)
+    )(sorted_nb, thr)  # (gm, gk), each entry <= gn (int32-safe)
     # na == 0: products are 0; valid iff tau <= 0
     zero_a = norm_a <= 0.0
     counts = jnp.where(zero_a, jnp.where(tau <= 0.0, gn, 0), counts)
-    return jnp.sum(counts, dtype=jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32)
+    if gm * gk * gn < 2 ** 31:
+        return jnp.sum(counts, dtype=jnp.int32)  # exact
+    acc = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.float32
+    return jnp.sum(counts.astype(acc))
 
 
 def valid_ratio_of(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
-    """paper §3.5.2: valid ratio = Σ V[i,j] / BDIM³ (generalized to gm·gn·gk)."""
+    """paper §3.5.2: valid ratio = Σ V[i,j] / BDIM³ (generalized to gm·gn·gk).
+
+    The denominator is formed as a python float: gm·gk·gn overflows int32
+    for large grids long before the arrays themselves are a problem.
+    """
     gm, gk = norm_a.shape
     _, gn = norm_b.shape
-    return count_valid(norm_a, norm_b, tau) / (gm * gk * gn)
+    return count_valid(norm_a, norm_b, tau) / (float(gm) * float(gk) * float(gn))
 
 
 # ---------------------------------------------------------------------------
 # top-level SpAMM
 # ---------------------------------------------------------------------------
-
-class SpammInfo(NamedTuple):
-    tau: jax.Array            # threshold actually used
-    valid_fraction: jax.Array # executed-tile fraction (== paper valid ratio)
-    effective_flops: jax.Array  # 2·M·K·N · valid_fraction
-
 
 def spamm(
     a: jax.Array,
@@ -91,35 +84,25 @@ def spamm(
 
     Exactly one of `tau` / `valid_ratio` must be given. Arbitrary shapes are
     zero-padded to tile multiples (paper §3) and the result is un-padded.
+    One-shot plan+execute; to amortize the gating phase across repeated
+    products, build the plan once with `repro.core.plan.plan` and call
+    `repro.core.plan.execute` per product.
     """
-    if (tau is None) == (valid_ratio is None):
-        raise ValueError("give exactly one of tau / valid_ratio")
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     ap, bp = pad_to_tile(a, tile), pad_to_tile(b, tile)
 
-    if valid_ratio is not None:
-        from repro.core.tau_search import search_tau  # circular-safe
-
-        na = kops.tile_norms(ap, tile, backend=backend, use_mxu=use_mxu_norm)
-        nb = kops.tile_norms(bp, tile, backend=backend, use_mxu=use_mxu_norm)
-        tau, _ = search_tau(na, nb, valid_ratio)
-
-    c, info = kops.spamm_matmul(
-        ap,
-        bp,
-        tau,
-        tile=tile,
-        block_n=block_n,
-        backend=backend,
+    p = _plan.plan(
+        ap, bp, tau,
+        valid_ratio=valid_ratio,
+        tile=tile, block_n=block_n, backend=backend,
         use_mxu_norm=use_mxu_norm,
-        out_dtype=out_dtype,
     )
-    c = c[:m, :n]
-    frac = info["valid_fraction"]
+    c = _plan.execute(p, ap, bp, out_dtype=out_dtype)[:m, :n]
+    frac = p.valid_fraction
     return c, SpammInfo(
-        tau=jnp.asarray(tau, jnp.float32),
+        tau=p.tau,
         valid_fraction=frac,
         effective_flops=frac * (2.0 * m * k * n),
     )

@@ -14,8 +14,9 @@ from typing import Optional, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding
 
+from repro.launch.mesh import mesh_from_devices
 from repro.models import model as M
 
 
@@ -34,8 +35,7 @@ def build_elastic_mesh(devices: Optional[Sequence] = None,
     devices = list(devices if devices is not None else jax.devices())
     data, model = best_mesh_shape(len(devices), model_parallel)
     used = np.array(devices[: data * model]).reshape(data, model)
-    return Mesh(used, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return mesh_from_devices(used, ("data", "model"))
 
 
 def reshard_state(state, cfg, pcfg, new_mesh: Mesh):

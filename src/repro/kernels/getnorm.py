@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 
 def _getnorm_kernel(x_ref, o_ref, *, use_mxu: bool):
     j = pl.program_id(1)
@@ -70,7 +72,7 @@ def tile_norms(
         in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((1, gk), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((gm, gk), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,16 +1,29 @@
-"""jit'd wrappers for the cuSpAMM kernels with backend dispatch.
+"""Backend registry + jit'd wrappers for the cuSpAMM kernels.
 
-backends:
+backends (each a `Backend` record in `BACKENDS`):
   "pallas"    — compiled Pallas TPU kernels (requires a real TPU).
   "interpret" — Pallas kernels executed with interpret=True (CPU-correctness
                 path; runs the exact kernel body in Python/XLA emulation).
   "jnp"       — pure-jnp oracles from ref.py (used for the CPU dry-run and as
                 the differentiable path inside models).
   "auto"      — "pallas" when a TPU is attached, else "jnp".
+
+A `Backend` bundles the two kernel entry points the SpAMM pipeline needs:
+`norms` (the §3.2 get-norm kernel) and `matmul` (the §3.3 multiplication
+kernel, driven by a prebuilt `repro.core.plan.SpammPlan`'s mask/compaction).
+Both `tile_norms` and the plan executor (`repro.core.plan.execute`) dispatch
+through this one table — adding a backend means registering one record, not
+editing every call site.
+
+The mask/compaction/gating logic itself lives in exactly one place:
+`repro.core.plan`. `spamm_matmul` below is a thin plan-then-execute
+convenience wrapper kept for the one-shot (unplanned) call shape.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +31,6 @@ import jax.numpy as jnp
 from repro.kernels import getnorm as _getnorm
 from repro.kernels import ref as _ref
 from repro.kernels import spamm_mm as _spamm_mm
-
-VALID_BACKENDS = ("auto", "pallas", "interpret", "jnp")
 
 
 @functools.cache
@@ -30,24 +41,110 @@ def _has_tpu() -> bool:
         return False
 
 
-def resolve_backend(backend: str) -> str:
-    if backend not in VALID_BACKENDS:
-        raise ValueError(f"backend {backend!r} not in {VALID_BACKENDS}")
-    if backend == "auto":
-        return "pallas" if _has_tpu() else "jnp"
-    return backend
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One SpAMM execution backend.
+
+    norms(x, tile, use_mxu)                        → (M//tile, K//tile) f32
+    matmul(a, b, mask, kidx, nvalid, tile,
+           block_n, out_dtype)                     → (M, N) out_dtype
+      `mask` is (gm, gn//block_n, gk) bool; `kidx`/`nvalid` the compacted
+      valid-k lists at the same granularity (None when needs_compaction is
+      False — the executor then gates from `mask` directly).
+    needs_compaction: whether `matmul` consumes kidx/nvalid (the Pallas
+      kernels do; the jnp masked-einsum oracle does not, so planners skip
+      the compaction sort for it).
+    """
+    name: str
+    norms: Callable[..., jax.Array]
+    matmul: Callable[..., jax.Array]
+    needs_compaction: bool = True
+
+
+def _jnp_norms(x, tile, use_mxu=False):
+    del use_mxu  # the einsum oracle has no MXU path
+    return _ref.tile_norms_ref(x, tile)
+
+
+def _jnp_matmul(a, b, mask, kidx, nvalid, tile, block_n, out_dtype):
+    del kidx, nvalid
+    m, k = a.shape
+    _, n = b.shape
+    gm, gk, gn = m // tile, k // tile, n // tile
+    mask_full = jnp.repeat(mask, block_n, axis=1) if block_n > 1 else mask
+    a4 = a.reshape(gm, tile, gk, tile)
+    b4 = b.reshape(gk, tile, gn, tile)
+    out = jnp.einsum(
+        "ijk,ipks,ksjq->ipjq",
+        mask_full.astype(jnp.float32).astype(a.dtype),
+        a4,
+        b4,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(m, n).astype(out_dtype)
+
+
+def _pallas_norms(interpret):
+    def norms(x, tile, use_mxu=False):
+        return _getnorm.tile_norms(x, tile, use_mxu=use_mxu, interpret=interpret)
+
+    return norms
+
+
+def _pallas_matmul(interpret):
+    def matmul(a, b, mask, kidx, nvalid, tile, block_n, out_dtype):
+        del mask
+        return _spamm_mm.spamm_mm(
+            a, b, kidx, nvalid,
+            tile=tile, block_n=block_n, out_dtype=out_dtype,
+            interpret=interpret,
+        )
+
+    return matmul
+
+
+BACKENDS = {
+    "jnp": Backend("jnp", _jnp_norms, _jnp_matmul, needs_compaction=False),
+    "interpret": Backend("interpret", _pallas_norms(True), _pallas_matmul(True)),
+    "pallas": Backend("pallas", _pallas_norms(False), _pallas_matmul(False)),
+}
+
+VALID_BACKENDS = ("auto", *BACKENDS)
+
+
+def register_backend(backend: Backend):
+    """Extension hook: make a new backend visible to the whole pipeline."""
+    BACKENDS[backend.name] = backend
+
+
+def get_backend(backend: str) -> Backend:
+    """Resolve a backend name ("auto" included) to its registry record."""
+    if backend == "auto":
+        backend = "pallas" if _has_tpu() else "jnp"
+    try:
+        return BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"backend {backend!r} not in {VALID_BACKENDS}") from None
+
+
+def resolve_backend(backend: str) -> str:
+    """Canonical backend name (kept for callers that key on the string)."""
+    return get_backend(backend).name
+
+
+# ---------------------------------------------------------------------------
+# kernel wrappers
+# ---------------------------------------------------------------------------
 
 def tile_norms(
     x: jax.Array, tile: int = 64, *, backend: str = "auto", use_mxu: bool = False
 ) -> jax.Array:
-    """normmap of x — paper get-norm kernel (§3.2)."""
-    backend = resolve_backend(backend)
-    if backend == "jnp":
-        return _ref.tile_norms_ref(x, tile)
-    return _getnorm.tile_norms(
-        x, tile, use_mxu=use_mxu, interpret=(backend == "interpret")
-    )
+    """normmap of x — paper get-norm kernel (§3.2), registry-dispatched."""
+    return get_backend(backend).norms(x, tile, use_mxu=use_mxu)
 
 
 def spamm_compact(mask: jax.Array):
@@ -66,69 +163,23 @@ def spamm_matmul(
     use_mxu_norm: bool = False,
     out_dtype=None,
 ):
-    """End-to-end SpAMM: get-norm → mask/compact → multiplication kernel.
+    """One-shot SpAMM: `plan` + `execute` fused (see repro.core.plan).
 
     Shapes (M, K) @ (K, N) with all dims divisible by tile (and N by
-    tile*block_n). Use repro.core.spamm.spamm for auto-padding + extras.
+    tile*block_n). Use repro.core.spamm.spamm for auto-padding + extras; use
+    repro.core.plan.plan/execute directly to amortize the gating phase over
+    repeated products with the same operands (serving hot path).
     Returns (C, info) where info carries the normmaps, nvalid and the
     executed-tile fraction (== the paper's valid ratio for this product).
     """
-    backend = resolve_backend(backend)
-    m, k = a.shape
-    _, n = b.shape
-    gm, gk, gn = m // tile, k // tile, n // tile
-    na = tile_norms(a, tile, backend=backend, use_mxu=use_mxu_norm)
-    nb = tile_norms(b, tile, backend=backend, use_mxu=use_mxu_norm)
-    tau = jnp.asarray(tau, jnp.float32)
+    from repro.core import plan as _plan  # circular-safe (plan imports ops)
 
-    if block_n > 1:
-        # group gn into gn//block_n super-columns; a super-column is valid for
-        # k if ANY of its member columns is (superset mask keeps exactness).
-        assert gn % block_n == 0, (gn, block_n)
-        nb_g = nb.reshape(gk, gn // block_n, block_n)
-        mask_fine = na[:, None, :, None] * jnp.swapaxes(nb_g, 0, 1)[None] >= tau
-        mask = jnp.any(mask_fine, axis=-1)  # (gm, gn//block_n, gk)
-    else:
-        mask = _ref.spamm_mask_ref(na, nb, tau)
-
-    nvalid_total = jnp.sum(mask, dtype=jnp.int32)
-    info = {
-        "norm_a": na,
-        "norm_b": nb,
-        "valid_tiles": nvalid_total,
-        "total_tiles": mask.shape[0] * mask.shape[1] * mask.shape[2],
-        "valid_fraction": nvalid_total / (mask.shape[0] * mask.shape[1] * mask.shape[2]),
-    }
-
-    out_dtype = out_dtype or jnp.float32
-    if backend == "jnp":
-        if block_n > 1:
-            mask_full = jnp.repeat(mask, block_n, axis=1)
-        else:
-            mask_full = mask
-        a4 = a.reshape(gm, tile, gk, tile)
-        b4 = b.reshape(gk, tile, gn, tile)
-        out = jnp.einsum(
-            "ijk,ipks,ksjq->ipjq",
-            mask_full.astype(jnp.float32).astype(a.dtype),
-            a4,
-            b4,
-            preferred_element_type=jnp.float32,
-        )
-        c = out.reshape(m, n).astype(out_dtype)
-    else:
-        kidx, nvalid = _ref.spamm_compact_ref(mask)
-        c = _spamm_mm.spamm_mm(
-            a,
-            b,
-            kidx,
-            nvalid,
-            tile=tile,
-            block_n=block_n,
-            out_dtype=out_dtype,
-            interpret=(backend == "interpret"),
-        )
-    return c, info
+    p = _plan.plan(
+        a, b, tau,
+        tile=tile, block_n=block_n, backend=backend, use_mxu_norm=use_mxu_norm,
+    )
+    c = _plan.execute(p, a, b, out_dtype=out_dtype)
+    return c, p.info()
 
 
 def spamm_effective_flops(m: int, k: int, n: int, valid_fraction) -> jax.Array:

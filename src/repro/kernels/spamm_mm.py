@@ -20,8 +20,11 @@ TPU-native mapping of the paper's design:
     bf16 inputs into the MXU via jnp.dot(..., preferred_element_type=f32).
 
 The mask/compaction (paper Alg. 2 lines 3–14) runs as fused XLA ops over the
-normmaps — see `repro.core.spamm` — because on TPU the compaction is a cheap
-O(gm·gn·gk) elementwise+sort pass, not a per-block recomputation.
+normmaps — built ONCE per product by `repro.core.plan.plan` into a
+`SpammPlan` and handed to this kernel by `repro.core.plan.execute` — because
+on TPU the compaction is a cheap O(gm·gn·gk) elementwise+sort pass, not a
+per-block recomputation. Serving callers reuse the plan (weight-side
+artifacts via `repro.core.plan.WeightPlanCache`) across repeated products.
 """
 from __future__ import annotations
 
@@ -31,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import CompilerParams as _CompilerParams
 
 
 def _spamm_mm_kernel(kidx_ref, nv_ref, a_ref, b_ref, o_ref, acc_ref):
@@ -79,7 +84,8 @@ def spamm_mm(
     block_n: number of consecutive B/C tiles handled per grid step in the N
     dimension (wider MXU blocks → better arithmetic intensity; requires the
     *same* kidx for the grouped j's, i.e. kidx/nvalid built at block_n
-    granularity — callers use `repro.core.spamm.plan`).
+    granularity — callers get both from `repro.core.plan.plan`, which
+    builds the super-column mask and its compaction in one place).
     Returns C: (M, N) in out_dtype (f32 accumulate regardless of input dtype).
     """
     m, k = a.shape
@@ -109,7 +115,7 @@ def spamm_mm(
         _spamm_mm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

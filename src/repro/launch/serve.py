@@ -11,7 +11,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ParallelConfig, get_config
+from repro.configs import ParallelConfig, SpammConfig, get_config
 from repro.launch.mesh import make_ctx, make_host_mesh
 from repro.models import model as M
 from repro.serving.engine import Engine, Request
@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spamm-tau", type=float, default=None,
+                    help="enable SpAMM-gated prefill GEMMs at this τ "
+                         "(one SpammContext per engine)")
+    ap.add_argument("--spamm-tile", type=int, default=32)
+    ap.add_argument("--spamm-backend", default="auto")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,7 +43,13 @@ def main():
     mesh = make_host_mesh()
     ctx = make_ctx(mesh)
     params = M.init_params(cfg, pcfg, jax.random.key(args.seed))
-    eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len)
+    spamm_cfg = None
+    if args.spamm_tau is not None:
+        spamm_cfg = SpammConfig(enable=True, tau=args.spamm_tau,
+                                tile=args.spamm_tile,
+                                backend=args.spamm_backend)
+    eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len,
+                 spamm_cfg=spamm_cfg)
 
     rng = np.random.default_rng(args.seed)
     reqs = [

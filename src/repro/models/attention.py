@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -323,7 +325,7 @@ def decode_attention_seqsharded(
         return out.reshape(qc.shape[0], hq, d).astype(qc.dtype), kc, vc
 
     cspec = P(batch_axes, axis, None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(

@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import module as spmod
 from repro.models import transformer as tr
 from repro.models.layers import chunked_ce_loss, rms_norm
 from repro.models import ssm as ssm_mod
@@ -142,7 +143,12 @@ def shardings_for(mesh: Mesh, tree):
 # ---------------------------------------------------------------------------
 
 def forward_hidden(cfg, pcfg, ctx: NetCtx, params, batch, *, spamm_cfg=None):
-    """tokens or embeds → final-normed hidden states (B, S, d)."""
+    """tokens or embeds → final-normed hidden states (B, S, d).
+
+    `spamm_cfg` may be a SpammConfig or a prebuilt `SpammContext` (config +
+    shared WeightPlanCache); the stack threads the context object, not raw
+    (tau, tile, backend, block_n) tuples."""
+    spamm_cfg = spmod.as_context(spamm_cfg)
     cdt = _dtype(pcfg.compute_dtype)
     if "embeds" in batch:
         x = batch["embeds"].astype(cdt)
@@ -254,6 +260,7 @@ def cache_pspecs(cfg: ModelConfig, pcfg: ParallelConfig, cache,
 def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
                     optimizer, *, spamm_cfg=None):
     """Returns fn(params, opt_state, batch, step) → (params, opt_state, metrics)."""
+    spamm_cfg = spmod.as_context(spamm_cfg)  # one context for every call
 
     def step(params, opt_state, batch, step_no):
         (loss, met), grads = jax.value_and_grad(
@@ -272,6 +279,7 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
                       *, spamm_cfg=None):
     """fn(params, batch) → (cache, last_logits). Logits only for the final
     position (materializing (B, S, V) at 32k is not a production thing)."""
+    spamm_cfg = spmod.as_context(spamm_cfg)  # one context for every call
 
     def step(params, batch):
         cdt = _dtype(pcfg.compute_dtype)
@@ -284,7 +292,7 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
         cache_len = (min(cfg.sliding_window, s) if cfg.sliding_window else s)
         x, cache = tr.stack_prefill(params, x, cfg, pcfg, ctx, positions,
-                                    cache_len)
+                                    cache_len, spamm_cfg=spamm_cfg)
         h_last = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
         logits = (h_last @ params["unembed"]["kernel"].astype(cdt)).astype(jnp.float32)
         return cache, logits

@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
-from repro.core.module import maybe_spamm_matmul
+from repro.core.module import as_context, maybe_spamm_matmul, spamm_bmm_linear
 
 
 def moe_params(key, cfg: MoEConfig, d_model: int, dtype, model_axis_size: int = 1):
@@ -79,14 +80,27 @@ def _dispatch(x, router_w, cfg: MoEConfig, capacity: int):
 
 
 def _grouped_ffn(buf, w1, w3, w2, act, spamm_cfg):
-    """buf: (E_loc, C, d) → (E_loc, C, d) via per-expert SwiGLU."""
+    """buf: (E_loc, C, d) → (E_loc, C, d) via per-expert SwiGLU.
+
+    With SpAMM enabled and `moe_bmm` set, the three grouped GEMMs run as
+    batched (E, C, d) @ (E, d, ff) products through `core.plan.spamm_bmm`:
+    one get-norm pass per operand, per-expert gating, weight-side plans
+    shared with the context's cache. Otherwise (default / training) each
+    expert goes through the vmapped `spamm_linear` custom-vjp path."""
     cdt = buf.dtype
+    ctx = as_context(spamm_cfg)
+
+    if ctx is not None and ctx.enable and getattr(ctx.cfg, "moe_bmm", False):
+        g = spamm_bmm_linear(buf, w1.astype(cdt), ctx)
+        u = spamm_bmm_linear(buf, w3.astype(cdt), ctx)
+        h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+        return spamm_bmm_linear(h, w2.astype(cdt), ctx)
 
     def one(b, w1e, w3e, w2e):
-        g = maybe_spamm_matmul(b, w1e.astype(cdt), spamm_cfg)
-        u = maybe_spamm_matmul(b, w3e.astype(cdt), spamm_cfg)
+        g = maybe_spamm_matmul(b, w1e.astype(cdt), ctx)
+        u = maybe_spamm_matmul(b, w3e.astype(cdt), ctx)
         h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
-        return maybe_spamm_matmul(h, w2e.astype(cdt), spamm_cfg)
+        return maybe_spamm_matmul(h, w2e.astype(cdt), ctx)
 
     return jax.vmap(one)(buf, w1, w3, w2)
 
@@ -200,7 +214,7 @@ def moe_block(
             y = y + ysh
         return y.reshape(bl, sl, d).astype(cdt), aux.reshape(1)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(w_specs, P(batch_axes, None, None)),

@@ -361,8 +361,13 @@ def stack_prefill(
     ctx: NetCtx,
     positions: jax.Array,
     cache_len: int,
+    *,
+    spamm_cfg=None,
 ):
-    """Forward + collect caches. Returns (x, cache_pytree)."""
+    """Forward + collect caches. Returns (x, cache_pytree).
+
+    `spamm_cfg` is the SpammContext the serving engine threads so prefill
+    GEMMs run through the plan/execute pipeline like the train forward."""
     kind = stack_kinds(cfg)
     s = x.shape[1]
 
@@ -387,7 +392,7 @@ def stack_prefill(
             caches = {}
             for i, k in enumerate(gkinds):
                 h, _, c = layer_fwd(p[f"l{i}"], h, cfg, pcfg, ctx, positions, k,
-                                    collect_cache=True)
+                                    spamm_cfg=spamm_cfg, collect_cache=True)
                 caches[f"l{i}"] = trim(c)
             return h, caches
 
@@ -395,13 +400,14 @@ def stack_prefill(
         tcaches = {}
         for i, k in enumerate(tail):
             x, _, c = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
-                                positions, k, collect_cache=True)
+                                positions, k, spamm_cfg=spamm_cfg,
+                                collect_cache=True)
             tcaches[f"l{i}"] = trim(c)
         return x, {"groups": gcaches, "tail": tcaches}
 
     def body(h, p):
         h, _, c = layer_fwd(p, h, cfg, pcfg, ctx, positions, kind,
-                            collect_cache=True)
+                            spamm_cfg=spamm_cfg, collect_cache=True)
         return h, trim(c)
 
     x, caches = jax.lax.scan(body, x, params["layers"])

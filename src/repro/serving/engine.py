@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import module as spmod
 from repro.models import model as M
 from repro.models.transformer import NetCtx
 
@@ -29,12 +30,25 @@ class Request:
 
 
 class Engine:
+    """`spamm_cfg` (SpammConfig or SpammContext) turns on norm-gated GEMMs in
+    prefill. The engine owns ONE SpammContext threaded through every request.
+
+    Note on amortization: the prefill step is jitted, so inside the compiled
+    graph the weight normmaps are recomputed per call (tracers are never
+    cached — see WeightPlanCache); what jit amortizes is the Python-side
+    gating/trace. The cache pays off on the EAGER plan/execute serving path
+    (see benchmarks/plan_cache.py); moving weight plans to jit inputs so the
+    compiled prefill skips get-norm too is the natural next step.
+    """
+
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
-                 params, *, max_len: int = 512):
+                 params, *, max_len: int = 512, spamm_cfg=None):
         self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
         self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(M.make_prefill_step(cfg, pcfg, ctx))
+        self.spamm_ctx = spmod.as_context(spamm_cfg)
+        self._prefill = jax.jit(
+            M.make_prefill_step(cfg, pcfg, ctx, spamm_cfg=self.spamm_ctx))
         self._decode = jax.jit(M.make_decode_step(cfg, pcfg, ctx))
 
     def _pad_cache(self, cache, cur_len: int):

@@ -5,11 +5,11 @@ from conftest import run_subprocess
 
 CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import spamm as cs, distributed, schedule
 from repro.kernels import ref
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 n, tile, tau = 512, 64, 0.02
 a = cs.exponential_decay(n, lam=0.6, seed=0)
 b = cs.exponential_decay(n, lam=0.6, seed=1)

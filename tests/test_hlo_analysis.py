@@ -4,10 +4,11 @@ from conftest import run_subprocess
 
 CODE = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_analysis import HloAnalysis
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 
 def scanned(x, ws):
     def body(c, w):

@@ -23,9 +23,9 @@ B, S = 2, 64
 
 
 def _ctx():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return NetCtx(mesh=mesh)
+    from repro.launch.mesh import make_mesh  # AxisType compat shim
+
+    return NetCtx(mesh=make_mesh((1, 1), ("data", "model")))
 
 
 def _inputs(cfg, key=1):
@@ -117,3 +117,19 @@ def test_spamm_enabled_forward_matches_dense_at_tau0():
         lambda p, b: M.loss_fn(cfg, PCFG, ctx, p, b, spamm_cfg=sp)
     )(params, batch)
     assert abs(float(l0) - float(l1)) < 1e-4, (float(l0), float(l1))
+
+
+def test_spamm_moe_bmm_forward_matches_dense_at_tau0():
+    """Batched spamm_bmm execution of the MoE grouped FFN (per-expert weight
+    plans) must also be exact at τ=0."""
+    from repro.configs import SpammConfig
+
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    ctx = _ctx()
+    params = M.init_params(cfg, PCFG, jax.random.key(0))
+    inp = _inputs(cfg)
+    h0, _ = M.forward_hidden(cfg, PCFG, ctx, params, inp)
+    sp = SpammConfig(enable=True, tau=0.0, tile=16, backend="jnp",
+                     moe_bmm=True)
+    h1, _ = M.forward_hidden(cfg, PCFG, ctx, params, inp, spamm_cfg=sp)
+    assert float(jnp.max(jnp.abs(h0 - h1))) < 1e-4

@@ -6,11 +6,11 @@ from conftest import run_subprocess
 CODE = r"""
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs.base import MoEConfig
+from repro.launch.mesh import make_mesh
 from repro.models import moe as moe_mod
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 d, e, ff, topk = 32, 8, 16, 2
 base = MoEConfig(num_experts=e, top_k=topk, expert_ff=ff, impl="tp",
                  capacity_factor=8.0)  # no drops → exact equivalence

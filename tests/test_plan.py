@@ -1,0 +1,213 @@
+"""Plan/execute layer: plan reuse is bit-identical to the unplanned call,
+the WeightPlanCache actually hits, and batched execution (`spamm_bmm`)
+matches a per-slice dense-oracle loop on both jnp and interpret backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import module as mod
+from repro.core import plan as pl
+from repro.core import spamm as cs
+from repro.kernels import ops, ref
+
+BACKENDS = ("jnp", "interpret")
+
+
+def _decay(m, n, seed, scale=0.4):
+    rng = np.random.default_rng(seed)
+    d = np.abs(np.arange(m)[:, None] - np.arange(n)[None, :])
+    base = (scale / (d ** 0.5 + 1)).astype(np.float32)
+    return jnp.asarray(base * rng.standard_normal((m, n)).astype(np.float32))
+
+
+# taus that gate a real fraction (~0.5) of tiles on the _decay operands
+TAU64 = 8.0   # at tile=64
+TAU32 = 4.0   # at tile=32
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plan_reuse_bit_identical(backend):
+    """plan+execute == unplanned spamm_matmul, and executing the SAME plan
+    twice returns bit-identical results (the plan is pure data)."""
+    a, b = _decay(192, 256, 0), _decay(256, 320, 1)
+    c_ref, info = ops.spamm_matmul(a, b, TAU64, tile=64, backend=backend)
+    assert 0.0 < float(info["valid_fraction"]) < 1.0  # actually gated
+
+    p = pl.plan(a, b, TAU64, tile=64, backend=backend)
+    c1 = pl.execute(p, a, b)
+    c2 = pl.execute(p, a, b)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_plan_from_norms_matches_plan_from_matrices(backend):
+    a, b = _decay(128, 192, 2), _decay(192, 128, 3)
+    na = ops.tile_norms(a, 64, backend=backend)
+    nb = ops.tile_norms(b, 64, backend=backend)
+    p1 = pl.plan(a, b, TAU64, tile=64, backend=backend)
+    p2 = pl.plan(None, None, TAU64, norm_a=na, norm_b=nb, tile=64,
+                 backend=backend)
+    np.testing.assert_array_equal(np.asarray(p1.mask), np.asarray(p2.mask))
+    np.testing.assert_array_equal(
+        np.asarray(pl.execute(p1, a, b)), np.asarray(pl.execute(p2, a, b))
+    )
+
+
+def test_plan_block_n_super_column_granularity():
+    """block_n > 1 plans gate at super-column granularity — same mask the
+    old inlined ops.spamm_matmul grouping produced, and a superset of the
+    fine mask per member column."""
+    a, b = _decay(256, 256, 4), _decay(256, 256, 5)
+    p1 = pl.plan(a, b, TAU64, tile=64, block_n=1, backend="jnp")
+    p2 = pl.plan(a, b, TAU64, tile=64, block_n=2, backend="jnp")
+    m1, m2 = np.asarray(p1.mask), np.asarray(p2.mask)
+    assert m2.shape == (4, 2, 4)
+    # grouped ⊇ fine for each member column
+    grouped_expanded = np.repeat(m2, 2, axis=1)
+    assert (grouped_expanded | m1).sum() == grouped_expanded.sum()
+
+
+def test_plan_valid_ratio_routes_tau_search():
+    a, b = _decay(256, 256, 6), _decay(256, 256, 7)
+    p = pl.plan(a, b, valid_ratio=0.5, tile=32, backend="jnp")
+    assert 0.3 < float(p.valid_fraction) < 0.7
+
+
+def test_weight_plan_cache_hits_on_repeated_weight():
+    w = _decay(256, 192, 8)
+    cache = pl.WeightPlanCache()
+    wp1, nw1 = cache.weight_side(w, tile=64, backend="jnp")
+    wp2, nw2 = cache.weight_side(w, tile=64, backend="jnp")
+    assert cache.hits == 1 and cache.misses == 1
+    assert wp1 is wp2 and nw1 is nw2
+    np.testing.assert_allclose(
+        np.asarray(nw1), np.asarray(ref.tile_norms_ref(w, 64)), rtol=1e-6
+    )
+    # a different weight misses; a different tile of the same weight misses
+    cache.weight_side(_decay(256, 192, 9), tile=64, backend="jnp")
+    cache.weight_side(w, tile=32, backend="jnp")
+    assert cache.misses == 3 and cache.hits == 1
+
+
+def test_weight_plan_cache_not_poisoned_by_tracers():
+    cache = pl.WeightPlanCache()
+    w = _decay(64, 64, 10)
+
+    @jax.jit
+    def through_jit(w_):
+        wp, nw = cache.weight_side(w_, tile=32, backend="jnp")
+        return nw
+
+    through_jit(w)
+    assert len(cache) == 0 and cache.hits == cache.misses == 0
+
+
+def test_cached_plan_result_matches_uncached():
+    x, w = _decay(96, 256, 11), _decay(256, 128, 12)
+    cache = pl.WeightPlanCache()
+    xp = pl.pad_to_tile(x, 64)
+    for _ in range(2):
+        p, wp = cache.plan_for(xp, w, TAU64, tile=64, backend="jnp")
+        got = pl.execute(p, xp, wp)[: x.shape[0], : w.shape[1]]
+        want, _ = cs.spamm(x, w, TAU64, tile=64, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert cache.hits == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("shared_w", [True, False])
+def test_spamm_bmm_matches_dense_oracle_per_slice(backend, shared_w):
+    """spamm_bmm == a python loop of single-product SpAMM oracles, for both
+    the shared-weight (B,M,K)@(K,N) and per-batch (B,M,K)@(B,K,N) shapes."""
+    bsz, m, k, n = 3, 96, 128, 160
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(
+        np.stack([np.asarray(_decay(m, k, 20 + i)) for i in range(bsz)])
+    )
+    if shared_w:
+        w = _decay(k, n, 14)
+        w_i = lambda i: w
+    else:
+        w = jnp.asarray(
+            np.stack([np.asarray(_decay(k, n, 30 + i)) for i in range(bsz)])
+        )
+        w_i = lambda i: w[i]
+
+    got, info = pl.spamm_bmm(x, w, TAU32, tile=32, backend=backend)
+    assert 0.0 < float(info.valid_fraction) < 1.0  # actually gated
+    assert got.shape == (bsz, m, n)
+    for i in range(bsz):
+        # dense oracle: blocked masked einsum on the padded slice
+        want = ref.spamm_matmul_ref(x[i], w_i(i), TAU32, 32)
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(want), atol=2e-4
+        )
+
+
+def test_spamm_bmm_shared_weight_uses_cache():
+    x = jnp.stack([_decay(64, 128, 40 + i) for i in range(2)])
+    w = _decay(128, 96, 41)
+    cache = pl.WeightPlanCache()
+    c1, _ = pl.spamm_bmm(x, w, TAU32, tile=32, backend="jnp", cache=cache)
+    c2, _ = pl.spamm_bmm(x, w, TAU32, tile=32, backend="jnp", cache=cache)
+    assert cache.hits == 1 and cache.misses == 1
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_spamm_bmm_per_batch_weights_use_cache():
+    """The MoE-shaped (B, K, N) weight side is cacheable too: one reshaped
+    get-norm pass, cached on identity, results unchanged."""
+    x = jnp.stack([_decay(64, 128, 42 + i) for i in range(2)])
+    wb = jnp.stack([_decay(128, 96, 44 + i) for i in range(2)])
+    cache = pl.WeightPlanCache()
+    c1, _ = pl.spamm_bmm(x, wb, TAU32, tile=32, backend="jnp", cache=cache)
+    c2, _ = pl.spamm_bmm(x, wb, TAU32, tile=32, backend="jnp", cache=cache)
+    assert cache.hits == 1 and cache.misses == 1
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    c3, _ = pl.spamm_bmm(x, wb, TAU32, tile=32, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c3))
+
+
+def test_spamm_bmm_valid_ratio_requires_shared_weight():
+    x = jnp.stack([_decay(64, 64, 50), _decay(64, 64, 51)])
+    wb = jnp.stack([_decay(64, 64, 52), _decay(64, 64, 53)])
+    with pytest.raises(ValueError):
+        pl.spamm_bmm(x, wb, valid_ratio=0.5, tile=32, backend="jnp")
+
+
+def test_plan_is_a_pytree():
+    """Plans pass through jit: execute can be jitted with the plan as arg."""
+    a, b = _decay(128, 128, 60), _decay(128, 128, 61)
+    p = pl.plan(a, b, TAU32, tile=32, backend="jnp")
+    jit_exec = jax.jit(pl.execute)
+    c1 = jit_exec(p, a, b)
+    c2 = pl.execute(p, a, b)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+
+
+def test_spamm_linear_with_context_matches_config_path():
+    from repro.configs import SpammConfig
+
+    x = _decay(80, 128, 70)
+    w = _decay(128, 96, 71)
+    cfg = SpammConfig(enable=True, tau=TAU32, tile=32, backend="jnp")
+    y_cfg = mod.maybe_spamm_matmul(x, w, cfg)
+    ctx = mod.SpammContext(cfg)
+    y_ctx1 = mod.maybe_spamm_matmul(x, w, ctx)
+    y_ctx2 = mod.maybe_spamm_matmul(x, w, ctx)  # second call hits the cache
+    np.testing.assert_array_equal(np.asarray(y_cfg), np.asarray(y_ctx1))
+    np.testing.assert_array_equal(np.asarray(y_ctx1), np.asarray(y_ctx2))
+    assert ctx.cache.hits >= 1
+
+
+def test_count_valid_large_grid_no_int32_overflow():
+    """gm·gk·gn > 2³¹: the ratio must come back ≈ 1.0 at τ=0, not garbage
+    from an int32 wraparound."""
+    g = 1300  # 1300³ ≈ 2.2e9 > 2³¹
+    na = jnp.ones((g, g), jnp.float32)
+    nb = jnp.ones((g, g), jnp.float32)
+    ratio = float(cs.valid_ratio_of(na, nb, 0.0))
+    assert abs(ratio - 1.0) < 1e-3, ratio
