@@ -1,0 +1,92 @@
+"""Plan-construction cost: flat vs. hierarchical (norm-pyramid) gating.
+
+The flat gate always evaluates the full O(gm·gn·gk) product tensor; the
+hierarchical planner gates the coarsest pyramid level first and refines only
+inside surviving coarse blocks, so its cost tracks the surviving candidate
+set instead of the grid volume. On banded-decay normmaps (the paper's
+workload) the pruned fraction grows with the grid, which is where the
+pyramid pays off — the sweep reports it per cell.
+
+Cells sweep square tile grids and, in the full run, a 1024×1024 A-side tile
+grid (the acceptance scale; gn kept moderate so the flat baseline stays
+runnable at all). Both paths start from precomputed normmaps, so the timing
+isolates plan construction (the get-norm pass is shared and identical).
+
+Output derived column: valid=<fine valid fraction>;pruned=<fraction of
+coarse blocks the coarse gate removed>;speedup=<flat/hier>.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import plan as planner
+
+
+def _banded_norms(g1: int, g2: int, band: float, seed: int) -> jnp.ndarray:
+    """Synthetic banded-decay normmap: exp(-|i-j|/band) with jitter — the
+    normmap an exponential-decay matrix produces, generated directly so the
+    sweep reaches 1024² tile grids without materializing a 65k² matrix."""
+    rng = np.random.default_rng(seed)
+    d = np.abs(np.arange(g1, dtype=np.float32)[:, None]
+               - np.arange(g2, dtype=np.float32)[None, :])
+    nm = np.exp(-d / band) * rng.uniform(0.5, 1.0, (g1, g2)).astype(np.float32)
+    return jnp.asarray(nm.astype(np.float32))
+
+
+def _tau_for(na, nb, frac: float) -> float:
+    """τ putting ~frac of sampled norm products above threshold."""
+    rng = np.random.default_rng(0)
+    a, b = np.asarray(na), np.asarray(nb)
+    i = rng.integers(0, a.shape[0], 4096)
+    k = rng.integers(0, a.shape[1], 4096)
+    j = rng.integers(0, b.shape[1], 4096)
+    return float(np.quantile(a[i, k] * b[k, j], 1.0 - frac))
+
+
+def run(quick: bool = False):
+    # (gm, gn, gk) tile grids; band scales with grid so the valid band stays
+    # a roughly constant tile-width (decay matrices at growing N)
+    cells = [(64, 64, 64), (128, 128, 128)] if quick else [
+        (128, 128, 128), (256, 256, 256), (512, 512, 512), (1024, 16, 1024),
+    ]
+    levels = 3
+    for gm, gn, gk in cells:
+        band = max(gm // 64, 2)
+        na = _banded_norms(gm, gk, band, 1)
+        nb = _banded_norms(gk, gn, band, 2)
+        tau = _tau_for(na, nb, 0.02)
+
+        def flat():
+            return planner.plan(None, None, tau, norm_a=na, norm_b=nb,
+                                backend="jnp")
+
+        def hier():
+            return planner.plan(None, None, tau, norm_a=na, norm_b=nb,
+                                backend="jnp", levels=levels)
+
+        p_flat = flat()
+        p_hier = hier()
+        assert np.array_equal(np.asarray(p_flat.mask), np.asarray(p_hier.mask))
+        valid = float(p_hier.valid_fraction)
+
+        pyr_a = planner.NormPyramid.from_normmap(na, levels)
+        pyr_b = planner.NormPyramid.from_normmap(nb, levels)
+        coarse = np.asarray(pyr_a.coarse)[:, None, :] * \
+            np.asarray(pyr_b.coarse).T[None]
+        pruned = float(np.mean(coarse < tau))
+
+        t_flat = timeit(flat)
+        t_hier = timeit(hier)
+        derived = (f"grid={gm}x{gn}x{gk};valid={valid:.4f};"
+                   f"pruned={pruned:.3f};speedup={t_flat / t_hier:.2f}x")
+        row(f"pyramid_gating/flat/{gm}x{gn}x{gk}", t_flat, derived)
+        row(f"pyramid_gating/hier/{gm}x{gn}x{gk}", t_hier, derived)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import header
+
+    header()
+    run()

@@ -20,8 +20,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernel_blocks, kernels_micro, loadbalance,
-                            plan_cache, roofline, table1_taus, table2_dense,
-                            table3_sparse, table4_ergo, table5_vgg)
+                            plan_cache, pyramid_gating, roofline, table1_taus,
+                            table2_dense, table3_sparse, table4_ergo,
+                            table5_vgg)
     from benchmarks.common import header
 
     mods = {
@@ -34,6 +35,7 @@ def main() -> None:
         "kernels": kernels_micro,
         "kernel_blocks": kernel_blocks,
         "plan_cache": plan_cache,
+        "pyramid_gating": pyramid_gating,
         "roofline": roofline,
     }
     header()

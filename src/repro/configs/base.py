@@ -25,11 +25,19 @@ class SpammConfig:
     block_n: int = 1                    # super-column width in the mm kernel
     backend: str = "auto"               # pallas | interpret | jnp | auto
     bwd: str = "dense"                  # dense | spamm gradient path
+    levels: int = 0                     # norm-pyramid coarsening steps for
+                                        # hierarchical gating (0 = flat); the
+                                        # coarsest gate runs at coarse_tile
     moe_bmm: bool = False               # inference-only: run MoE grouped FFNs
                                         # through the batched spamm_bmm path
                                         # (per-expert weight plans; grads flow
                                         # through the gated product, so keep
                                         # False for bwd="dense" training)
+
+    @property
+    def coarse_tile(self) -> int:
+        """Tile size of the coarsest pyramid level (== tile when flat)."""
+        return self.tile * (2 ** self.levels)
 
 
 @dataclass(frozen=True)

@@ -29,6 +29,31 @@ from repro.core import plan as _plan
 from repro.core import schedule as _schedule
 
 
+def _resolve_schedule(a, b, tau, num_devices, *, tile, backend,
+                      sched_levels: int) -> str:
+    """schedule="auto": pick contiguous/cyclic from a coarse work estimate.
+
+    Builds norm pyramids for both operands and evaluates the §3.5.1 V matrix
+    at the coarsest level that still gives every device ≥ 1 coarse row — the
+    estimate costs one get-norm pass plus an 8^level-reduced gating sweep,
+    cheap enough to re-run per step as operands evolve. Traced operands
+    can't steer a Python-level decision, so under jit the paper default
+    ('contiguous') is kept.
+    """
+    if isinstance(a, jax.core.Tracer) or isinstance(b, jax.core.Tracer):
+        return "contiguous"
+    gm = a.shape[0] // tile
+    # keep ≥ 2 coarse rows per device: with exactly one, cyclic and
+    # contiguous assign identically and the estimate can't tell them apart
+    lv = 0
+    while lv < sched_levels and (gm >> (lv + 1)) >= 2 * num_devices:
+        lv += 1
+    pyr_a = _plan.NormPyramid.build(a, lv, tile=tile, backend=backend)
+    pyr_b = _plan.NormPyramid.build(b, lv, tile=tile, backend=backend)
+    v = _schedule.v_matrix(pyr_a, pyr_b, tau, level=lv)
+    return _schedule.auto_schedule(v, num_devices)
+
+
 def _local_spamm(a_loc, b, tau, tile, backend, block_n):
     # gating on the device-local shard: plans are built per shard (each
     # shard's normmap slice is its own) and executed in place — the same
@@ -49,6 +74,7 @@ def spamm_rowpart(
     backend: str = "auto",
     block_n: int = 1,
     schedule: str = "contiguous",
+    sched_levels: int = 3,
 ):
     """Paper §3.4: row-partition C over `axis`, B replicated.
 
@@ -57,13 +83,19 @@ def spamm_rowpart(
     NOTE: permutes tile-rows *inside the step*, which lowers to a large
     collective; production jobs should store A pre-permuted and pass
     'pre_permuted', which is free: identical HLO to contiguous with cyclic
-    balance. See EXPERIMENTS.md §Perf c1), or 'pre_permuted'.
+    balance. See EXPERIMENTS.md §Perf c1), 'pre_permuted', or 'auto'
+    (coarse norm-pyramid work estimate at ≤ `sched_levels` coarsening steps
+    picks contiguous vs cyclic per call).
     Returns (C, mean_valid_fraction).
     """
     m, k = a.shape
     ndev = mesh.shape[axis]
     gm = m // tile
     assert gm % ndev == 0, (gm, ndev)
+    if schedule == "auto":
+        schedule = _resolve_schedule(a, b, tau, ndev, tile=tile,
+                                     backend=backend,
+                                     sched_levels=sched_levels)
 
     in_step_perm = schedule == "cyclic"
     if in_step_perm:
@@ -109,13 +141,15 @@ def spamm_2d(
     backend: str = "auto",
     block_n: int = 1,
     schedule: str = "contiguous",
+    sched_levels: int = 3,
 ):
     """Beyond-paper SUMMA-style 2-D SpAMM.
 
     A sharded (rows over row_axis, K over col_axis); B sharded (K over
     col_axis); C comes back sharded (rows over row_axis, cols over col_axis)
     via psum_scatter. Norm gating happens on local k-slices — exact.
-    Returns (C, mean_valid_fraction).
+    schedule='auto' picks contiguous/cyclic from the coarse work estimate
+    (see `spamm_rowpart`). Returns (C, mean_valid_fraction).
     """
     m, k = a.shape
     row_axes = row_axis if isinstance(row_axis, tuple) else (row_axis,)
@@ -125,6 +159,10 @@ def spamm_2d(
     ncol = mesh.shape[col_axis]
     gm = m // tile
     assert gm % nrow == 0 and (k // tile) % ncol == 0
+    if schedule == "auto":
+        schedule = _resolve_schedule(a, b, tau, nrow, tile=tile,
+                                     backend=backend,
+                                     sched_levels=sched_levels)
 
     in_step_perm = schedule == "cyclic"
     if in_step_perm:

@@ -36,13 +36,22 @@ class SpammContext:
 
     Hashed by identity (usable as a jit static / custom_vjp nondiff arg);
     create one per model/engine, not per call.
+
+    Gating telemetry: between `begin_stats()` and `end_stats()` every gated
+    GEMM taps its plan's valid_fraction through `jax.experimental.io_callback`
+    — an effectful host callback, so it survives jit AND lax.scan-over-layers
+    (the values materialize at *execution* time, per compiled call, not at
+    trace time). The serving engine brackets each request wave with
+    begin/end and attaches the drained stats to the request metadata.
     """
 
-    __slots__ = ("cfg", "cache")
+    __slots__ = ("cfg", "cache", "_taps", "_collect")
 
     def __init__(self, cfg: Any, cache: Optional[WeightPlanCache] = None):
         self.cfg = cfg
         self.cache = cache if cache is not None else WeightPlanCache()
+        self._taps: list = []
+        self._collect = False
 
     def __repr__(self):
         return f"SpammContext({self.cfg!r}, cache={len(self.cache)} entries)"
@@ -50,6 +59,41 @@ class SpammContext:
     @property
     def enable(self) -> bool:
         return bool(getattr(self.cfg, "enable", False))
+
+    # -- gating telemetry ---------------------------------------------------
+    def begin_stats(self):
+        """Start collecting per-GEMM valid fractions (must be called before
+        the first trace of the step that should report them)."""
+        self._taps = []
+        self._collect = True
+
+    def _record(self, f):
+        # host side of the tap; re-check _collect at RUN time — once a
+        # callback is embedded in a compiled function it fires on every
+        # execution, including ones outside a begin/end window
+        if self._collect:
+            self._taps.append(float(f))
+
+    def tap(self, valid_fraction):
+        """Record one gated GEMM's valid fraction (no-op unless collecting).
+
+        The callback embeds into whatever computation is being traced, so a
+        jitted prefill reports fractions on every execution."""
+        if not self._collect:
+            return
+        from jax.experimental import io_callback  # deferred: cheap import
+
+        io_callback(
+            self._record, None,
+            jnp.asarray(valid_fraction, jnp.float32), ordered=False,
+        )
+
+    def end_stats(self):
+        """Stop collecting and drain: list of per-GEMM valid fractions tapped
+        since `begin_stats` (empty when no gated GEMM executed)."""
+        taps, self._taps = self._taps, []
+        self._collect = False
+        return taps
 
 
 def as_context(spamm_cfg) -> Optional[SpammContext]:
@@ -71,7 +115,7 @@ def _flatten_pad(x, tile):
 
 
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
 )
 def spamm_linear(
     x: jax.Array,
@@ -82,40 +126,46 @@ def spamm_linear(
     bwd: str = "dense",
     block_n: int = 1,
     ctx: Optional[SpammContext] = None,
+    levels: int = 0,
 ) -> jax.Array:
     """y[..., n] = SpAMM(x[..., k] @ w[k, n], tau). Output dtype follows x.
 
     `ctx` (optional, static) supplies the WeightPlanCache so eager callers
-    (serving) pay the weight-side gating once per weight.
+    (serving) pay the weight-side gating once per weight. `levels` > 0 plans
+    hierarchically over the norm pyramid (mask unchanged, planning cheaper;
+    the weight-side pyramid is what the cache then holds).
     """
-    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n, ctx)
+    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
     return y
 
 
-def _fwd_impl(x, w, tau, tile, backend, block_n, ctx):
+def _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels=0):
     """Plan + execute one gated GEMM; returns (y, plan)."""
     xp, (lead, m, k) = _flatten_pad(x, tile)
     n = w.shape[-1]
     if ctx is not None:
         p, wp = ctx.cache.plan_for(
-            xp, w, tau, tile=tile, block_n=block_n, backend=backend
+            xp, w, tau, tile=tile, block_n=block_n, backend=backend,
+            levels=levels,
         )
+        ctx.tap(p.valid_fraction)
     else:
         wp = pad_to_tile(w, tile)
-        p = _plan.plan(xp, wp, tau, tile=tile, block_n=block_n, backend=backend)
+        p = _plan.plan(xp, wp, tau, tile=tile, block_n=block_n,
+                       backend=backend, levels=levels)
     c = _plan.execute(p, xp, wp)
     y = c[:m, :n].reshape(*lead, n).astype(x.dtype)
     return y, p
 
 
-def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n, ctx):
-    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx)
+def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n, ctx, levels):
+    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
     # residuals carry the forward normmaps so bwd="spamm" replans without
     # re-running get-norm on x or w
     return y, (x, w, tau, p.norm_a, p.norm_b)
 
 
-def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, res, g):
+def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, levels, res, g):
     x, w, tau, norm_x, norm_w = res
     lead = x.shape[:-1]
     k, n = w.shape
@@ -157,11 +207,12 @@ def spamm_bmm_linear(x: jax.Array, w: jax.Array, spamm_ctx) -> jax.Array:
     FFN shape — via `core.plan.spamm_bmm` with a shared τ. Forward-gated
     only (used on inference/eval paths; training MoE keeps dense grads)."""
     cfg = spamm_ctx.cfg
-    c, _ = _plan.spamm_bmm(
+    c, info = _plan.spamm_bmm(
         x, w, jnp.asarray(cfg.tau, jnp.float32),
         tile=cfg.tile, block_n=cfg.block_n, backend=cfg.backend,
-        cache=spamm_ctx.cache,
+        cache=spamm_ctx.cache, levels=getattr(cfg, "levels", 0),
     )
+    spamm_ctx.tap(info.valid_fraction)
     return c.astype(x.dtype)
 
 
@@ -182,4 +233,5 @@ def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any) -> jax.Array:
         cfg.bwd,
         cfg.block_n,
         ctx,
+        getattr(cfg, "levels", 0),
     )

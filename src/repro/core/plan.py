@@ -17,12 +17,25 @@ super-column grouping, compaction); every other call site
 `core.distributed.spamm_rowpart/_2d`) builds a `SpammPlan` here and runs it
 through `execute`.
 
+Hierarchical (norm-pyramid) gating: the original SpAMM is a *recursive*
+algorithm; the flat one-level gate re-derived here costs O(gm·gn·gk) norm
+products regardless of sparsity. Since a coarse tile's Frobenius norm
+upper-bounds every sub-tile's norm, a coarse-level τ-test that fails rules
+out every fine pair inside it — so a `NormPyramid` (levels of sqrt-sumsq
+pooled normmaps) gives *exact* coarse-to-fine pruning: `plan(..., levels=L)`
+gates at the coarsest level first and refines only inside surviving coarse
+blocks, producing a mask bit-identical to flat gating while plan
+construction becomes sub-linear in the pruned region.
+
 API:
   plan(a, b, tau | valid_ratio=...)  → SpammPlan   (or from precomputed
-                                       normmaps via norm_a= / norm_b=)
+                                       normmaps via norm_a= / norm_b=;
+                                       levels=L turns on pyramid gating)
   execute(plan, a, b)                → C
+  NormPyramid                        — coarse-to-fine normmap stack
+  hier_gate_mask(pyr_a, pyr_b, tau)  — coarse-to-fine mask (≡ gate_mask)
   WeightPlanCache                    — per-weight gating artifacts, keyed on
-                                       weight identity/shape/tile
+                                       weight identity/shape/tile/levels
   spamm_bmm(x, w, tau)               — batched (B,M,K)@(K,N) / (B,K,N) with
                                        the weight-side plan shared across
                                        the batch
@@ -55,6 +68,94 @@ def pad_to_tile(x: jax.Array, tile: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# NormPyramid — coarse-to-fine normmap stack
+# ---------------------------------------------------------------------------
+
+# Relative slack applied to τ at coarse levels only: coarse norms are computed
+# in fp32 (sqrt of pooled sumsq), so a coarse product can round a hair below a
+# fine product it mathematically dominates. The slack widens the candidate set
+# (never prunes extra), keeping the level-0 test — which is exactly the flat
+# gate — the sole decider of the final mask. Bit-identity to flat gating is
+# therefore unconditional; 1e-5 covers the fp32 rounding of several pooling
+# levels with orders of magnitude to spare.
+_COARSE_SLACK = 1e-5
+
+
+@jax.tree_util.register_pytree_node_class
+class NormPyramid:
+    """Coarse-to-fine stack of normmaps for one operand side.
+
+    levels[0] is the plain normmap at `tile`; levels[l] ceil-halves each grid
+    dim of levels[l-1] by sqrt-of-sumsq pooling, so levels[l][I, J] is the
+    exact Frobenius norm of the (tile·2^l)² block (zero-padded at ragged
+    edges) and upper-bounds every descendant tile norm. Built from ONE
+    get-norm pass over the matrix plus `num_levels` cheap reductions.
+
+    A pytree (children = the level arrays), so pyramids pass through
+    jit/vmap and live in caches exactly like plain normmaps.
+    """
+
+    def __init__(self, levels, *, tile: int):
+        self.levels = tuple(levels)
+        self.tile = tile
+
+    def tree_flatten(self):
+        return self.levels, (self.tile,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children, tile=aux[0])
+
+    @property
+    def base(self) -> jax.Array:
+        """The finest normmap — what flat gating / SpammPlan.norm_* store."""
+        return self.levels[0]
+
+    @property
+    def coarse(self) -> jax.Array:
+        return self.levels[-1]
+
+    @property
+    def num_levels(self) -> int:
+        """Number of coarsening steps (0 ⇒ just the flat normmap)."""
+        return len(self.levels) - 1
+
+    @property
+    def coarse_tile(self) -> int:
+        return self.tile * (2 ** self.num_levels)
+
+    def extended(self, levels: int) -> "NormPyramid":
+        """This pyramid deepened to `levels` coarsening steps (no-op if
+        already at least that deep) — pools from the current coarsest."""
+        if self.num_levels >= levels:
+            return self
+        lv = list(self.levels)
+        for _ in range(levels - self.num_levels):
+            lv.append(kref.pool_norms_ref(lv[-1]))
+        return NormPyramid(lv, tile=self.tile)
+
+    @classmethod
+    def from_normmap(cls, normmap: jax.Array, levels: int, *, tile: int = 64
+                     ) -> "NormPyramid":
+        """Pyramid from an existing finest normmap (reuses the get-norm pass
+        that produced it; each level is one pooling reduction)."""
+        lv = [normmap]
+        for _ in range(levels):
+            lv.append(kref.pool_norms_ref(lv[-1]))
+        return cls(lv, tile=tile)
+
+    @classmethod
+    def build(cls, x: jax.Array, levels: int, *, tile: int = 64,
+              backend: str = "auto", use_mxu: bool = False) -> "NormPyramid":
+        """Pyramid from the matrix via the backend's pyramid_norms kernel."""
+        return cls(
+            kops.pyramid_norms(x, tile, levels, backend=backend,
+                               use_mxu=use_mxu),
+            tile=tile,
+        )
+
+
+# ---------------------------------------------------------------------------
 # SpammPlan
 # ---------------------------------------------------------------------------
 
@@ -79,11 +180,13 @@ class SpammPlan:
       nvalid      (gm, gn//block_n) int32, or None (as above)
       valid_tiles i32 scalar — Σ mask
 
-    Static metadata (aux): tile, block_n, backend (resolved name).
+    Static metadata (aux): tile, block_n, backend (resolved name), levels
+    (pyramid coarsening steps the mask was gated with; 0 = flat — the mask is
+    bit-identical either way, `levels` only records how it was built).
     """
 
     def __init__(self, tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
-                 *, tile: int, block_n: int, backend: str):
+                 *, tile: int, block_n: int, backend: str, levels: int = 0):
         self.tau = tau
         self.norm_a = norm_a
         self.norm_b = norm_b
@@ -94,17 +197,19 @@ class SpammPlan:
         self.tile = tile
         self.block_n = block_n
         self.backend = backend
+        self.levels = levels
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         children = (self.tau, self.norm_a, self.norm_b, self.mask,
                     self.kidx, self.nvalid, self.valid_tiles)
-        return children, (self.tile, self.block_n, self.backend)
+        return children, (self.tile, self.block_n, self.backend, self.levels)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        tile, block_n, backend = aux
-        return cls(*children, tile=tile, block_n=block_n, backend=backend)
+        tile, block_n, backend, levels = aux
+        return cls(*children, tile=tile, block_n=block_n, backend=backend,
+                   levels=levels)
 
     # -- derived quantities -------------------------------------------------
     @property
@@ -117,10 +222,19 @@ class SpammPlan:
         return self.valid_tiles / self.total_tiles
 
     def info(self) -> dict:
-        """The info dict `kernels.ops.spamm_matmul` has always returned."""
+        """The info dict `kernels.ops.spamm_matmul` has always returned.
+
+        `nvalid` is the per-(i, j) valid-k count (the paper's validNum). The
+        compacted copy is reused when the backend built one; backends that
+        gate straight from the bitmap get the same counts summed from it.
+        """
+        nvalid = self.nvalid
+        if nvalid is None:
+            nvalid = jnp.sum(self.mask, axis=-1, dtype=jnp.int32)
         return {
             "norm_a": self.norm_a,
             "norm_b": self.norm_b,
+            "nvalid": nvalid,
             "valid_tiles": self.valid_tiles,
             "total_tiles": self.total_tiles,
             "valid_fraction": self.valid_fraction,
@@ -148,11 +262,142 @@ def gate_mask(norm_a: jax.Array, norm_b: jax.Array, tau, block_n: int = 1):
     return kref.spamm_mask_ref(norm_a, norm_b, tau)
 
 
+# children of one coarse (i, j, k) triple: the 2×2×2 refinement offsets,
+# kept as three separate contiguous columns — strided (N, 3) row layout
+# costs ~2.5× on the gather-heavy descent below
+_OFF_I = np.array([i for i in (0, 1) for _ in (0, 1) for _ in (0, 1)], np.int32)
+_OFF_J = np.array([j for _ in (0, 1) for j in (0, 1) for _ in (0, 1)], np.int32)
+_OFF_K = np.array([k for _ in (0, 1) for _ in (0, 1) for k in (0, 1)], np.int32)
+
+
+def _hier_mask_host(la, lb, tau: float) -> np.ndarray:
+    """Sparse coarse-to-fine descent on concrete normmaps (numpy).
+
+    la/lb: per-level np normmaps, finest first. Gates the full (tiny)
+    coarsest level, then repeatedly expands only the SURVIVING triples into
+    their 2×2×2 children — work is O(coarse grid + surviving candidates), not
+    O(gm·gn·gk), which is what makes plan construction sub-linear in the
+    pruned region. The level-0 test is the exact flat gate, so the scattered
+    result is bit-identical to `gate_mask`.
+    """
+    top = len(la) - 1
+    tau_c = tau - _COARSE_SLACK * abs(tau)
+    na, nb = la[top], lb[top]
+    cand = na[:, None, :] * np.swapaxes(nb, 0, 1)[None] >= (tau_c if top else tau)
+    ii, jj, kk = [x.astype(np.int32) for x in np.nonzero(cand)]
+    for l in range(top - 1, -1, -1):
+        gm_l, gk_l = la[l].shape
+        gn_l = lb[l].shape[1]
+        if ii.shape[0] == 0:
+            break
+        i2 = (ii[:, None] * 2 + _OFF_I[None]).ravel()
+        j2 = (jj[:, None] * 2 + _OFF_J[None]).ravel()
+        k2 = (kk[:, None] * 2 + _OFF_K[None]).ravel()
+        # ceil-pooled coarse grids overhang ragged fine edges — drop phantoms
+        keep = (i2 < gm_l) & (j2 < gn_l) & (k2 < gk_l)
+        if not keep.all():
+            i2, j2, k2 = i2[keep], j2[keep], k2[keep]
+        vals = la[l][i2, k2] * lb[l][k2, j2]
+        s = vals >= (tau if l == 0 else tau_c)
+        ii, jj, kk = i2[s], j2[s], k2[s]
+    gm, gk = la[0].shape
+    gn = lb[0].shape[1]
+    mask = np.zeros(gm * gn * gk, bool)
+    if ii.shape[0]:
+        mask[(ii.astype(np.int64) * gn + jj) * gk + kk] = True
+    return mask.reshape(gm, gn, gk)
+
+
+def _hier_mask_traced(la, lb, tau) -> jax.Array:
+    """Dense traceable analogue of `_hier_mask_host` for jit'd callers.
+
+    Upsamples the surviving-candidate set level by level and ANDs it with
+    each level's gate. No asymptotic saving inside jit (the arrays stay
+    dense), but the same exactness argument applies: the candidate set is a
+    superset of the flat mask, and the final level applies the exact flat
+    test — so cand ∧ flat ≡ flat, bit-identical.
+    """
+    top = len(la) - 1
+    tau = jnp.asarray(tau, jnp.float32)
+    tau_c = tau - _COARSE_SLACK * jnp.abs(tau)
+    cand = (la[top][:, None, :] * jnp.swapaxes(lb[top], 0, 1)[None]
+            >= (tau_c if top else tau))
+    for l in range(top - 1, -1, -1):
+        gm_l, gk_l = la[l].shape
+        gn_l = lb[l].shape[1]
+        cand = jnp.repeat(jnp.repeat(jnp.repeat(cand, 2, 0), 2, 1), 2, 2)
+        cand = cand[:gm_l, :gn_l, :gk_l]
+        t = tau if l == 0 else tau_c
+        cand = cand & (la[l][:, None, :] * jnp.swapaxes(lb[l], 0, 1)[None] >= t)
+    return cand
+
+
+def hier_gate_mask(pyr_a: NormPyramid, pyr_b: NormPyramid, tau,
+                   block_n: int = 1):
+    """Coarse-to-fine validity bitmap — bit-identical to `gate_mask` on the
+    finest normmaps (the exactness invariant: a failing coarse product
+    upper-bounds, hence rules out, every fine product inside it).
+
+    Concrete operands take the sparse numpy descent (sub-linear in the
+    pruned region — the eager planning hot path) and return a HOST (numpy)
+    bitmap, letting the planner count valid tiles without an accelerator
+    round-trip; traced operands fall back to a dense but jit-compatible
+    refinement returning a traced array.
+    """
+    levels = min(pyr_a.num_levels, pyr_b.num_levels)
+    la = list(pyr_a.levels[: levels + 1])
+    lb = list(pyr_b.levels[: levels + 1])
+    traced = any(isinstance(x, jax.core.Tracer) for x in la + lb + [tau])
+    if traced:
+        mask = _hier_mask_traced(la, lb, tau)
+    else:
+        mask = _hier_mask_host(
+            [np.asarray(x) for x in la],
+            [np.asarray(x) for x in lb],
+            float(np.asarray(tau)),
+        )
+    if block_n > 1:
+        gm, gn, gk = mask.shape
+        assert gn % block_n == 0, (gn, block_n)
+        grouped = mask.reshape(gm, gn // block_n, block_n, gk)
+        mask = grouped.any(2) if isinstance(mask, np.ndarray) else \
+            jnp.any(grouped, axis=2)
+    return mask
+
+
 def _maybe_compact(mask, backend: str):
     """map_offset compaction (§3.3) when the backend's kernel consumes it."""
     if kops.get_backend(backend).needs_compaction:
         return kref.spamm_compact_ref(mask)
     return None, None
+
+
+def _any_traced(vals) -> bool:
+    """True if any operand (matrix, normmap, pyramid level, or τ) is a
+    tracer — i.e. plan() is being called under jit/vmap."""
+    for v in vals:
+        if isinstance(v, NormPyramid):
+            if any(isinstance(l, jax.core.Tracer) for l in v.levels):
+                return True
+        elif isinstance(v, jax.core.Tracer):
+            return True
+    return False
+
+
+def _side_pyramid(norm, x, levels: int, tile: int, bk, use_mxu: bool,
+                  side: str) -> NormPyramid:
+    """Resolve one operand side (matrix / normmap / pyramid) to a pyramid
+    with at least `levels` coarsening steps."""
+    if isinstance(norm, NormPyramid):
+        return norm.extended(levels)
+    if norm is not None:
+        return NormPyramid.from_normmap(norm, levels, tile=tile)
+    if x is None:
+        raise ValueError(f"need `{side}` or `norm_{side}`")
+    return NormPyramid(
+        kops.pyramid_norms(x, tile, levels, backend=bk.name, use_mxu=use_mxu),
+        tile=tile,
+    )
 
 
 def plan(
@@ -161,45 +406,91 @@ def plan(
     tau=None,
     *,
     valid_ratio=None,
-    norm_a: Optional[jax.Array] = None,
-    norm_b: Optional[jax.Array] = None,
+    norm_a=None,
+    norm_b=None,
     tile: int = 64,
     block_n: int = 1,
     backend: str = "auto",
     use_mxu_norm: bool = False,
+    levels: int = 0,
 ) -> SpammPlan:
     """Build the gating phase for (M, K) @ (K, N), dims divisible by tile
     (and N by tile·block_n) — pad upstream (see `pad_to_tile` /
     `core.spamm.spamm`).
 
     Either side may be given as the matrix (positional) or as a precomputed
-    normmap (norm_a= / norm_b= keywords; the matrix argument may then be
-    omitted). Exactly one of `tau` / `valid_ratio` must be set; valid_ratio
-    runs the §3.5.2 τ-search on the normmaps.
+    normmap / NormPyramid (norm_a= / norm_b= keywords; the matrix argument
+    may then be omitted). Exactly one of `tau` / `valid_ratio` must be set;
+    valid_ratio runs the §3.5.2 τ-search on the normmaps.
+
+    levels > 0 (or a NormPyramid operand) switches to hierarchical gating:
+    coarse-to-fine refinement over the norm pyramid. The resulting mask is
+    bit-identical to flat gating (levels=0); what changes is the cost of
+    building it — sub-linear in the pruned region for concrete operands —
+    and a coarse-first τ-search when valid_ratio is given. Under jit
+    (traced operands) the plan silently downgrades to flat gating: the mask
+    is identical and the sparse descent can't run there, so `levels` is
+    free on compiled paths rather than an overhead.
     """
     if (tau is None) == (valid_ratio is None):
         raise ValueError("give exactly one of tau / valid_ratio")
     bk = kops.get_backend(backend)
-    if norm_a is None:
-        if a is None:
-            raise ValueError("need `a` or `norm_a`")
-        norm_a = bk.norms(a, tile, use_mxu=use_mxu_norm)
-    if norm_b is None:
-        if b is None:
-            raise ValueError("need `b` or `norm_b`")
-        norm_b = bk.norms(b, tile, use_mxu=use_mxu_norm)
 
-    if valid_ratio is not None:
-        from repro.core.tau_search import search_tau  # circular-safe
+    hier = (levels > 0 or isinstance(norm_a, NormPyramid)
+            or isinstance(norm_b, NormPyramid))
+    if hier and _any_traced((a, b, norm_a, norm_b, tau)):
+        # Under jit the sparse descent can't run and the dense traced
+        # refinement produces the SAME mask as flat gating for strictly more
+        # work — downgrade to flat so `levels` is free on compiled paths
+        # (jitted prefill) while eager callers keep the hierarchical win.
+        # hier_gate_mask stays available for traced callers who want the
+        # level-by-level refinement explicitly.
+        if isinstance(norm_a, NormPyramid):
+            norm_a = norm_a.base
+        if isinstance(norm_b, NormPyramid):
+            norm_b = norm_b.base
+        hier = False
+    if hier:
+        want = max(
+            levels,
+            norm_a.num_levels if isinstance(norm_a, NormPyramid) else 0,
+            norm_b.num_levels if isinstance(norm_b, NormPyramid) else 0,
+        )
+        pyr_a = _side_pyramid(norm_a, a, want, tile, bk, use_mxu_norm, "a")
+        pyr_b = _side_pyramid(norm_b, b, want, tile, bk, use_mxu_norm, "b")
+        norm_a, norm_b = pyr_a.base, pyr_b.base
+        if valid_ratio is not None:
+            from repro.core.tau_search import search_tau_pyramid  # circular-safe
 
-        tau, _ = search_tau(norm_a, norm_b, valid_ratio)
-    tau = jnp.asarray(tau, jnp.float32)
+            tau, _ = search_tau_pyramid(pyr_a, pyr_b, valid_ratio)
+        tau = jnp.asarray(tau, jnp.float32)
+        mask = hier_gate_mask(pyr_a, pyr_b, tau, block_n)
+    else:
+        if norm_a is None:
+            if a is None:
+                raise ValueError("need `a` or `norm_a`")
+            norm_a = bk.norms(a, tile, use_mxu=use_mxu_norm)
+        if norm_b is None:
+            if b is None:
+                raise ValueError("need `b` or `norm_b`")
+            norm_b = bk.norms(b, tile, use_mxu=use_mxu_norm)
 
-    mask = gate_mask(norm_a, norm_b, tau, block_n)
+        if valid_ratio is not None:
+            from repro.core.tau_search import search_tau  # circular-safe
+
+            tau, _ = search_tau(norm_a, norm_b, valid_ratio)
+        tau = jnp.asarray(tau, jnp.float32)
+        mask = gate_mask(norm_a, norm_b, tau, block_n)
+
+    if isinstance(mask, np.ndarray):  # host descent: count before upload
+        valid_tiles = jnp.int32(int(np.count_nonzero(mask)))
+        mask = jnp.asarray(mask)
+    else:
+        valid_tiles = jnp.sum(mask, dtype=jnp.int32)
     kidx, nvalid = _maybe_compact(mask, bk.name)
-    valid_tiles = jnp.sum(mask, dtype=jnp.int32)
     return SpammPlan(tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
-                     tile=tile, block_n=block_n, backend=bk.name)
+                     tile=tile, block_n=block_n, backend=bk.name,
+                     levels=(want if hier else 0))
 
 
 def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
@@ -227,18 +518,21 @@ def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
 class _WeightEntry(NamedTuple):
     weight: Any          # strong ref: anchors the id() key (no stale reuse)
     padded: jax.Array
-    norms: jax.Array
+    norms: Any           # normmap (levels=0) or NormPyramid (levels>0)
 
 
 class WeightPlanCache:
-    """Caches the weight-side gating artifacts (tile padding + normmap),
-    keyed on weight identity/shape/dtype/tile/backend.
+    """Caches the weight-side gating artifacts (tile padding + normmap or
+    full norm pyramid), keyed on weight identity/shape/dtype/tile/backend/
+    levels.
 
     Serving engines and eager model forward passes call the same weight
     matrix against a stream of activations; the activation-side normmap and
     the bitmap depend on the batch, but the weight normmap (the expensive
     O(K·N) half of get-norm) and the padded copy do not — compute them once
-    per weight instead of per token batch.
+    per weight instead of per token batch. With levels > 0 the cache holds
+    the weight-side NormPyramid, so hierarchical replans pay zero weight-side
+    work beyond the first request.
 
     Tracers are never cached (inside jit the trace itself is cached, and
     tracer ids are meaningless); the cache is an eager-path optimization.
@@ -258,12 +552,14 @@ class WeightPlanCache:
         )
 
     def weight_side(self, w, *, tile: int, backend: str,
-                    use_mxu: bool = False):
-        """(padded_weight, weight_normmap) for w, cached on identity.
+                    use_mxu: bool = False, levels: int = 0):
+        """(padded_weight, weight_norms) for w, cached on identity.
 
         w may be 2-D (K, N) → normmap (gk, gn), or 3-D batched (B, K, N) —
         the per-expert MoE shape — → normmap (B, gk, gn) from one reshaped
-        get-norm pass (row tiles never cross slices after padding)."""
+        get-norm pass (row tiles never cross slices after padding).
+        levels > 0 returns a NormPyramid instead of the plain normmap (for
+        3-D weights the pyramid levels carry the batch dim)."""
         bk = kops.get_backend(backend)
 
         def compute():
@@ -272,12 +568,16 @@ class WeightPlanCache:
                 bsz, kp, np_ = wp.shape
                 nw = bk.norms(wp.reshape(bsz * kp, np_), tile,
                               use_mxu=use_mxu).reshape(bsz, kp // tile, -1)
-                return wp, nw
-            return wp, bk.norms(wp, tile, use_mxu=use_mxu)
+            else:
+                nw = bk.norms(wp, tile, use_mxu=use_mxu)
+            if levels > 0:
+                # batched pooling (pool_norms_ref pools the trailing 2 dims)
+                nw = NormPyramid.from_normmap(nw, levels, tile=tile)
+            return wp, nw
 
         if not self._cacheable(w):
             return compute()
-        key = (id(w), w.shape, str(w.dtype), tile, bk.name, use_mxu)
+        key = (id(w), w.shape, str(w.dtype), tile, bk.name, use_mxu, levels)
         ent = self._entries.get(key)
         if ent is not None and ent.weight is w:
             self.hits += 1
@@ -292,15 +592,16 @@ class WeightPlanCache:
 
     def plan_for(self, x_padded, w, tau=None, *, valid_ratio=None,
                  tile: int = 64, block_n: int = 1, backend: str = "auto",
-                 use_mxu_norm: bool = False):
+                 use_mxu_norm: bool = False, levels: int = 0):
         """Full plan for x @ w with the weight side served from the cache.
         x_padded must already be tile-padded. Returns (plan, padded_weight).
+        levels > 0 plans hierarchically with the cached weight pyramid.
         """
         wp, nw = self.weight_side(w, tile=tile, backend=backend,
-                                  use_mxu=use_mxu_norm)
+                                  use_mxu=use_mxu_norm, levels=levels)
         p = plan(x_padded, None, tau, valid_ratio=valid_ratio, norm_b=nw,
                  tile=tile, block_n=block_n, backend=backend,
-                 use_mxu_norm=use_mxu_norm)
+                 use_mxu_norm=use_mxu_norm, levels=levels)
         return p, wp
 
     def clear(self):
@@ -327,8 +628,14 @@ def spamm_bmm(
     use_mxu_norm: bool = False,
     out_dtype=None,
     cache: Optional[WeightPlanCache] = None,
+    levels: int = 0,
 ):
     """Batched SpAMM: (B, M, K) @ (K, N) or (B, M, K) @ (B, K, N).
+
+    levels > 0 plans the shared-weight case hierarchically (the batch folds
+    into the row-tile grid, so it is one big 2-D product); the per-batch-
+    weight case keeps flat per-slice gating (its vmapped masks are already
+    per-slice small) while still caching the weight-side artifacts.
 
     Shared-weight case: the batch dim folds into the row-tile grid — the
     whole batch runs as ONE (B·M, K) @ (K, N) product whose row tiles never
@@ -355,14 +662,16 @@ def spamm_bmm(
         mp, kp = xp.shape[1:]
         if cache is not None:
             wp, nw = cache.weight_side(w, tile=tile, backend=backend,
-                                       use_mxu=use_mxu_norm)
+                                       use_mxu=use_mxu_norm, levels=levels)
         else:
             wp = pad_to_tile(w, tile)
             nw = bk.norms(wp, tile, use_mxu=use_mxu_norm)
+            if levels > 0:
+                nw = NormPyramid.from_normmap(nw, levels, tile=tile)
         x2 = xp.reshape(bsz * mp, kp)
         p = plan(x2, None, tau, valid_ratio=valid_ratio, norm_b=nw,
                  tile=tile, block_n=block_n, backend=backend,
-                 use_mxu_norm=use_mxu_norm)
+                 use_mxu_norm=use_mxu_norm, levels=levels)
         c = execute(p, x2, wp, out_dtype=out_dtype)
         c = c.reshape(bsz, mp, -1)[:, :m, :n]
         frac = p.valid_fraction

@@ -7,6 +7,12 @@ the hardware translation is balance *across chips* in the distributed
 row-partition (§3.4): contiguous row-strips give diagonal-heavy strips more
 work. The paper's fix — each worker takes `s` tiles at stride BDIM/s — maps
 to a cyclic (strided) assignment of C tile-rows to devices.
+
+Work estimates may be computed at a coarse norm-pyramid level (`v_matrix`
+accepts NormPyramid operands + a `level`): each coarse V entry aggregates a
+2^level × 2^level block of C tiles and costs 8^level fewer gate products —
+cheap enough for the distributed paths to re-estimate per step and pick the
+schedule automatically (`auto_schedule`).
 """
 from __future__ import annotations
 
@@ -15,20 +21,40 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def v_matrix(norm_a: jax.Array, norm_b: jax.Array, tau) -> jax.Array:
+def v_matrix(norm_a, norm_b, tau, *, level: int = 0) -> jax.Array:
     """V[i,j] = Σ_k bitmap[i,j,k] — the paper's per-tile valid-multiplication
-    count, summed from the planner's bitmap (core.plan owns the gating)."""
-    from repro.core.plan import gate_mask  # circular-safe
+    count, summed from the planner's bitmap (core.plan owns the gating).
 
+    Operands may be plain normmaps or NormPyramids; `level` selects the
+    pyramid level the estimate is computed at (plain normmaps ignore it).
+    At level l > 0 each entry counts valid COARSE products, a cheap upper
+    estimate of the fine work inside that 2^l × 2^l block of C tiles.
+    """
+    from repro.core.plan import NormPyramid, gate_mask  # circular-safe
+
+    # both sides must be read at the SAME coarsening or their k-grids
+    # disagree: clamp jointly to the shallower pyramid, and to 0 when only
+    # one side has levels at all
+    a_pyr = isinstance(norm_a, NormPyramid)
+    b_pyr = isinstance(norm_b, NormPyramid)
+    if a_pyr and b_pyr:
+        level = min(level, norm_a.num_levels, norm_b.num_levels)
+    else:
+        level = 0
+    if a_pyr:
+        norm_a = norm_a.levels[level]
+    if b_pyr:
+        norm_b = norm_b.levels[level]
     return jnp.sum(gate_mask(norm_a, norm_b, tau), axis=-1, dtype=jnp.int32)
 
 
 def rows_for_device(d: int, num_devices: int, gm: int, schedule: str) -> np.ndarray:
     """Tile-row indices device d owns. 'contiguous' = paper §3.4 default;
-    'cyclic' = §3.5.1 strided load balance."""
+    'cyclic' = §3.5.1 strided load balance. Non-divisible gm spreads the
+    remainder over the leading devices (matters only for coarse estimates —
+    the distributed paths themselves require divisibility)."""
     if schedule == "contiguous":
-        per = gm // num_devices
-        return np.arange(d * per, (d + 1) * per)
+        return np.array_split(np.arange(gm), num_devices)[d]
     if schedule == "cyclic":
         return np.arange(d, gm, num_devices)
     raise ValueError(schedule)
@@ -69,3 +95,19 @@ def tile_imbalance(v: jax.Array, num_workers: int, schedule: str) -> jax.Array:
     else:
         raise ValueError(schedule)
     return jnp.max(loads) / jnp.maximum(jnp.mean(loads), 1e-9)
+
+
+def auto_schedule(v: jax.Array, num_devices: int, *,
+                  threshold: float = 1.25) -> str:
+    """Pick the row-strip schedule from a (possibly coarse) work estimate V:
+    'cyclic' when the contiguous assignment is measurably imbalanced AND
+    cyclic actually improves it, else 'contiguous' (the cheapest HLO — no
+    in-step permutation). The threshold is deliberately conservative: the
+    in-step cyclic permutation costs a collective, so mild imbalance (e.g.
+    banded matrices' lighter edge rows) should not trigger it.
+    Eager-only: the decision is a Python string."""
+    if v.shape[0] < num_devices:
+        return "contiguous"  # fewer row groups than devices: nothing to fix
+    imb_c = float(imbalance(v, num_devices, "contiguous"))
+    imb_s = float(imbalance(v, num_devices, "cyclic"))
+    return "cyclic" if (imb_c > threshold and imb_s < imb_c) else "contiguous"

@@ -1,4 +1,4 @@
-"""valid-ratio → τ search (paper §3.5.2).
+"""valid-ratio → τ search (paper §3.5.2), flat and coarse-first.
 
 Users of non-scientific applications specify `valid_ratio` (fraction of
 sub-matrix products actually executed) instead of the numerical threshold τ.
@@ -6,6 +6,15 @@ Per the paper: binary search over [0, k·ave] where ave is the mean norm
 product, k the expansion coefficient starting at 1 and incremented whenever
 the upper bound cannot satisfy the demand; iteration count and tolerance are
 user-bounded. Implemented as a lax.while_loop so it jits and shards.
+
+`search_tau_pyramid` is the hierarchical variant: it brackets τ on the
+COARSEST normmaps first (grids 4^L smaller per side, so every ratio
+evaluation there is ~16^L cheaper) and only then descends to the fine level,
+bisecting inside the coarse bracket. The descent is justified by the pyramid
+invariant: every fine-valid (i, j, k) has all its coarse ancestors valid, so
+ratio_fine(τ) ≤ ratio_coarse(τ) for every τ and the coarse τ reaching the
+target upper-bounds the fine answer — the fine search never has to expand
+its bracket from scratch.
 """
 from __future__ import annotations
 
@@ -22,6 +31,38 @@ class TauSearchResult(NamedTuple):
     tau: jax.Array
     achieved_ratio: jax.Array
     iterations: jax.Array
+
+
+def _bisect(norm_a, norm_b, target, lo, hi, tol, max_iters):
+    """Binary search for ratio(τ) ≈ target on [lo, hi], tracking the best
+    candidate seen. Returns (tau, achieved_ratio, iterations)."""
+
+    def ratio(tau):
+        return _spamm.valid_ratio_of(norm_a, norm_b, tau).astype(jnp.float32)
+
+    def bin_cond(state):
+        lo_, hi_, it, best_tau, best_r = state
+        return jnp.logical_and(it < max_iters,
+                               jnp.abs(best_r - target) > tol)
+
+    def bin_body(state):
+        lo_, hi_, it, best_tau, best_r = state
+        mid = 0.5 * (lo_ + hi_)
+        r = ratio(mid)
+        better = jnp.abs(r - target) < jnp.abs(best_r - target)
+        best_tau = jnp.where(better, mid, best_tau)
+        best_r = jnp.where(better, r, best_r)
+        # ratio too high → τ too small → move lo up
+        lo_ = jnp.where(r > target, mid, lo_)
+        hi_ = jnp.where(r > target, hi_, mid)
+        return lo_, hi_, it + 1, best_tau, best_r
+
+    mid0 = 0.5 * (lo + hi)
+    r0 = ratio(mid0)
+    _, _, iters, tau, r = jax.lax.while_loop(
+        bin_cond, bin_body, (lo, hi, jnp.int32(1), mid0, r0)
+    )
+    return tau, r, iters
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))
@@ -56,31 +97,72 @@ def search_tau(
         k, it = state
         return k + 1.0, it + 1
 
-    k, exp_iters = jax.lax.while_loop(exp_cond, exp_body, (jnp.float32(1.0), jnp.int32(0)))
-
-    # --- binary search in [0, k·ave], tracking the best candidate seen ---
-    def bin_cond(state):
-        lo, hi, it, best_tau, best_r = state
-        return jnp.logical_and(it < max_iters,
-                               jnp.abs(best_r - target) > tol)
-
-    def bin_body(state):
-        lo, hi, it, best_tau, best_r = state
-        mid = 0.5 * (lo + hi)
-        r = ratio(mid)
-        better = jnp.abs(r - target) < jnp.abs(best_r - target)
-        best_tau = jnp.where(better, mid, best_tau)
-        best_r = jnp.where(better, r, best_r)
-        # ratio too high → τ too small → move lo up
-        lo = jnp.where(r > target, mid, lo)
-        hi = jnp.where(r > target, hi, mid)
-        return lo, hi, it + 1, best_tau, best_r
-
-    mid0 = 0.5 * k * ave
-    r0 = ratio(mid0)
-    lo, hi, iters, tau, r = jax.lax.while_loop(
-        bin_cond, bin_body,
-        (jnp.float32(0.0), k * ave, jnp.int32(1), mid0, r0),
+    k, exp_iters = jax.lax.while_loop(
+        exp_cond, exp_body, (jnp.float32(1.0), jnp.int32(0))
     )
-    res = TauSearchResult(tau=tau, achieved_ratio=r, iterations=iters + exp_iters)
+
+    tau, r, iters = _bisect(norm_a, norm_b, target,
+                            jnp.float32(0.0), k * ave, tol, max_iters)
+    res = TauSearchResult(tau=tau, achieved_ratio=r,
+                          iterations=iters + exp_iters)
+    return tau, res
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "coarse_iters")
+)
+def search_tau_pyramid(
+    pyr_a,
+    pyr_b,
+    target_ratio,
+    *,
+    tol: float = 0.01,
+    max_iters: int = 20,
+    coarse_iters: int = 12,
+):
+    """Coarse-first τ-search over NormPyramids. Returns (tau, result).
+
+    Phase 1 runs the full §3.5.2 search (expansion + bisection) on the
+    coarsest normmaps — each ratio evaluation there touches grids 4^L
+    smaller per side. Phase 2 bisects on the FINE normmaps inside
+    [0, margin·τ_coarse]: by the pyramid invariant ratio_fine ≤ ratio_coarse
+    pointwise, so the coarse answer (inflated by a small margin for its own
+    tolerance) upper-bounds the fine τ and only the surviving part of the τ
+    axis is descended; a doubling guard covers the coarse-tolerance edge.
+    """
+    na_f, nb_f = pyr_a.levels[0], pyr_b.levels[0]
+    na_c, nb_c = pyr_a.levels[-1], pyr_b.levels[-1]
+    target = jnp.asarray(target_ratio, jnp.float32)
+
+    # coarse tolerance is the looser of the caller's and 2% (jnp.maximum:
+    # `tol` is a tracer when passed explicitly to this jitted function)
+    tau_c, res_c = search_tau(
+        na_c, nb_c, target,
+        tol=jnp.maximum(jnp.asarray(tol, jnp.float32), 0.02),
+        max_iters=coarse_iters,
+    )
+
+    def ratio(tau):
+        return _spamm.valid_ratio_of(na_f, nb_f, tau).astype(jnp.float32)
+
+    # τ_c could undershoot by its tolerance; inflate, then double until the
+    # fine ratio at hi is at or below target (usually zero iterations).
+    hi0 = jnp.maximum(tau_c * 1.25, jnp.float32(1e-30))
+
+    def g_cond(state):
+        hi, it = state
+        return jnp.logical_and(ratio(hi) > target, it < 8)
+
+    def g_body(state):
+        hi, it = state
+        return hi * 2.0, it + 1
+
+    hi, g_iters = jax.lax.while_loop(g_cond, g_body, (hi0, jnp.int32(0)))
+
+    tau, r, iters = _bisect(na_f, nb_f, target,
+                            jnp.float32(0.0), hi, tol, max_iters)
+    res = TauSearchResult(
+        tau=tau, achieved_ratio=r,
+        iterations=iters + g_iters + res_c.iterations,
+    )
     return tau, res

@@ -47,6 +47,72 @@ def _getnorm_kernel(x_ref, o_ref, *, use_mxu: bool):
     o_ref[0, j] = jnp.sqrt(s)
 
 
+def _pool_kernel(n_ref, o_ref):
+    """sqrt-sumsq 2×2 pooling: one grid step pools one coarse normmap row.
+
+    Row pairing is a VPU add; column pairing runs as a dot against the
+    0/1 pooling matrix (kf // 2 == kc) so the lane-dim reduction stays
+    MXU/VPU-friendly (no strided lane slicing)."""
+    x = n_ref[...].astype(jnp.float32)          # (2, 2·gkc) fine rows pair
+    sq = x * x
+    rows = sq[0:1, :] + sq[1:2, :]              # (1, 2·gkc) row-pooled sumsq
+    w = rows.shape[1]
+    kf = jax.lax.broadcasted_iota(jnp.int32, (w, w // 2), 0)
+    kc = jax.lax.broadcasted_iota(jnp.int32, (w, w // 2), 1)
+    pool = (kf // 2 == kc).astype(jnp.float32)  # (2·gkc, gkc) column pairing
+    s = jax.lax.dot_general(
+        rows, pool, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                           # (1, gkc)
+    o_ref[0, :] = jnp.sqrt(s[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pool_norms(normmap: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """One norm-pyramid coarsening step via the Pallas pooling kernel.
+
+    normmap: (gm, gk) f32 level-(l-1) normmap; odd dims are zero-padded.
+    Returns (⌈gm/2⌉, ⌈gk/2⌉) f32 — sqrt of 2×2 sumsq pooling, i.e. the exact
+    Frobenius norm of each 2×2 tile group (one cheap reduction, no re-read of
+    the underlying matrix).
+    """
+    gm, gk = normmap.shape
+    pm, pk = gm % 2, gk % 2
+    if pm or pk:
+        normmap = jnp.pad(normmap, ((0, pm), (0, pk)))
+    gmc, gkc = (gm + pm) // 2, (gk + pk) // 2
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(gmc,),
+        in_specs=[pl.BlockSpec((2, 2 * gkc), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, gkc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gmc, gkc), jnp.float32),
+        interpret=interpret,
+        name="spamm_norm_pool",
+    )(normmap)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "levels", "use_mxu", "interpret")
+)
+def norm_pyramid(
+    x: jax.Array,
+    tile: int = 64,
+    levels: int = 1,
+    *,
+    use_mxu: bool = False,
+    interpret: bool = False,
+):
+    """Coarse-to-fine normmap stack: one get-norm pass + `levels` poolings.
+
+    Returns a tuple (finest → coarsest) of `levels + 1` normmaps; entry l is
+    the normmap at tile size tile·2^l (grid dims ceil-halved per level).
+    """
+    maps = [tile_norms(x, tile, use_mxu=use_mxu, interpret=interpret)]
+    for _ in range(levels):
+        maps.append(pool_norms(maps[-1], interpret=interpret))
+    return tuple(maps)
+
+
 @functools.partial(
     jax.jit, static_argnames=("tile", "use_mxu", "interpret")
 )

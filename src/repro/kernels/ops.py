@@ -58,11 +58,17 @@ class Backend:
     needs_compaction: whether `matmul` consumes kidx/nvalid (the Pallas
       kernels do; the jnp masked-einsum oracle does not, so planners skip
       the compaction sort for it).
+    pyramid_norms(x, tile, levels, use_mxu)        → tuple of `levels + 1`
+      normmaps, finest first — one get-norm pass + `levels` sqrt-sumsq
+      pooling reductions (the norm pyramid of hierarchical gating). None
+      ⇒ the planner falls back to norms() + the jnp pooling oracle, so
+      third-party backends registered before this entry point keep working.
     """
     name: str
     norms: Callable[..., jax.Array]
     matmul: Callable[..., jax.Array]
     needs_compaction: bool = True
+    pyramid_norms: Callable[..., tuple] = None
 
 
 def _jnp_norms(x, tile, use_mxu=False):
@@ -95,6 +101,15 @@ def _pallas_norms(interpret):
     return norms
 
 
+def _pallas_pyramid_norms(interpret):
+    def pyramid(x, tile, levels, use_mxu=False):
+        return _getnorm.norm_pyramid(
+            x, tile, levels, use_mxu=use_mxu, interpret=interpret
+        )
+
+    return pyramid
+
+
 def _pallas_matmul(interpret):
     def matmul(a, b, mask, kidx, nvalid, tile, block_n, out_dtype):
         del mask
@@ -108,9 +123,14 @@ def _pallas_matmul(interpret):
 
 
 BACKENDS = {
+    # jnp leaves pyramid_norms unset: the norms() + pool_norms_ref fallback
+    # in pyramid_norms() below IS the jnp implementation (one copy to
+    # maintain); the Pallas backends register the pooling kernel.
     "jnp": Backend("jnp", _jnp_norms, _jnp_matmul, needs_compaction=False),
-    "interpret": Backend("interpret", _pallas_norms(True), _pallas_matmul(True)),
-    "pallas": Backend("pallas", _pallas_norms(False), _pallas_matmul(False)),
+    "interpret": Backend("interpret", _pallas_norms(True), _pallas_matmul(True),
+                         pyramid_norms=_pallas_pyramid_norms(True)),
+    "pallas": Backend("pallas", _pallas_norms(False), _pallas_matmul(False),
+                      pyramid_norms=_pallas_pyramid_norms(False)),
 }
 
 VALID_BACKENDS = ("auto", *BACKENDS)
@@ -145,6 +165,27 @@ def tile_norms(
 ) -> jax.Array:
     """normmap of x — paper get-norm kernel (§3.2), registry-dispatched."""
     return get_backend(backend).norms(x, tile, use_mxu=use_mxu)
+
+
+def pyramid_norms(
+    x: jax.Array,
+    tile: int = 64,
+    levels: int = 1,
+    *,
+    backend: str = "auto",
+    use_mxu: bool = False,
+) -> tuple:
+    """Norm pyramid of x: `levels + 1` normmaps, finest (tile) first, each
+    coarser level a sqrt-sumsq 2×2 pooling of the previous (so level l is the
+    exact normmap at tile·2^l). Registry-dispatched; backends without a
+    pyramid entry point fall back to norms() + the jnp pooling oracle."""
+    bk = get_backend(backend)
+    if bk.pyramid_norms is not None:
+        return bk.pyramid_norms(x, tile, levels, use_mxu=use_mxu)
+    maps = [bk.norms(x, tile, use_mxu=use_mxu)]
+    for _ in range(levels):
+        maps.append(_ref.pool_norms_ref(maps[-1]))
+    return tuple(maps)
 
 
 def spamm_compact(mask: jax.Array):

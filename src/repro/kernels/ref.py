@@ -23,6 +23,30 @@ def tile_norms_ref(x: jax.Array, tile: int) -> jax.Array:
     return jnp.sqrt(jnp.einsum("itjs,itjs->ij", x4, x4))
 
 
+def pool_norms_ref(normmap: jax.Array, factor: int = 2) -> jax.Array:
+    """One norm-pyramid coarsening step: sqrt-of-sumsq `factor`×`factor`
+    pooling of a normmap (paper Eq. 2 applied at the next tile size up).
+
+    Because ‖X‖_F² of a coarse tile is exactly the sum of its sub-tiles'
+    ‖·‖_F², pooling the *squares* reuses the finest get-norm pass — no second
+    sweep over the matrix — and the coarse entry upper-bounds every
+    descendant tile norm (the exactness lever of hierarchical gating).
+
+    Supports leading batch dims; the trailing two dims are zero-padded to
+    `factor` multiples (zero tiles contribute nothing to the sumsq).
+    """
+    g1, g2 = normmap.shape[-2:]
+    p1, p2 = (-g1) % factor, (-g2) % factor
+    if p1 or p2:
+        pad = [(0, 0)] * (normmap.ndim - 2) + [(0, p1), (0, p2)]
+        normmap = jnp.pad(normmap, pad)
+    c1, c2 = (g1 + p1) // factor, (g2 + p2) // factor
+    sq = (normmap * normmap).reshape(
+        *normmap.shape[:-2], c1, factor, c2, factor
+    )
+    return jnp.sqrt(jnp.sum(sq, axis=(-3, -1)))
+
+
 def spamm_mask_ref(norm_a: jax.Array, norm_b: jax.Array, tau: jax.Array) -> jax.Array:
     """bitmap[i, j, k] = normA[i,k] * normB[k,j] >= tau  (paper Alg. 2 lines 3-8)."""
     prod = norm_a[:, None, :] * jnp.swapaxes(norm_b, 0, 1)[None, :, :]

@@ -31,6 +31,9 @@ def main():
                          "(one SpammContext per engine)")
     ap.add_argument("--spamm-tile", type=int, default=32)
     ap.add_argument("--spamm-backend", default="auto")
+    ap.add_argument("--spamm-levels", type=int, default=0,
+                    help="norm-pyramid coarsening steps for hierarchical "
+                         "gating (0 = flat); coarse tile = tile · 2^levels")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -47,7 +50,8 @@ def main():
     if args.spamm_tau is not None:
         spamm_cfg = SpammConfig(enable=True, tau=args.spamm_tau,
                                 tile=args.spamm_tile,
-                                backend=args.spamm_backend)
+                                backend=args.spamm_backend,
+                                levels=args.spamm_levels)
     eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len,
                  spamm_cfg=spamm_cfg)
 
@@ -67,6 +71,12 @@ def main():
           f"({total/dt:.1f} tok/s)")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:12].tolist()}")
+    sp = reqs[0].out.get("spamm") if reqs[0].out else None
+    if sp is not None:
+        vf = sp["valid_fraction"]
+        vf_s = f"{vf:.3f}" if vf is not None else "n/a"
+        print(f"  spamm: valid_fraction={vf_s} gated_gemms={sp['gated_gemms']} "
+              f"cache={sp['plan_cache_hits']}h/{sp['plan_cache_misses']}m")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,9 @@ class Request:
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
-    out: Optional[list] = None
+    out: Optional[dict] = None   # populated by Engine.generate: per-request
+                                 # metadata — {"tokens": np.ndarray,
+                                 # "spamm": gating stats dict or None}
 
 
 class Engine:
@@ -68,14 +70,49 @@ class Engine:
 
         return jax.tree_util.tree_map_with_path(grow, cache)
 
+    def _spamm_stats(self, fracs, hits0: int, misses0: int):
+        """Per-wave gating stats dict from the drained valid fractions and
+        the plan-cache counter deltas across this wave."""
+        cache = self.spamm_ctx.cache
+        return {
+            "valid_fraction": float(np.mean(fracs)) if fracs else None,
+            "gated_gemms": len(fracs),
+            "plan_cache_hits": cache.hits - hits0,
+            "plan_cache_misses": cache.misses - misses0,
+        }
+
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
         """Greedy-decode a batch of same-length prompts (engine pads to the
-        longest prompt internally with left-trim to uniform length)."""
+        longest prompt internally with left-trim to uniform length).
+
+        When SpAMM is enabled, each request's `out` metadata carries the
+        prefill gating stats of its wave (mean valid_fraction over the gated
+        GEMMs, plan-cache hit/miss deltas) instead of dropping them.
+        """
         assert requests, "empty batch"
         b = len(requests)
         plen = min(min(len(r.prompt) for r in requests), self.max_len - 1)
         toks = np.stack([r.prompt[-plen:] for r in requests]).astype(np.int32)
-        cache, logits = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        collect = self.spamm_ctx is not None and self.spamm_ctx.enable
+        spamm_meta = None
+        if collect:
+            hits0 = self.spamm_ctx.cache.hits
+            misses0 = self.spamm_ctx.cache.misses
+            self.spamm_ctx.begin_stats()
+            try:
+                cache, logits = self._prefill(
+                    self.params, {"tokens": jnp.asarray(toks)})
+            finally:
+                # unordered io_callbacks are NOT flushed by output readiness
+                # — effects_barrier is the documented flush; the finally
+                # closes the collect window even on a failed prefill so the
+                # context's telemetry can't be left collecting forever
+                jax.effects_barrier()
+                fracs = self.spamm_ctx.end_stats()
+            spamm_meta = self._spamm_stats(fracs, hits0, misses0)
+        else:
+            cache, logits = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)})
         cache = self._pad_cache(cache, plen)
         outs = [[] for _ in range(b)]
         done = np.zeros(b, bool)
@@ -96,4 +133,7 @@ class Engine:
             )
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
             pos += 1
-        return [np.asarray(o, np.int32) for o in outs]
+        results = [np.asarray(o, np.int32) for o in outs]
+        for r, toks_out in zip(requests, results):
+            r.out = {"tokens": toks_out, "spamm": spamm_meta}
+        return results

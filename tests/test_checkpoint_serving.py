@@ -65,6 +65,40 @@ def test_engine_greedy_matches_manual_decode():
     np.testing.assert_array_equal(outs[0], outs_single[0])
 
 
+def test_engine_spamm_telemetry_on_request_out():
+    """With SpAMM enabled, every request's `out` metadata carries the wave's
+    gating stats (valid_fraction over the gated prefill GEMMs, plan-cache
+    deltas) — surfaced through the jitted, scan-over-layers prefill via the
+    context's io_callback taps."""
+    from repro.configs import SpammConfig
+
+    cfg = get_config("musicgen-large").reduced()
+    ctx = make_ctx(make_host_mesh())
+    params = M.init_params(cfg, PCFG, jax.random.key(0))
+    sc = SpammConfig(enable=True, tau=0.05, tile=16, backend="jnp", levels=1)
+    eng = Engine(cfg, PCFG, ctx, params, max_len=64, spamm_cfg=sc)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=24).astype(np.int32),
+                    max_new_tokens=4) for _ in range(2)]
+    outs = eng.generate(reqs)
+    for r, o in enumerate(outs):
+        meta = reqs[r].out
+        np.testing.assert_array_equal(meta["tokens"], o)
+        sp = meta["spamm"]
+        assert sp["gated_gemms"] > 0
+        assert sp["valid_fraction"] is not None
+        assert 0.0 < sp["valid_fraction"] <= 1.0
+        assert sp["plan_cache_hits"] >= 0 and sp["plan_cache_misses"] >= 0
+    # stats are per wave, not cumulative: a second wave reports afresh
+    eng.generate(reqs)
+    assert reqs[0].out["spamm"]["gated_gemms"] == sp["gated_gemms"]
+
+    # spamm disabled: metadata still present, stats absent
+    eng2 = Engine(cfg, PCFG, ctx, params, max_len=64)
+    (o2,) = eng2.generate([Request(prompt=reqs[0].prompt, max_new_tokens=3)])
+    assert eng2.spamm_ctx is None
+
+
 def test_engine_eos_frees_early():
     cfg = get_config("musicgen-large").reduced()
     ctx = make_ctx(make_host_mesh())

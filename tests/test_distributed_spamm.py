@@ -1,6 +1,8 @@
 """Multi-device SpAMM (§3.4 row-partition + §3.5.1 load balance + the
 beyond-paper 2-D SUMMA variant) on 8 fake host devices (subprocess: the
 device count is locked at first jax init)."""
+import pytest
+
 from conftest import run_subprocess
 
 CODE = r"""
@@ -18,13 +20,26 @@ ja, jb = jnp.asarray(a), jnp.asarray(b)
 ref_c, info = cs.spamm(ja, jb, tau, tile=tile, backend="jnp")
 assert 0.0 < float(info.valid_fraction) < 1.0, float(info.valid_fraction)
 
-for sched in ("contiguous", "cyclic"):
+for sched in ("contiguous", "cyclic", "auto"):
     c, frac = distributed.spamm_rowpart(ja, jb, tau, mesh, axis="data",
                                         tile=tile, backend="jnp", schedule=sched)
     np.testing.assert_allclose(np.asarray(c), np.asarray(ref_c), atol=1e-4)
 
-c2, _ = distributed.spamm_2d(ja, jb, tau, mesh, tile=tile, backend="jnp")
-np.testing.assert_allclose(np.asarray(c2), np.asarray(ref_c), atol=1e-4)
+for sched in ("contiguous", "auto"):
+    c2, _ = distributed.spamm_2d(ja, jb, tau, mesh, tile=tile, backend="jnp",
+                                 schedule=sched)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(ref_c), atol=1e-4)
+
+# the auto pick itself: banded inputs are row-balanced -> contiguous; a
+# top-heavy A (coarse V concentrated in the leading strips) -> cyclic
+heavy = np.asarray(a).copy(); heavy[n // 4:] *= 1e-4
+sched_b = distributed._resolve_schedule(ja, jb, tau, 4, tile=tile,
+                                        backend="jnp", sched_levels=3)
+sched_h = distributed._resolve_schedule(jnp.asarray(heavy), jb, tau, 4,
+                                        tile=tile, backend="jnp",
+                                        sched_levels=3)
+assert sched_b == "contiguous", sched_b
+assert sched_h == "cyclic", sched_h
 
 # §3.5.1: cyclic assignment improves balance when workers own individual
 # C tiles (the paper's one-thread-block-per-tile setting: Fig. 4) — use a
@@ -39,6 +54,7 @@ print("OK", imb_c, imb_s)
 """
 
 
+@pytest.mark.slow
 def test_distributed_spamm_8dev():
     out = run_subprocess(CODE, devices=8)
     assert "OK" in out

@@ -1,5 +1,7 @@
 """Elastic re-mesh: save on one mesh, reshard+resume on a smaller surviving
 device set (DESIGN.md §9) — 8 fake devices, subprocess."""
+import pytest
+
 from conftest import run_subprocess
 
 CODE = r"""
@@ -40,6 +42,7 @@ print("OK", float(loss))
 """
 
 
+@pytest.mark.slow
 def test_elastic_reshard_8_to_6():
     out = run_subprocess(CODE, devices=8)
     assert "OK" in out

@@ -70,6 +70,18 @@ def test_plan_block_n_super_column_granularity():
     assert (grouped_expanded | m1).sum() == grouped_expanded.sum()
 
 
+def test_spamm_matmul_info_carries_nvalid():
+    """The docstring has always promised `nvalid` in the info dict; it must
+    be there on both the compacting (interpret) and bitmap-gating (jnp)
+    backends, and equal the per-(i, j) valid-k count of the mask."""
+    a, b = _decay(128, 128, 90), _decay(128, 128, 91)
+    p = pl.plan(a, b, TAU64, tile=64, backend="jnp")
+    want = np.asarray(p.mask).sum(-1)
+    for backend in BACKENDS:
+        _, info = ops.spamm_matmul(a, b, TAU64, tile=64, backend=backend)
+        np.testing.assert_array_equal(np.asarray(info["nvalid"]), want)
+
+
 def test_plan_valid_ratio_routes_tau_search():
     a, b = _decay(256, 256, 6), _decay(256, 256, 7)
     p = pl.plan(a, b, valid_ratio=0.5, tile=32, backend="jnp")

@@ -30,6 +30,7 @@ def test_loss_decreases(tmp_path):
     assert last < first - 0.05, (first, last)
 
 
+@pytest.mark.slow
 def test_failure_restart_resumes(tmp_path):
     """Inject a crash at step 20; resume must continue from the last
     checkpoint and land near the uninterrupted run."""
