@@ -20,9 +20,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernel_blocks, kernels_micro, loadbalance,
-                            plan_cache, pyramid_gating, roofline, table1_taus,
-                            table2_dense, table3_sparse, table4_ergo,
-                            table5_vgg)
+                            plan_cache, pyramid_gating, roofline, sparse_exec,
+                            table1_taus, table2_dense, table3_sparse,
+                            table4_ergo, table5_vgg)
     from benchmarks.common import header
 
     mods = {
@@ -36,6 +36,7 @@ def main() -> None:
         "kernel_blocks": kernel_blocks,
         "plan_cache": plan_cache,
         "pyramid_gating": pyramid_gating,
+        "sparse_exec": sparse_exec,
         "roofline": roofline,
     }
     header()

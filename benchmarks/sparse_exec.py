@@ -1,0 +1,143 @@
+"""Sparse plan execution: compacted work-list vs the dense-bitmap path.
+
+Two costs per valid-fraction cell, sweeping τ so the surviving fraction
+drops from dense-ish to heavily pruned:
+
+  * plan construction — `plan()`'s compacted path (surviving triples from
+    the hierarchical descent → `compact_from_triples`, O(V log V) in the
+    V valid triples) vs the legacy dense path (materialize the (gm, gn, gk)
+    bitmap, then `spamm_compact_ref`'s O(gm·gn·gk log gk) sort);
+  * execution — the ragged work-list kernel (`spamm_mm_worklist`, grid =
+    Σnvalid steps) vs the dense-grid kidx kernel (`spamm_mm`, grid =
+    gm·gn·gk with invalid steps masked out), both in interpret mode so the
+    exact kernel bodies run on CPU.
+
+Each cell asserts bit-parity first (work-list result == dense-grid result,
+work-derived kidx == `spamm_compact_ref`), so a compaction regression fails
+the benchmark loudly instead of showing up as a silent slowdown — the CI
+"not slow" lane runs the `--smoke` sweep for exactly that reason.
+
+Derived column: valid=<fraction>;plan_speedup=<dense/compact>;
+exec_speedup=<dense/worklist>.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import plan as planner
+from repro.kernels import ref
+from repro.kernels import spamm_mm as smm
+
+
+def _banded(m: int, n: int, band: float, seed: int) -> jnp.ndarray:
+    """Exponential-decay banded matrix (the paper's workload shape)."""
+    rng = np.random.default_rng(seed)
+    d = np.abs(np.arange(m, dtype=np.float32)[:, None]
+               - np.arange(n, dtype=np.float32)[None, :])
+    x = np.exp(-d / band) * rng.uniform(0.5, 1.0, (m, n)).astype(np.float32)
+    return jnp.asarray(x.astype(np.float32))
+
+
+def _tau_for(na, nb, frac: float) -> float:
+    rng = np.random.default_rng(0)
+    a, b = np.asarray(na), np.asarray(nb)
+    i = rng.integers(0, a.shape[0], 4096)
+    k = rng.integers(0, a.shape[1], 4096)
+    j = rng.integers(0, b.shape[1], 4096)
+    return float(np.quantile(a[i, k] * b[k, j], 1.0 - frac))
+
+
+def _plan_cell(gm: int, gn: int, gk: int, frac: float, levels: int):
+    """Plan-construction timing on synthetic banded normmaps."""
+    band = max(gm // 16, 2)
+    na = planner.NormPyramid.from_normmap(_banded(gm, gk, band, 1), levels)
+    nb = planner.NormPyramid.from_normmap(_banded(gk, gn, band, 2), levels)
+    tau = _tau_for(na.base, nb.base, frac)
+
+    def compact():
+        # the tentpole path: descent triples → work-list, no dense sort
+        return planner.plan(None, None, tau, norm_a=na, norm_b=nb,
+                            backend="interpret")
+
+    def dense_bitmap():
+        # the legacy path: dense bitmap, then the jnp sort compaction
+        mask = planner.gate_mask(na.base, nb.base, tau)
+        return ref.spamm_compact_ref(mask)
+
+    p = compact()
+    kidx_ref, nv_ref = ref.spamm_compact_ref(p.mask)
+    gnb = gn  # block_n=1
+    assert np.array_equal(planner.kidx_from_work(p.work, gm, gnb, gk),
+                          np.asarray(kidx_ref)), "compaction parity"
+    assert np.array_equal(np.asarray(p.nvalid), np.asarray(nv_ref))
+
+    t_compact = timeit(compact)
+    t_dense = timeit(dense_bitmap)
+    valid = float(p.valid_fraction)
+    derived = (f"valid={valid:.4f};grid={gm}x{gn}x{gk};"
+               f"plan_speedup={t_dense / t_compact:.2f}x")
+    row(f"sparse_exec/plan/compact/{gm}x{gn}x{gk}/f{frac}", t_compact, derived)
+    row(f"sparse_exec/plan/dense/{gm}x{gn}x{gk}/f{frac}", t_dense, derived)
+
+
+def _exec_cell(n: int, tile: int, frac: float):
+    """Execution timing: ragged work-list kernel vs dense-grid kernel
+    (interpret mode — the exact kernel bodies) at one valid fraction."""
+    band = max(n // 8, tile)
+    a = _banded(n, n, band, 3)
+    b = _banded(n, n, band, 4)
+    na = ref.tile_norms_ref(a, tile)
+    nb = ref.tile_norms_ref(b, tile)
+    tau = _tau_for(na, nb, frac)
+    p = planner.plan(a, b, tau, tile=tile, backend="interpret")
+    kidx, nvalid = ref.spamm_compact_ref(p.mask)
+
+    def worklist():
+        return planner.execute(p, a, b)
+
+    def dense_grid():
+        return smm.spamm_mm(a, b, kidx, nvalid, tile=tile, interpret=True)
+
+    c_w = worklist()
+    c_d = dense_grid()
+    assert np.array_equal(np.asarray(c_w), np.asarray(c_d)), "exec parity"
+
+    t_w = timeit(worklist)
+    t_d = timeit(dense_grid)
+    valid = float(p.valid_fraction)
+    derived = (f"valid={valid:.4f};steps={int(p.work.num_valid)}/"
+               f"{p.total_tiles};exec_speedup={t_d / t_w:.2f}x")
+    row(f"sparse_exec/exec/worklist/n{n}/f{frac}", t_w, derived)
+    row(f"sparse_exec/exec/dense/n{n}/f{frac}", t_d, derived)
+
+
+def run(quick: bool = False):
+    fracs = [0.3, 0.05] if quick else [0.6, 0.3, 0.1, 0.02]
+    plan_grids = [(64, 64, 64)] if quick else [(128, 128, 128),
+                                               (256, 256, 256)]
+    for gm, gn, gk in plan_grids:
+        for frac in fracs:
+            _plan_cell(gm, gn, gk, frac, levels=3)
+    n_exec = 128 if quick else 256
+    for frac in fracs:
+        _exec_cell(n_exec, 32, frac)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-friendly trimmed sweep (parity asserts still "
+                         "run — a compaction regression fails the job)")
+    args = ap.parse_args()
+    from benchmarks.common import header
+
+    header()
+    run(quick=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,9 +36,13 @@ def _resolve_schedule(a, b, tau, num_devices, *, tile, backend,
     Builds norm pyramids for both operands and evaluates the §3.5.1 V matrix
     at the coarsest level that still gives every device ≥ 1 coarse row — the
     estimate costs one get-norm pass plus an 8^level-reduced gating sweep,
-    cheap enough to re-run per step as operands evolve. Traced operands
-    can't steer a Python-level decision, so under jit the paper default
-    ('contiguous') is kept.
+    cheap enough to re-run per step as operands evolve. Device loads are
+    attributed through the FINE shard boundaries (`schedule.device_loads`):
+    a coarse row straddling a boundary splits its work across its actual
+    owners instead of being array_split to one side, which could mis-pick
+    cyclic near shard boundaries. Traced operands can't steer a
+    Python-level decision, so under jit the paper default ('contiguous') is
+    kept.
     """
     if isinstance(a, jax.core.Tracer) or isinstance(b, jax.core.Tracer):
         return "contiguous"
@@ -51,7 +55,7 @@ def _resolve_schedule(a, b, tau, num_devices, *, tile, backend,
     pyr_a = _plan.NormPyramid.build(a, lv, tile=tile, backend=backend)
     pyr_b = _plan.NormPyramid.build(b, lv, tile=tile, backend=backend)
     v = _schedule.v_matrix(pyr_a, pyr_b, tau, level=lv)
-    return _schedule.auto_schedule(v, num_devices)
+    return _schedule.auto_schedule(v, num_devices, level=lv, fine_rows=gm)
 
 
 def _local_spamm(a_loc, b, tau, tile, backend, block_n):

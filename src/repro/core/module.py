@@ -150,7 +150,9 @@ def _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels=0):
         )
         ctx.tap(p.valid_fraction)
     else:
-        wp = pad_to_tile(w, tile)
+        # N pads to tile·block_n (not just tile) so odd-N weights survive
+        # super-column gating; the cache path does the same in weight_side
+        wp = pad_to_tile(w, tile, tile * block_n)
         p = _plan.plan(xp, wp, tau, tile=tile, block_n=block_n,
                        backend=backend, levels=levels)
     c = _plan.execute(p, xp, wp)
@@ -178,9 +180,11 @@ def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, levels, res, g):
         dx = (g2 @ w.T).reshape(x.shape).astype(x.dtype)
         dw = (x2.T @ g2).astype(w.dtype)
     elif bwd == "spamm":
-        gp = pad_to_tile(g2, tile)
+        # g/w pad N to tile·block_n to match the forward normmaps' column
+        # grid (norm_w came from the block_n-padded weight)
+        gp = pad_to_tile(g2, tile, tile * block_n)
         xp = pad_to_tile(x2, tile)
-        wp = pad_to_tile(w, tile)
+        wp = pad_to_tile(w, tile, tile * block_n)
         # dx = (g @ Wᵀ) gated by norms(g)·norms(W)ᵀ — the forward bitmap
         # with its (k, j) axes transposed, built from the cached weight norms
         p_dx = _plan.plan(gp, None, tau, norm_b=norm_w.T, tile=tile,

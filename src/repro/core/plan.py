@@ -27,11 +27,26 @@ gates at the coarsest level first and refines only inside surviving coarse
 blocks, producing a mask bit-identical to flat gating while plan
 construction becomes sub-linear in the pruned region.
 
+Compacted execution (§3.3 map_offset, kept first-class end to end): for
+concrete operands the planner never round-trips through a dense bitmap — the
+hierarchical descent (or the flat gate's nonzero scan) yields the surviving
+(i, j, k) triples directly, and `compact_from_triples` turns them into a
+`SpammWork` work-list (per-(i, j) row/col ids, concatenated ascending
+k-lists with offsets, and bucket-padded per-step tables) in O(V log V) of
+the V SURVIVING triples — no O(gm·gn·gk log gk) sort over the grid. The
+Pallas backends execute the work-list on a 1-D grid of Σnvalid steps
+(`kernels.spamm_mm.spamm_mm_worklist`); the dense mask becomes a lazy
+derived view, materialized only for backends that gate from the bitmap
+(jnp masked einsum) or for traced plans, where shapes must be static and
+the legacy dense-kidx path (`spamm_compact_ref`) still applies.
+
 API:
   plan(a, b, tau | valid_ratio=...)  → SpammPlan   (or from precomputed
                                        normmaps via norm_a= / norm_b=;
                                        levels=L turns on pyramid gating)
   execute(plan, a, b)                → C
+  SpammWork / compact_from_triples   — flattened work-list straight from
+                                       the descent's surviving triples
   NormPyramid                        — coarse-to-fine normmap stack
   hier_gate_mask(pyr_a, pyr_b, tau)  — coarse-to-fine mask (≡ gate_mask)
   WeightPlanCache                    — per-weight gating artifacts, keyed on
@@ -51,16 +66,22 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels import spamm_mm as kmm
 
 
 # ---------------------------------------------------------------------------
 # padding helper (shared by every caller that accepts arbitrary shapes)
 # ---------------------------------------------------------------------------
 
-def pad_to_tile(x: jax.Array, tile: int) -> jax.Array:
-    """Zero-pad the trailing two dims of x up to multiples of `tile`."""
+def pad_to_tile(x: jax.Array, tile: int, tile_n: Optional[int] = None
+                ) -> jax.Array:
+    """Zero-pad the trailing two dims of x up to multiples of `tile`.
+
+    tile_n overrides the multiple for the LAST dim — the weight side of a
+    block_n > 1 product must pad N to tile·block_n so the super-column
+    grouping divides the column grid (`gn % block_n == 0`)."""
     m, n = x.shape[-2:]
-    pm, pn = (-m) % tile, (-n) % tile
+    pm, pn = (-m) % tile, (-n) % (tile_n or tile)
     if pm == 0 and pn == 0:
         return x
     pad = [(0, 0)] * (x.ndim - 2) + [(0, pm), (0, pn)]
@@ -156,6 +177,173 @@ class NormPyramid:
 
 
 # ---------------------------------------------------------------------------
+# compacted work-list (§3.3 map_offset, straight from the descent)
+# ---------------------------------------------------------------------------
+
+# per-step flag bits of the ragged kernel — the kernel module owns them so
+# encoder (here) and decoder (kernel body) can never disagree.
+STEP_INIT = kmm.STEP_INIT
+STEP_ACC = kmm.STEP_ACC
+STEP_FLUSH = kmm.STEP_FLUSH
+
+
+class SpammWork(NamedTuple):
+    """Flattened per-(i, j) work-list of one plan — the compacted form of
+    the §3.3 map_offset, kept instead of (not re-derived from) the bitmap.
+
+    Pair view (what `info()`/tests consume):
+      rows     (P,)   int32 — row-tile id of each active output pair
+      cols     (P,)   int32 — super-column id (block_n granularity)
+      offsets  (P+1,) int32 — klist[offsets[p]:offsets[p+1]] is pair p's
+                              ascending valid-k list
+      klist    (V,)   int32 — concatenated valid k's; V = Σnvalid
+
+    Step view (what drives `spamm_mm_worklist`'s 1-D grid; built once here
+    so repeated `execute` calls pay nothing — None on plans for backends
+    with no ragged executor, which keep an eager bitmap/kidx instead):
+      step_i/step_j/step_k  (S,) int32 — per-grid-step block ids, S = V
+                            padded to a bucket (padding repeats the last
+                            real triple so Pallas revisits, no re-fetch)
+      step_flags            (S,) int32 — STEP_INIT/ACC/FLUSH bits; padding
+                            steps carry no bits (no accumulate, no flush)
+
+    A NamedTuple of arrays, hence a pytree: plans carrying work pass
+    through jit (shapes are static per plan instance).
+    """
+    rows: jax.Array
+    cols: jax.Array
+    offsets: jax.Array
+    klist: jax.Array
+    step_i: jax.Array
+    step_j: jax.Array
+    step_k: jax.Array
+    step_flags: jax.Array
+
+    @property
+    def num_pairs(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def num_valid(self) -> int:
+        return self.klist.shape[0]
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    """Pad the step count to a power-of-two bucket so the jitted ragged
+    kernel compiles once per bucket, not once per distinct Σnvalid."""
+    return max(minimum, 1 << max(n - 1, 0).bit_length())
+
+
+def compact_from_triples(ii, jj, kk, *, gm: int, gn: int, gk: int,
+                         block_n: int = 1, steps: bool = True,
+                         assume_sorted: bool = False):
+    """kidx/nvalid straight from surviving (i, j, k) triples — §3.3
+    map_offset compaction WITHOUT materializing or sorting the dense
+    (gm, gn, gk) bitmap.
+
+    ii/jj/kk: integer arrays of the surviving triples in any order (the
+    hierarchical descent's output, or the flat gate's nonzero scan), with
+    jj at FINE column granularity; duplicates after super-column grouping
+    are folded. Cost is O(V log V) in the V surviving triples (one fused-key
+    argsort + linear passes) — sub-linear in the grid for pruned products,
+    vs the legacy `spamm_compact_ref` sort over all gm·gn·gk slots.
+
+    Returns (work: SpammWork of numpy arrays, nvalid: (gm, gn//block_n)
+    int32 numpy) — nvalid is the paper's validNum, scattered from the
+    work-list (a cheap (gm, gnb) array, NOT the dense bitmap).
+
+    steps=False skips the bucket-padded per-step tables (their fields come
+    back None): backends with no ragged executor never read them, so the
+    planner saves their construction and device upload on, e.g., the jnp
+    serving hot path while the pair view still powers `info()`.
+
+    assume_sorted=True skips the O(V log V) sort for callers whose triples
+    already arrive in ascending fused-key, i.e. (i, j, k) row-major, order
+    and without duplicates — the flat gate's chunked nonzero scan is one
+    (making the flat eager path O(V)); the hierarchical descent is not.
+    """
+    assert gn % block_n == 0, (gn, block_n)
+    gnb = gn // block_n
+    ii = np.asarray(ii, np.int64).ravel()
+    kk = np.asarray(kk, np.int64).ravel()
+    jb = np.asarray(jj, np.int64).ravel()
+    if block_n > 1:
+        jb = jb // block_n
+    # one fused-key sort instead of a 3-key lexsort (~2× on the hot path);
+    # int64 keys cannot overflow for any grid whose bitmap would fit memory
+    key = (ii * gnb + jb) * gk + kk
+    if not assume_sorted:
+        key = np.sort(key)
+    if block_n > 1 and key.size:
+        # member columns of one super-column collapse to the same (i, jb, k)
+        keep = np.ones(key.size, bool)
+        keep[1:] = key[1:] != key[:-1]
+        key = key[keep]
+    kk = (key % gk).astype(np.int32)
+    pair = key // gk
+    jb = (pair % gnb).astype(np.int32)
+    ii = (pair // gnb).astype(np.int32)
+    v = ii.size
+    nvalid = np.zeros((gm, gnb), np.int32)
+    step_i = step_j = step_k = step_flags = None
+    if steps:
+        s = _bucket(v)
+        step_i = np.zeros(s, np.int32)
+        step_j = np.zeros(s, np.int32)
+        step_k = np.zeros(s, np.int32)
+        step_flags = np.zeros(s, np.int32)
+    if v:
+        newpair = np.ones(v, bool)
+        newpair[1:] = pair[1:] != pair[:-1]
+        starts = np.flatnonzero(newpair).astype(np.int32)
+        rows, cols = ii[starts], jb[starts]
+        offsets = np.append(starts, np.int32(v)).astype(np.int32)
+        nvalid[rows, cols] = np.diff(offsets)
+        if steps:
+            step_i[:v], step_j[:v], step_k[:v] = ii, jb, kk
+            step_i[v:], step_j[v:], step_k[v:] = ii[-1], jb[-1], kk[-1]
+            flags = np.full(v, STEP_ACC, np.int32)
+            flags[starts] |= STEP_INIT
+            flags[np.append(starts[1:], v) - 1] |= STEP_FLUSH
+            step_flags[:v] = flags
+    else:
+        rows = cols = np.zeros(0, np.int32)
+        offsets = np.zeros(1, np.int32)
+        if steps:
+            # no real steps: every grid step maps to output block (0, 0) and
+            # on real TPU its VMEM window is copied back at window end even
+            # if the kernel never stores — make step 0 init+flush the (zero)
+            # accumulator so that block is written with zeros, not garbage
+            step_flags[0] = STEP_INIT | STEP_FLUSH
+    work = SpammWork(rows=rows, cols=cols, offsets=offsets, klist=kk,
+                     step_i=step_i, step_j=step_j, step_k=step_k,
+                     step_flags=step_flags)
+    return work, nvalid
+
+
+def kidx_from_work(work: SpammWork, gm: int, gnb: int, gk: int) -> np.ndarray:
+    """Dense (gm, gnb, gk) kidx table from a work-list — same layout as
+    `spamm_compact_ref` (ascending valid k's first, padding slots repeat the
+    last valid k, all-invalid pairs read 0) but built by O(V) scatters, no
+    sort over the grid. Only needed for backends whose dense-grid kernel
+    consumes kidx but lack a `matmul_worklist` entry point."""
+    rows = np.asarray(work.rows)
+    cols = np.asarray(work.cols)
+    offsets = np.asarray(work.offsets)
+    klist = np.asarray(work.klist)
+    lastk = np.zeros((gm, gnb), np.int32)
+    if klist.size:
+        lastk[rows, cols] = klist[offsets[1:] - 1]
+    kidx = np.broadcast_to(lastk[:, :, None], (gm, gnb, gk)).copy()
+    if klist.size:
+        counts = np.diff(offsets)
+        t = np.arange(klist.size, dtype=np.int32) - np.repeat(
+            offsets[:-1], counts)
+        kidx[np.repeat(rows, counts), np.repeat(cols, counts), t] = klist
+    return kidx
+
+
+# ---------------------------------------------------------------------------
 # SpammPlan
 # ---------------------------------------------------------------------------
 
@@ -174,11 +362,18 @@ class SpammPlan:
       norm_a      (gm, gk)  A-side normmap
       norm_b      (gk, gn)  B-side normmap
       mask        (gm, gn//block_n, gk) bool — validity bitmap at
-                  super-column granularity (block_n=1 ⇒ per-tile)
+                  super-column granularity (block_n=1 ⇒ per-tile). LAZY for
+                  work-list plans: stored as None and scattered from `work`
+                  only if a caller actually reads it (the ragged executor
+                  never does).
       kidx        (gm, gn//block_n, gk) int32 compacted valid-k lists, or
-                  None when the backend gates from `mask` directly
+                  None when the backend gates from `mask` directly or
+                  executes the work-list
       nvalid      (gm, gn//block_n) int32, or None (as above)
-      valid_tiles i32 scalar — Σ mask
+      valid_tiles i32 scalar — Σnvalid (== Σ mask)
+      work        SpammWork or None — the §3.3 compacted work-list, present
+                  on every concretely-planned product; `execute` drives the
+                  ragged kernel from it when the backend has one.
 
     Static metadata (aux): tile, block_n, backend (resolved name), levels
     (pyramid coarsening steps the mask was gated with; 0 = flat — the mask is
@@ -186,23 +381,37 @@ class SpammPlan:
     """
 
     def __init__(self, tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
-                 *, tile: int, block_n: int, backend: str, levels: int = 0):
+                 work=None, *, tile: int, block_n: int, backend: str,
+                 levels: int = 0):
         self.tau = tau
         self.norm_a = norm_a
         self.norm_b = norm_b
-        self.mask = mask
+        self._mask = mask
         self.kidx = kidx
         self.nvalid = nvalid
         self.valid_tiles = valid_tiles
+        self.work = work
         self.tile = tile
         self.block_n = block_n
         self.backend = backend
         self.levels = levels
 
     # -- pytree protocol ----------------------------------------------------
+    @property
+    def _mask_is_derived(self) -> bool:
+        """True when the mask is a lazy view over the step tables (ragged-
+        executor plans); such plans keep the executable truth in `work`."""
+        return self.work is not None and self.work.step_i is not None
+
     def tree_flatten(self):
-        children = (self.tau, self.norm_a, self.norm_b, self.mask,
-                    self.kidx, self.nvalid, self.valid_tiles)
+        # plans whose mask is a derived cache of the step tables flatten it
+        # as None unconditionally: including it once materialized would
+        # change the treedef (None leaf → array leaf), silently invalidating
+        # jit caches keyed on the plan structure. Mask-primary plans always
+        # flatten the real bitmap.
+        mask_child = None if self._mask_is_derived else self._mask
+        children = (self.tau, self.norm_a, self.norm_b, mask_child,
+                    self.kidx, self.nvalid, self.valid_tiles, self.work)
         return children, (self.tile, self.block_n, self.backend, self.levels)
 
     @classmethod
@@ -213,8 +422,39 @@ class SpammPlan:
 
     # -- derived quantities -------------------------------------------------
     @property
+    def grid(self):
+        """(gm, gn//block_n, gk) — from the normmaps, so reading it never
+        forces the lazy mask."""
+        gm, gk = self.norm_a.shape
+        gn = self.norm_b.shape[-1]
+        return gm, gn // self.block_n, gk
+
+    @property
+    def mask(self) -> jax.Array:
+        """The dense validity bitmap — a derived view for work-list plans,
+        scattered on first read (jnp masked einsum, tests, V-matrix
+        consumers); the compacted `work` is the primary representation.
+
+        Scatters from the STEP view, not the pair view: step tables have
+        static shapes, so the build traces under jit (a plan re-entering
+        through tree_unflatten carries tracer work arrays), whereas the pair
+        view needs dynamic-count repeats. plan()'s eager host scatter (for
+        backends built WITHOUT step tables) is the numpy twin of this — a
+        change to the work-list encoding must update both.
+        """
+        if self._mask is None:
+            gm, gnb, gk = self.grid
+            w = self.work
+            real = (w.step_flags & STEP_ACC) != 0
+            self._mask = (
+                jnp.zeros((gm, gnb, gk), bool)
+                .at[w.step_i, w.step_j, w.step_k].max(real)
+            )
+        return self._mask
+
+    @property
     def total_tiles(self) -> int:
-        gm, gnb, gk = self.mask.shape
+        gm, gnb, gk = self.grid
         return gm * gnb * gk
 
     @property
@@ -225,8 +465,8 @@ class SpammPlan:
         """The info dict `kernels.ops.spamm_matmul` has always returned.
 
         `nvalid` is the per-(i, j) valid-k count (the paper's validNum). The
-        compacted copy is reused when the backend built one; backends that
-        gate straight from the bitmap get the same counts summed from it.
+        compacted copy is reused when the planner built one; traced bitmap
+        plans get the same counts summed from the mask.
         """
         nvalid = self.nvalid
         if nvalid is None:
@@ -270,15 +510,19 @@ _OFF_J = np.array([j for _ in (0, 1) for j in (0, 1) for _ in (0, 1)], np.int32)
 _OFF_K = np.array([k for _ in (0, 1) for _ in (0, 1) for k in (0, 1)], np.int32)
 
 
-def _hier_mask_host(la, lb, tau: float) -> np.ndarray:
-    """Sparse coarse-to-fine descent on concrete normmaps (numpy).
+def _hier_descend_host(la, lb, tau: float):
+    """Sparse coarse-to-fine descent on concrete normmaps (numpy) — returns
+    the surviving fine (ii, jj, kk) triples DIRECTLY, i.e. already in the
+    compacted form `compact_from_triples` consumes (§3.3: the descent owns
+    the valid set; scattering it into a bitmap and re-deriving kidx by
+    sorting would throw that away).
 
     la/lb: per-level np normmaps, finest first. Gates the full (tiny)
     coarsest level, then repeatedly expands only the SURVIVING triples into
     their 2×2×2 children — work is O(coarse grid + surviving candidates), not
     O(gm·gn·gk), which is what makes plan construction sub-linear in the
-    pruned region. The level-0 test is the exact flat gate, so the scattered
-    result is bit-identical to `gate_mask`.
+    pruned region. The level-0 test is the exact flat gate, so the triple
+    set is exactly the support of `gate_mask`.
     """
     top = len(la) - 1
     tau_c = tau - _COARSE_SLACK * abs(tau)
@@ -300,6 +544,13 @@ def _hier_mask_host(la, lb, tau: float) -> np.ndarray:
         vals = la[l][i2, k2] * lb[l][k2, j2]
         s = vals >= (tau if l == 0 else tau_c)
         ii, jj, kk = i2[s], j2[s], k2[s]
+    return ii, jj, kk
+
+
+def _hier_mask_host(la, lb, tau: float) -> np.ndarray:
+    """Dense bitmap view of `_hier_descend_host` (kept for `hier_gate_mask`
+    callers that want the bitmap; the planner consumes the triples)."""
+    ii, jj, kk = _hier_descend_host(la, lb, tau)
     gm, gk = la[0].shape
     gn = lb[0].shape[1]
     mask = np.zeros(gm * gn * gk, bool)
@@ -363,6 +614,39 @@ def hier_gate_mask(pyr_a: NormPyramid, pyr_b: NormPyramid, tau,
         mask = grouped.any(2) if isinstance(mask, np.ndarray) else \
             jnp.any(grouped, axis=2)
     return mask
+
+
+def _flat_triples_host(na: np.ndarray, nb: np.ndarray, tau: float,
+                       block_n: int, *, keep_mask: bool):
+    """Concrete flat gate on host, in row chunks: the fp32 products are
+    exactly `gate_mask`'s, but the (gm, gn, gk) float tensor is never held
+    whole — each chunk is reduced to bool (and to super-columns) before the
+    next is computed, so peak memory is the 1-byte bitmap at most (and only
+    when `keep_mask` asks for it, i.e. a dense-path backend will consume it).
+
+    Returns ((ii, jb, kk) super-column-granularity triples, bitmap or None).
+    """
+    gm, gk = na.shape
+    gn = nb.shape[1]
+    assert gn % block_n == 0, (gn, block_n)
+    gnb = gn // block_n
+    nbt = np.ascontiguousarray(nb.T)  # (gn, gk)
+    mask = np.zeros((gm, gnb, gk), bool) if keep_mask else None
+    # ~64 MB transient fp32 product per chunk
+    step = max(1, (1 << 24) // max(gn * gk, 1))
+    parts_i, parts_j, parts_k = [], [], []
+    for i0 in range(0, gm, step):
+        blk = na[i0:i0 + step, None, :] * nbt[None] >= tau
+        if block_n > 1:
+            blk = blk.reshape(blk.shape[0], gnb, block_n, gk).any(2)
+        if keep_mask:
+            mask[i0:i0 + step] = blk
+        bi, bj, bk_ = np.nonzero(blk)
+        parts_i.append((bi.astype(np.int64) + i0))
+        parts_j.append(bj)
+        parts_k.append(bk_)
+    return (np.concatenate(parts_i), np.concatenate(parts_j),
+            np.concatenate(parts_k)), mask
 
 
 def _maybe_compact(mask, backend: str):
@@ -450,6 +734,9 @@ def plan(
         if isinstance(norm_b, NormPyramid):
             norm_b = norm_b.base
         hier = False
+    triples = None          # surviving (i, j, k); j granularity per flag
+    triples_grouped = False  # True ⇒ j is already a super-column id
+    mask = None
     if hier:
         want = max(
             levels,
@@ -464,7 +751,21 @@ def plan(
 
             tau, _ = search_tau_pyramid(pyr_a, pyr_b, valid_ratio)
         tau = jnp.asarray(tau, jnp.float32)
-        mask = hier_gate_mask(pyr_a, pyr_b, tau, block_n)
+        if _any_traced((pyr_a, pyr_b, tau)):
+            # even with concrete OPERANDS, an enclosing jit turns the
+            # nested-jit kernels (pyramid_norms, the τ-search) into tracer
+            # producers — the host descent can't run there, so gate with the
+            # traced coarse-to-fine refinement (bit-identical mask)
+            mask = hier_gate_mask(pyr_a, pyr_b, tau, block_n)
+        else:
+            # fully concrete: the descent hands over its surviving triples —
+            # the compacted set — and no dense bitmap is ever materialized
+            lv = min(pyr_a.num_levels, pyr_b.num_levels)
+            triples = _hier_descend_host(
+                [np.asarray(x) for x in pyr_a.levels[: lv + 1]],
+                [np.asarray(x) for x in pyr_b.levels[: lv + 1]],
+                float(np.asarray(tau)),
+            )
     else:
         if norm_a is None:
             if a is None:
@@ -480,16 +781,59 @@ def plan(
 
             tau, _ = search_tau(norm_a, norm_b, valid_ratio)
         tau = jnp.asarray(tau, jnp.float32)
-        mask = gate_mask(norm_a, norm_b, tau, block_n)
+        if _any_traced((norm_a, norm_b, tau)):
+            mask = gate_mask(norm_a, norm_b, tau, block_n)
+        else:
+            # concrete flat gate on host: same fp32 products as gate_mask,
+            # then a nonzero scan — the triples feed compact_from_triples so
+            # kidx/nvalid need no sort over the (gm, gn, gk) grid
+            triples, mask = _flat_triples_host(
+                np.asarray(norm_a), np.asarray(norm_b),
+                float(np.asarray(tau)), block_n,
+                keep_mask=bk.matmul_worklist is None)
+            triples_grouped = True
 
-    if isinstance(mask, np.ndarray):  # host descent: count before upload
-        valid_tiles = jnp.int32(int(np.count_nonzero(mask)))
-        mask = jnp.asarray(mask)
-    else:
+    gm, gk = norm_a.shape
+    gn = norm_b.shape[-1]
+    gnb = gn // block_n
+    if triples is not None:  # concrete plan: compacted-first
+        # per-step tables only for backends that will execute the ragged
+        # kernel; bitmap/dense-kidx backends never read them
+        steps = bk.matmul_worklist is not None
+        if triples_grouped:
+            # the chunked nonzero scan emits triples in row-major (sorted
+            # fused-key) order with grouping already applied — skip the sort
+            work_np, nvalid_np = compact_from_triples(
+                *triples, gm=gm, gn=gnb, gk=gk, block_n=1, steps=steps,
+                assume_sorted=True)
+        else:
+            work_np, nvalid_np = compact_from_triples(
+                *triples, gm=gm, gn=gn, gk=gk, block_n=block_n, steps=steps)
+        valid_tiles = jnp.int32(int(work_np.klist.size))
+        nvalid = jnp.asarray(nvalid_np)
+        # dense kidx only for dense-grid kernels with no ragged entry point
+        kidx = (jnp.asarray(kidx_from_work(work_np, gm, gnb, gk))
+                if bk.needs_compaction and bk.matmul_worklist is None
+                else None)
+        if mask is None and not steps:
+            # no ragged executor means the executable form IS the bitmap (or
+            # the kidx above) — scatter it now from the pair view instead of
+            # lazily from step tables that were never built (numpy twin of
+            # SpammPlan.mask's traceable step-view scatter; keep in sync)
+            m_host = np.zeros((gm, gnb, gk), bool)
+            counts = np.diff(work_np.offsets)
+            m_host[np.repeat(work_np.rows, counts),
+                   np.repeat(work_np.cols, counts), work_np.klist] = True
+            mask = m_host
+        work = SpammWork(*(jnp.asarray(x) if x is not None else None
+                           for x in work_np))
+        mask = jnp.asarray(mask) if mask is not None else None
+    else:  # traced plan: dense bitmap, legacy compaction
         valid_tiles = jnp.sum(mask, dtype=jnp.int32)
-    kidx, nvalid = _maybe_compact(mask, bk.name)
+        kidx, nvalid = _maybe_compact(mask, bk.name)
+        work = None
     return SpammPlan(tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
-                     tile=tile, block_n=block_n, backend=bk.name,
+                     work, tile=tile, block_n=block_n, backend=bk.name,
                      levels=(want if hier else 0))
 
 
@@ -507,6 +851,10 @@ def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
     assert a.shape == (gm * t, gk * t), (a.shape, (gm * t, gk * t))
     assert b.shape == (gk * t, gn * t), (b.shape, (gk * t, gn * t))
     bk = kops.get_backend(p.backend)
+    if p.work is not None and bk.matmul_worklist is not None:
+        # ragged path: Σnvalid grid steps, dense mask never materialized
+        return bk.matmul_worklist(a, b, p.work, p.tile, p.block_n,
+                                  out_dtype or jnp.float32)
     return bk.matmul(a, b, p.mask, p.kidx, p.nvalid, p.tile, p.block_n,
                      out_dtype or jnp.float32)
 
@@ -552,18 +900,21 @@ class WeightPlanCache:
         )
 
     def weight_side(self, w, *, tile: int, backend: str,
-                    use_mxu: bool = False, levels: int = 0):
+                    use_mxu: bool = False, levels: int = 0,
+                    block_n: int = 1):
         """(padded_weight, weight_norms) for w, cached on identity.
 
         w may be 2-D (K, N) → normmap (gk, gn), or 3-D batched (B, K, N) —
         the per-expert MoE shape — → normmap (B, gk, gn) from one reshaped
         get-norm pass (row tiles never cross slices after padding).
         levels > 0 returns a NormPyramid instead of the plain normmap (for
-        3-D weights the pyramid levels carry the batch dim)."""
+        3-D weights the pyramid levels carry the batch dim). block_n > 1
+        pads N to tile·block_n so the super-column grouping always divides
+        the column grid (the padding is part of the cache key)."""
         bk = kops.get_backend(backend)
 
         def compute():
-            wp = pad_to_tile(jnp.asarray(w), tile)
+            wp = pad_to_tile(jnp.asarray(w), tile, tile * block_n)
             if wp.ndim == 3:
                 bsz, kp, np_ = wp.shape
                 nw = bk.norms(wp.reshape(bsz * kp, np_), tile,
@@ -577,7 +928,8 @@ class WeightPlanCache:
 
         if not self._cacheable(w):
             return compute()
-        key = (id(w), w.shape, str(w.dtype), tile, bk.name, use_mxu, levels)
+        key = (id(w), w.shape, str(w.dtype), tile, bk.name, use_mxu, levels,
+               block_n)
         ent = self._entries.get(key)
         if ent is not None and ent.weight is w:
             self.hits += 1
@@ -598,7 +950,8 @@ class WeightPlanCache:
         levels > 0 plans hierarchically with the cached weight pyramid.
         """
         wp, nw = self.weight_side(w, tile=tile, backend=backend,
-                                  use_mxu=use_mxu_norm, levels=levels)
+                                  use_mxu=use_mxu_norm, levels=levels,
+                                  block_n=block_n)
         p = plan(x_padded, None, tau, valid_ratio=valid_ratio, norm_b=nw,
                  tile=tile, block_n=block_n, backend=backend,
                  use_mxu_norm=use_mxu_norm, levels=levels)
@@ -662,9 +1015,10 @@ def spamm_bmm(
         mp, kp = xp.shape[1:]
         if cache is not None:
             wp, nw = cache.weight_side(w, tile=tile, backend=backend,
-                                       use_mxu=use_mxu_norm, levels=levels)
+                                       use_mxu=use_mxu_norm, levels=levels,
+                                       block_n=block_n)
         else:
-            wp = pad_to_tile(w, tile)
+            wp = pad_to_tile(w, tile, tile * block_n)
             nw = bk.norms(wp, tile, use_mxu=use_mxu_norm)
             if levels > 0:
                 nw = NormPyramid.from_normmap(nw, levels, tile=tile)
@@ -687,9 +1041,9 @@ def spamm_bmm(
         gm, gk = mp // tile, kp // tile
         if cache is not None:
             wp, nw = cache.weight_side(w, tile=tile, backend=backend,
-                                       use_mxu=use_mxu_norm)
+                                       use_mxu=use_mxu_norm, block_n=block_n)
         else:
-            wp = pad_to_tile(w, tile)
+            wp = pad_to_tile(w, tile, tile * block_n)
             np_ = wp.shape[2]
             nw = bk.norms(wp.reshape(bsz * kp, np_), tile,
                           use_mxu=use_mxu_norm).reshape(bsz, gk, -1)

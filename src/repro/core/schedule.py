@@ -68,6 +68,37 @@ def device_permutation(num_devices: int, gm: int, schedule: str) -> np.ndarray:
     )
 
 
+def device_loads(v: jax.Array, num_devices: int, schedule: str, *,
+                 level: int = 0, fine_rows: int = None) -> np.ndarray:
+    """Per-device work under a row-strip assignment, attributed at FINE
+    tile-row granularity.
+
+    V's rows may be coarse (each ceil-pooling 2^level fine tile-rows, the
+    norm-pyramid work estimate): a coarse row that straddles a fine shard
+    boundary must split its work across the devices that actually own its
+    fine rows — `rows_for_device`'s array_split over COARSE rows does not
+    match that ownership (its remainder spreading differs from how fine
+    contiguous shards map onto ceil-pooled coarse rows, and cyclic strides
+    walk fine rows, not coarse ones). Each coarse row's work is spread
+    uniformly over its member fine rows (clipped at the ragged edge), then
+    summed per device with the exact fine assignment.
+    """
+    work_rows = np.asarray(jnp.sum(v, axis=1), np.float64)
+    f = 1 << level
+    gm = fine_rows if fine_rows is not None else work_rows.shape[0] * f
+    assert work_rows.shape[0] == -(-gm // f), (v.shape, level, gm)
+    # last coarse row may pool fewer than 2^level fine rows (ceil pooling)
+    counts = np.clip(gm - np.arange(work_rows.shape[0]) * f, 0, f)
+    per_fine = np.repeat(work_rows / np.maximum(counts, 1), f)[:gm]
+    # ownership comes from rows_for_device — the SAME function the execution
+    # sharding (device_permutation) is built from, so estimate and execution
+    # cannot drift apart again
+    return np.array([
+        per_fine[rows_for_device(d, num_devices, gm, schedule)].sum()
+        for d in range(num_devices)
+    ])
+
+
 def imbalance(v: jax.Array, num_devices: int, schedule: str) -> jax.Array:
     """max-device-work / mean-device-work under a row-strip assignment of V
     (the §3.4 row partition; banded matrices are naturally balanced here)."""
@@ -98,16 +129,28 @@ def tile_imbalance(v: jax.Array, num_workers: int, schedule: str) -> jax.Array:
 
 
 def auto_schedule(v: jax.Array, num_devices: int, *,
-                  threshold: float = 1.25) -> str:
+                  threshold: float = 1.25, level: int = 0,
+                  fine_rows: int = None) -> str:
     """Pick the row-strip schedule from a (possibly coarse) work estimate V:
     'cyclic' when the contiguous assignment is measurably imbalanced AND
     cyclic actually improves it, else 'contiguous' (the cheapest HLO — no
     in-step permutation). The threshold is deliberately conservative: the
     in-step cyclic permutation costs a collective, so mild imbalance (e.g.
     banded matrices' lighter edge rows) should not trigger it.
+
+    level/fine_rows: set when V is a coarse pyramid-level estimate of a
+    product whose FINE row grid is what actually shards — the loads are then
+    attributed through `device_loads`' fine-boundary split instead of
+    treating coarse rows as indivisible (at level 0 this reduces exactly to
+    the flat per-row attribution, so there is ONE decision rule).
     Eager-only: the decision is a Python string."""
-    if v.shape[0] < num_devices:
-        return "contiguous"  # fewer row groups than devices: nothing to fix
-    imb_c = float(imbalance(v, num_devices, "contiguous"))
-    imb_s = float(imbalance(v, num_devices, "cyclic"))
-    return "cyclic" if (imb_c > threshold and imb_s < imb_c) else "contiguous"
+    gm = fine_rows if fine_rows is not None else v.shape[0] << level
+    if gm < num_devices:
+        return "contiguous"  # fewer rows than devices: nothing to fix
+    imbs = {}
+    for sched in ("contiguous", "cyclic"):
+        loads = device_loads(v, num_devices, sched, level=level,
+                             fine_rows=gm)
+        imbs[sched] = float(loads.max() / max(loads.mean(), 1e-9))
+    return ("cyclic" if imbs["contiguous"] > threshold
+            and imbs["cyclic"] < imbs["contiguous"] else "contiguous")

@@ -91,7 +91,10 @@ def spamm(
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    ap, bp = pad_to_tile(a, tile), pad_to_tile(b, tile)
+    # the weight side pads N to tile·block_n, not just tile: super-column
+    # grouping needs gn % block_n == 0 for ANY N (padded columns have zero
+    # norms, so they never flip a super-column's gate on their own)
+    ap, bp = pad_to_tile(a, tile), pad_to_tile(b, tile, tile * block_n)
 
     p = _plan.plan(
         ap, bp, tau,

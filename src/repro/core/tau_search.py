@@ -33,6 +33,15 @@ class TauSearchResult(NamedTuple):
     iterations: jax.Array
 
 
+def _mean_norm_product(norm_a: jax.Array, norm_b: jax.Array) -> jax.Array:
+    """mean_{i,j,k} na[i,k]·nb[k,j] without materializing the product
+    tensor: (1/(gm·gn·gk)) Σ_k (Σ_i na[i,k])(Σ_j nb[k,j]). Zero iff every
+    product is zero — the degenerate-operand guard both searches share."""
+    gm, gk = norm_a.shape
+    _, gn = norm_b.shape
+    return jnp.sum(jnp.sum(norm_a, 0) * jnp.sum(norm_b, 1)) / (gm * gn * gk)
+
+
 def _bisect(norm_a, norm_b, target, lo, hi, tol, max_iters):
     """Binary search for ratio(τ) ≈ target on [lo, hi], tracking the best
     candidate seen. Returns (tau, achieved_ratio, iterations)."""
@@ -42,8 +51,14 @@ def _bisect(norm_a, norm_b, target, lo, hi, tol, max_iters):
 
     def bin_cond(state):
         lo_, hi_, it, best_tau, best_r = state
-        return jnp.logical_and(it < max_iters,
-                               jnp.abs(best_r - target) > tol)
+        # hi_ > lo_ guards the degenerate bracket: all-zero operands give
+        # [0, 0] (ave == 0 skips expansion) and fp midpoints eventually
+        # collapse the bracket — either way further ratio() evaluations
+        # cannot move, so stop instead of spinning to max_iters
+        return jnp.logical_and(
+            hi_ > lo_,
+            jnp.logical_and(it < max_iters, jnp.abs(best_r - target) > tol),
+        )
 
     def bin_body(state):
         lo_, hi_, it, best_tau, best_r = state
@@ -79,19 +94,21 @@ def search_tau(
     valid_ratio is monotone non-increasing in τ; ratio(0)=1, ratio(∞)=0.
     """
     target = jnp.asarray(target_ratio, jnp.float32)
-    # mean norm product without materializing the product tensor:
-    # mean_{i,j,k} na[i,k]·nb[k,j] = (1/(gm·gn·gk)) Σ_k (Σ_i na[i,k])(Σ_j nb[k,j])
-    gm, gk = norm_a.shape
-    _, gn = norm_b.shape
-    ave = jnp.sum(jnp.sum(norm_a, 0) * jnp.sum(norm_b, 1)) / (gm * gn * gk)
+    ave = _mean_norm_product(norm_a, norm_b)
 
     def ratio(tau):
         return _spamm.valid_ratio_of(norm_a, norm_b, tau).astype(jnp.float32)
 
     # --- expand upper bound: k ← k+1 until ratio(k·ave) <= target (paper) ---
+    # ave == 0 (all-zero operands): every norm product is 0, so ratio(k·0) is
+    # ratio(0) = 1 forever and the loop would spin to the k < 1024 cap for
+    # nothing — early-exit with the [0, 0] bracket, i.e. τ = 0 (the only
+    # sensible threshold: τ ≤ 0 keeps everything, τ > 0 keeps nothing).
     def exp_cond(state):
         k, _ = state
-        return jnp.logical_and(ratio(k * ave) > target, k < 1024.0)
+        return jnp.logical_and(
+            ave > 0.0, jnp.logical_and(ratio(k * ave) > target, k < 1024.0)
+        )
 
     def exp_body(state):
         k, it = state
@@ -145,13 +162,23 @@ def search_tau_pyramid(
     def ratio(tau):
         return _spamm.valid_ratio_of(na_f, nb_f, tau).astype(jnp.float32)
 
+    # mirror of search_tau's degenerate guard: with an all-zero fine mean
+    # product no doubling of hi can ever bring ratio(hi) below a target the
+    # operands cannot reach — skip the 8 doubling rounds and collapse the
+    # fine bracket to [0, 0] so the bisection returns τ = 0 immediately
+    ave_f = _mean_norm_product(na_f, nb_f)
+
     # τ_c could undershoot by its tolerance; inflate, then double until the
     # fine ratio at hi is at or below target (usually zero iterations).
-    hi0 = jnp.maximum(tau_c * 1.25, jnp.float32(1e-30))
+    hi0 = jnp.where(ave_f > 0.0,
+                    jnp.maximum(tau_c * 1.25, jnp.float32(1e-30)),
+                    jnp.float32(0.0))
 
     def g_cond(state):
         hi, it = state
-        return jnp.logical_and(ratio(hi) > target, it < 8)
+        return jnp.logical_and(
+            ave_f > 0.0, jnp.logical_and(ratio(hi) > target, it < 8)
+        )
 
     def g_body(state):
         hi, it = state

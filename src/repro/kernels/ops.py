@@ -63,12 +63,20 @@ class Backend:
       pooling reductions (the norm pyramid of hierarchical gating). None
       ⇒ the planner falls back to norms() + the jnp pooling oracle, so
       third-party backends registered before this entry point keep working.
+    matmul_worklist(a, b, work, tile, block_n,
+                    out_dtype)                     → (M, N) out_dtype
+      the ragged execution path: `work` is a `repro.core.plan.SpammWork`
+      (flattened per-(i, j) work-list with padded per-step tables) and the
+      grid is Σnvalid steps, not gm·gn·gk. None ⇒ the executor falls back
+      to `matmul` with the dense mask/kidx, so third-party backends keep
+      working unchanged.
     """
     name: str
     norms: Callable[..., jax.Array]
     matmul: Callable[..., jax.Array]
     needs_compaction: bool = True
     pyramid_norms: Callable[..., tuple] = None
+    matmul_worklist: Callable[..., jax.Array] = None
 
 
 def _jnp_norms(x, tile, use_mxu=False):
@@ -122,15 +130,30 @@ def _pallas_matmul(interpret):
     return matmul
 
 
+def _pallas_matmul_worklist(interpret):
+    def matmul_worklist(a, b, work, tile, block_n, out_dtype):
+        return _spamm_mm.spamm_mm_worklist(
+            a, b, work.step_i, work.step_j, work.step_k, work.step_flags,
+            tile=tile, block_n=block_n, out_dtype=out_dtype,
+            interpret=interpret,
+        )
+
+    return matmul_worklist
+
+
 BACKENDS = {
     # jnp leaves pyramid_norms unset: the norms() + pool_norms_ref fallback
     # in pyramid_norms() below IS the jnp implementation (one copy to
-    # maintain); the Pallas backends register the pooling kernel.
+    # maintain); the Pallas backends register the pooling kernel. It also
+    # leaves matmul_worklist unset — the masked einsum already only pays for
+    # a dense einsum, and the executor's None-fallback IS the jnp path.
     "jnp": Backend("jnp", _jnp_norms, _jnp_matmul, needs_compaction=False),
     "interpret": Backend("interpret", _pallas_norms(True), _pallas_matmul(True),
-                         pyramid_norms=_pallas_pyramid_norms(True)),
+                         pyramid_norms=_pallas_pyramid_norms(True),
+                         matmul_worklist=_pallas_matmul_worklist(True)),
     "pallas": Backend("pallas", _pallas_norms(False), _pallas_matmul(False),
-                      pyramid_norms=_pallas_pyramid_norms(False)),
+                      pyramid_norms=_pallas_pyramid_norms(False),
+                      matmul_worklist=_pallas_matmul_worklist(False)),
 }
 
 VALID_BACKENDS = ("auto", *BACKENDS)

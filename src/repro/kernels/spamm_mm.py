@@ -3,7 +3,10 @@
 C[i,j] = sum over *valid* k of A[i,k] @ B[k,j], where validity is the norm
 test normA[i,k] * normB[k,j] >= tau computed by the get-norm kernel.
 
-TPU-native mapping of the paper's design:
+TPU-native mapping of the paper's design — two entry points:
+
+`spamm_mm` (dense-grid): walks the full (gm, gn, gk) grid and masks invalid
+steps out.
 
   * paper `map_offset` (Fig. 3b — compacted list of valid k's so the bitmap
     walk is contiguous)  →  an int32 scalar-prefetch table `kidx[i, j, t]`
@@ -19,12 +22,25 @@ TPU-native mapping of the paper's design:
   * paper tensor-core path (Alg. 3, fp16 fragments / fp32 accumulator)  →
     bf16 inputs into the MXU via jnp.dot(..., preferred_element_type=f32).
 
-The mask/compaction (paper Alg. 2 lines 3–14) runs as fused XLA ops over the
-normmaps — built ONCE per product by `repro.core.plan.plan` into a
-`SpammPlan` and handed to this kernel by `repro.core.plan.execute` — because
-on TPU the compaction is a cheap O(gm·gn·gk) elementwise+sort pass, not a
-per-block recomputation. Serving callers reuse the plan (weight-side
-artifacts via `repro.core.plan.WeightPlanCache`) across repeated products.
+`spamm_mm_worklist` (ragged, the paper-faithful "iterate only valid
+products" form): a 1-D grid over the plan's flattened work-list — one grid
+step per surviving (i, j, k) triple, Σnvalid steps padded to a bucket
+instead of gm·gn·gk. Four scalar-prefetch tables (step_i/step_j/step_k/
+step_flags, built once by `repro.core.plan.compact_from_triples`) drive the
+BlockSpec index_maps; per-step flag bits init/accumulate/flush the VMEM
+accumulator at (i, j)-group boundaries. Output tiles with no valid product
+are never visited — the out buffer aliases a zeros array so they stay
+exactly zero. Heavily-pruned products therefore stop paying masked-out grid
+steps entirely: execution cost is proportional to valid work, which is the
+paper's map_offset design carried all the way into the grid shape.
+
+The gating itself (paper Alg. 2 lines 3–14) is built ONCE per product by
+`repro.core.plan.plan` into a `SpammPlan` — for concrete operands the
+compacted work-list comes straight from the hierarchical descent's
+surviving triples (no dense-bitmap sort); traced plans fall back to the
+dense `kidx` tables + `spamm_mm`. Serving callers reuse the plan
+(weight-side artifacts via `repro.core.plan.WeightPlanCache`) across
+repeated products.
 """
 from __future__ import annotations
 
@@ -121,3 +137,115 @@ def spamm_mm(
         interpret=interpret,
         name="spamm_mm",
     )(kidx, nvalid, a, b)
+
+
+# step_flags bits (see repro.core.plan.compact_from_triples, which builds the
+# tables): INIT zeroes the accumulator (first step of an (i, j) group), ACC
+# performs the dot (every real step; bucket-padding steps have no bits set),
+# FLUSH writes the accumulator to the output tile (last step of a group).
+STEP_INIT, STEP_ACC, STEP_FLUSH = 1, 2, 4
+
+
+def _spamm_mm_worklist_kernel(
+    si_ref, sj_ref, sk_ref, fl_ref, zero_ref, a_ref, b_ref, o_ref, acc_ref
+):
+    del zero_ref  # only aliased into o_ref so unvisited tiles stay zero
+    s = pl.program_id(0)
+    f = fl_ref[s]
+
+    @pl.when((f & STEP_INIT) != 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # paper Alg. 2 line 19, taken literally: every grid step IS a valid
+    # product (bucket-padding steps revisit the last real blocks — free — and
+    # carry no flag bits, so they neither accumulate nor flush).
+    @pl.when((f & STEP_ACC) != 0)
+    def _compute():
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when((f & STEP_FLUSH) != 0)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "out_dtype", "interpret", "block_n"),
+)
+def spamm_mm_worklist(
+    a: jax.Array,
+    b: jax.Array,
+    step_i: jax.Array,
+    step_j: jax.Array,
+    step_k: jax.Array,
+    step_flags: jax.Array,
+    *,
+    tile: int = 64,
+    block_n: int = 1,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged masked matmul: 1-D grid over the compacted work-list.
+
+    a: (M, K); b: (K, N). step_i/step_j/step_k/step_flags: (S,) int32 tables,
+    one entry per surviving (i, j, k) product in (i, j)-grouped ascending-k
+    order, S = Σnvalid padded to a bucket (padding entries repeat the last
+    real triple with flags 0). Built by `repro.core.plan.compact_from_triples`
+    straight from the planner's surviving triples.
+
+    `step_j` is a super-column id when block_n > 1 (each grid step computes a
+    (tile, tile·block_n) output block). The grid has length S, NOT gm·gn·gk —
+    pruned products cost nothing, and output tiles with no valid k stay zero
+    via the aliased zero-initialized output. f32 accumulation in ascending-k
+    order makes the result bit-identical to `spamm_mm` on the same mask.
+    Returns C: (M, N) in out_dtype.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % tile == 0 and k % tile == 0 and n % (tile * block_n) == 0, (
+        a.shape, b.shape, tile, block_n)
+    s = step_i.shape[0]
+    assert step_j.shape == step_k.shape == step_flags.shape == (s,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(s,),
+        in_specs=[
+            # zero output seed — same index map as the output so the aliased
+            # HBM buffer is simply revisited
+            pl.BlockSpec(
+                (tile, tile * block_n),
+                lambda s, si, sj, sk, fl: (si[s], sj[s]),
+            ),
+            pl.BlockSpec(
+                (tile, tile), lambda s, si, sj, sk, fl: (si[s], sk[s])
+            ),
+            pl.BlockSpec(
+                (tile, tile * block_n),
+                lambda s, si, sj, sk, fl: (sk[s], sj[s]),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (tile, tile * block_n), lambda s, si, sj, sk, fl: (si[s], sj[s])
+        ),
+        scratch_shapes=[pltpu.VMEM((tile, tile * block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spamm_mm_worklist_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # index 4 counts the scalar-prefetch tables: the zeros operand seeds
+        # the output buffer, so (i, j) tiles the work-list never visits are
+        # zero rather than uninitialized
+        input_output_aliases={4: 0},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="spamm_mm_worklist",
+    )(step_i, step_j, step_k, step_flags,
+      jnp.zeros((m, n), out_dtype), a, b)

@@ -37,9 +37,13 @@ class Engine:
 
     Note on amortization: the prefill step is jitted, so inside the compiled
     graph the weight normmaps are recomputed per call (tracers are never
-    cached — see WeightPlanCache); what jit amortizes is the Python-side
-    gating/trace. The cache pays off on the EAGER plan/execute serving path
-    (see benchmarks/plan_cache.py); moving weight plans to jit inputs so the
+    cached — see WeightPlanCache) and plans stay dense-bitmap; what jit
+    amortizes is the Python-side gating/trace. The cache pays off on the
+    EAGER plan/execute serving path (see benchmarks/plan_cache.py), where
+    plans now carry the §3.3 compacted work-list straight from the gating
+    descent and execution runs the ragged Σnvalid-step kernel
+    (`spamm_mm_worklist`) — cost proportional to valid work, see
+    benchmarks/sparse_exec.py. Moving weight plans to jit inputs so the
     compiled prefill skips get-norm too is the natural next step.
     """
 

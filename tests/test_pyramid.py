@@ -246,6 +246,39 @@ def test_auto_schedule_picks_cyclic_only_when_it_helps():
         "contiguous"
 
 
+def test_coarse_loads_attributed_through_fine_shard_boundaries():
+    """A coarse row straddling a fine shard boundary splits its work across
+    the devices that own its fine rows; array_split over coarse rows gave it
+    wholly to one side and could mis-pick the schedule."""
+    # gm=18 fine rows, level=2 (4 fine rows per coarse row, ceil → 5 coarse
+    # rows), 2 devices: the fine boundary at row 9 cuts coarse row 2 (fine
+    # rows 8–11) 1:3. All work in that row:
+    v = np.zeros((5, 5), np.int64)
+    v[2, :] = 4
+    v = jnp.asarray(v)
+    contig = schedule.device_loads(v, 2, "contiguous", level=2, fine_rows=18)
+    np.testing.assert_allclose(contig, [5.0, 15.0])
+    cyc = schedule.device_loads(v, 2, "cyclic", level=2, fine_rows=18)
+    np.testing.assert_allclose(cyc, [10.0, 10.0])
+    # the coarse-row array_split saw [20, 0] for BOTH schedules (coarse
+    # cyclic reshuffles whole coarse rows) and kept contiguous; the fine
+    # attribution sees the real 1.5× imbalance that cyclic fixes
+    assert schedule.auto_schedule(v, 2) == "contiguous"
+    assert schedule.auto_schedule(v, 2, level=2, fine_rows=18) == "cyclic"
+
+
+def test_fine_attribution_matches_flat_at_level_zero():
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.integers(0, 9, (16, 16)).astype(np.int32))
+    for sched in ("contiguous", "cyclic"):
+        loads = schedule.device_loads(v, 4, sched)
+        want = [float(jnp.sum(jnp.sum(v, 1)[np.asarray(
+            schedule.rows_for_device(d, 4, 16, sched))])) for d in range(4)]
+        np.testing.assert_allclose(loads, want)
+    assert schedule.auto_schedule(v, 4) == \
+        schedule.auto_schedule(v, 4, fine_rows=16)
+
+
 def test_weight_cache_holds_pyramid():
     w = _banded(256, 40)
     cache = pl.WeightPlanCache()

@@ -42,3 +42,36 @@ def test_monotone_interface():
         tau, _ = search_tau(na, na, target)
         taus.append(float(tau))
     assert taus[0] <= taus[1] <= taus[2]  # smaller ratio ⇒ larger τ
+
+
+def test_degenerate_all_zero_operands_early_exit():
+    """All-zero operands give ave == 0: the expansion loop used to evaluate
+    ratio(0) up to the k < 1024 cap and then bisect the empty [0, 0]
+    bracket for max_iters more evaluations. Both now early-exit with τ=0."""
+    z = jnp.zeros((8, 8), jnp.float32)
+    tau, res = search_tau(z, z, 0.3)
+    assert float(tau) == 0.0
+    assert int(res.iterations) <= 2  # one probe, no expansion/bisection spin
+
+
+def test_degenerate_all_zero_pyramid_early_exit():
+    from repro.core.plan import NormPyramid
+    from repro.core.tau_search import search_tau_pyramid
+
+    z = jnp.zeros((8, 8), jnp.float32)
+    pyr = NormPyramid.from_normmap(z, 2)
+    tau, res = search_tau_pyramid(pyr, pyr, 0.3)
+    assert float(tau) == 0.0
+    # coarse probe + fine probe; the 8-round doubling guard never spins
+    assert int(res.iterations) <= 4
+
+
+def test_degenerate_plan_valid_ratio_on_zero_matrix():
+    """plan(valid_ratio=...) on a zero matrix terminates fast with τ=0 and
+    a full mask (every zero product passes τ=0)."""
+    from repro.core import plan as pl
+
+    z = jnp.zeros((64, 64), jnp.float32)
+    p = pl.plan(z, z, valid_ratio=0.5, tile=32, backend="jnp")
+    assert float(p.tau) == 0.0
+    assert float(p.valid_fraction) == 1.0
