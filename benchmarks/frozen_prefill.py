@@ -1,0 +1,110 @@
+"""Frozen-plan serving: compiled prefill with vs without frozen weight plans.
+
+Two engines over the same reduced model and SpAMM config:
+
+  * frozen — the PR 4 tentpole path: weight-side plans precomputed once
+    (`repro.plans.freeze_tree`) and passed into the jitted prefill as
+    ARGUMENTS; the compiled graph traces only the activation-side gate and
+    executes the frozen `SpammWork` step tables (zero weight get-norm /
+    dense-bitmap-sort ops);
+  * legacy — in-trace gating: the compiled prefill re-derives the weight
+    normmaps and the gate on every call.
+
+Each cell asserts bit-parity of the prefill logits first (the frozen path
+must be bit-identical to in-trace gating), so a frozen-plan regression
+fails the benchmark loudly instead of landing as a silent wrong answer —
+the CI fast lane runs `--smoke` for exactly that reason. Also reports the
+one-time freeze (plan-build) cost amortized away.
+
+Derived column: speedup=<legacy/frozen>;gated=<gemms>;steps=<frozen bucket>.
+
+Caveat on the speedup number: at the reduced (CPU smoke) sizes the weight
+normmaps are a few dozen floats, so the get-norm work the frozen path
+removes is ~free while its per-step gather/compare is not — expect ≤1×
+here. The benchmark's CI job is the PARITY gate; the amortization win
+scales with weight size (the K·N get-norm pass and the O(grid log) sort
+the compiled graph no longer pays per call).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.configs import ParallelConfig, SpammConfig, get_config
+from repro.launch.mesh import make_ctx, make_host_mesh
+from repro.models import model as M
+from repro.plans.precompute import iter_gated_weights
+from repro.serving.engine import Engine
+
+PCFG = ParallelConfig(
+    compute_dtype="float32", param_dtype="float32", remat="none",
+    attn_q_chunk=32, attn_kv_chunk=32, loss_chunk=64, decode_seq_shard=False,
+)
+
+
+def _cell(arch: str, batch: int, seq: int, tau: float, levels: int):
+    cfg = get_config(arch).reduced()
+    ctx = make_ctx(make_host_mesh())
+    params = M.init_params(cfg, PCFG, jax.random.key(0))
+    sc = SpammConfig(enable=True, tau=tau, tile=16, backend="jnp",
+                     levels=levels)
+    eng_f = Engine(cfg, PCFG, ctx, params, max_len=seq + 8, spamm_cfg=sc)
+    eng_l = Engine(cfg, PCFG, ctx, params, max_len=seq + 8, spamm_cfg=sc,
+                   freeze_plans=False)
+    rng = np.random.default_rng(0)
+    batch_in = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab, size=(batch, seq)).astype(np.int32))}
+
+    t_freeze = timeit(lambda: Engine(
+        cfg, PCFG, ctx, params, max_len=seq + 8,
+        spamm_cfg=sc)._frozen_for(batch * seq), warmup=0, repeat=1)
+    frozen = eng_f._frozen_for(batch * seq)
+
+    def prefill_frozen():
+        return eng_f._prefill(eng_f.params, batch_in, frozen)[1]
+
+    def prefill_legacy():
+        return eng_l._prefill(eng_l.params, batch_in, {})[1]
+
+    lf = np.asarray(prefill_frozen())
+    ll = np.asarray(prefill_legacy())
+    assert np.array_equal(lf, ll), "frozen prefill parity"
+
+    t_f = timeit(prefill_frozen)
+    t_l = timeit(prefill_legacy)
+    n_gemms = sum(1 for _ in iter_gated_weights(params))
+    derived = (f"speedup={t_l / t_f:.2f}x;gated_leaves={n_gemms};"
+               f"freeze_once_us={t_freeze:.0f}")
+    row(f"frozen_prefill/compiled/frozen/{arch}/b{batch}s{seq}/l{levels}",
+        t_f, derived)
+    row(f"frozen_prefill/compiled/legacy/{arch}/b{batch}s{seq}/l{levels}",
+        t_l, derived)
+
+
+def run(quick: bool = False):
+    cells = ([("musicgen-large", 2, 32, 0.05, 1)] if quick else
+             [("musicgen-large", 2, 32, 0.05, 1),
+              ("musicgen-large", 4, 64, 0.05, 0),
+              ("starcoder2-7b", 2, 48, 0.05, 1)])
+    for arch, b, s, tau, levels in cells:
+        _cell(arch, b, s, tau, levels)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-friendly single cell (the parity assert still "
+                         "runs — a frozen-plan regression fails the job)")
+    args = ap.parse_args()
+    from benchmarks.common import header
+
+    header()
+    run(quick=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,10 +19,10 @@ def main() -> None:
                          "loadbalance|kernels|roofline)")
     args = ap.parse_args()
 
-    from benchmarks import (kernel_blocks, kernels_micro, loadbalance,
-                            plan_cache, pyramid_gating, roofline, sparse_exec,
-                            table1_taus, table2_dense, table3_sparse,
-                            table4_ergo, table5_vgg)
+    from benchmarks import (frozen_prefill, kernel_blocks, kernels_micro,
+                            loadbalance, plan_cache, pyramid_gating, roofline,
+                            sparse_exec, table1_taus, table2_dense,
+                            table3_sparse, table4_ergo, table5_vgg)
     from benchmarks.common import header
 
     mods = {
@@ -37,6 +37,7 @@ def main() -> None:
         "plan_cache": plan_cache,
         "pyramid_gating": pyramid_gating,
         "sparse_exec": sparse_exec,
+        "frozen_prefill": frozen_prefill,
         "roofline": roofline,
     }
     header()

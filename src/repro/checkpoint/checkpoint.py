@@ -50,9 +50,23 @@ def _treedef_of(tree):
 
 
 def save(ckpt_dir: str, step: int, state: dict, *, keep: int = 3,
-         async_: bool = False) -> Optional[threading.Thread]:
-    """state: arbitrary pytree of arrays (params/opt_state/step/data state)."""
+         async_: bool = False, plan_store=None) -> Optional[threading.Thread]:
+    """state: arbitrary pytree of arrays (params/opt_state/step/data state).
+
+    `plan_store` (a `repro.plans.store.PlanStore` or its directory path)
+    records the precomputed-SpAMM-plan store pointer in the checkpoint
+    manifest next to the weights, so a restored server finds its frozen
+    plans (`plan_store_pointer`) instead of re-running the planning pass."""
     state = jax.tree.map(lambda x: np.asarray(x), state)  # host copy first
+    store_ptr = None
+    if plan_store is not None:
+        if isinstance(plan_store, str):
+            from repro.plans.frozen import PLAN_FORMAT_VERSION  # deferred
+
+            store_ptr = {"path": os.path.abspath(plan_store),
+                         "format_version": PLAN_FORMAT_VERSION}
+        else:
+            store_ptr = plan_store.manifest_pointer()
 
     def _write():
         tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
@@ -60,8 +74,11 @@ def save(ckpt_dir: str, step: int, state: dict, *, keep: int = 3,
         os.makedirs(tmp, exist_ok=True)
         flat = _flatten(state)
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": step, "keys": sorted(flat)}
+        if store_ptr is not None:
+            meta["plan_store"] = store_ptr
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "keys": sorted(flat)}, f)
+            json.dump(meta, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -97,6 +114,39 @@ def all_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = all_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def plan_store_pointer(ckpt_dir: str, step: int) -> Optional[dict]:
+    """The plan-store pointer a checkpoint was saved with, or None:
+    {"path": <store dir>, "format_version": <int>}. Raises if the recorded
+    format version does not match the running code — the pointer exists to
+    prevent a restored server from silently executing stale plans."""
+    path = os.path.join(ckpt_dir, f"step_{step}", "meta.json")
+    if not os.path.isfile(path):
+        return None
+    with open(path) as f:
+        meta = json.load(f)
+    ptr = meta.get("plan_store")
+    if ptr is None:
+        return None
+    from repro.plans.frozen import PLAN_FORMAT_VERSION  # deferred
+
+    if ptr.get("format_version") != PLAN_FORMAT_VERSION:
+        raise ValueError(
+            f"checkpoint step {step} points at a plan store written with "
+            f"format version {ptr.get('format_version')!r}; this build "
+            f"reads {PLAN_FORMAT_VERSION} — re-run precompute_plans")
+    return ptr
+
+
+def open_plan_store(ckpt_dir: str, step: int):
+    """PlanStore from a checkpoint's pointer, or None when it has none."""
+    ptr = plan_store_pointer(ckpt_dir, step)
+    if ptr is None:
+        return None
+    from repro.plans.store import PlanStore  # deferred
+
+    return PlanStore(ptr["path"])
 
 
 def restore(ckpt_dir: str, step: int, like: Any, shardings=None) -> Any:

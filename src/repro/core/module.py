@@ -45,13 +45,16 @@ class SpammContext:
     begin/end and attaches the drained stats to the request metadata.
     """
 
-    __slots__ = ("cfg", "cache", "_taps", "_collect")
+    __slots__ = ("cfg", "cache", "_taps", "_collect", "_phase",
+                 "_trace_buffer")
 
     def __init__(self, cfg: Any, cache: Optional[WeightPlanCache] = None):
         self.cfg = cfg
         self.cache = cache if cache is not None else WeightPlanCache()
         self._taps: list = []
         self._collect = False
+        self._phase = "prefill"
+        self._trace_buffer: Optional[list] = None
 
     def __repr__(self):
         return f"SpammContext({self.cfg!r}, cache={len(self.cache)} entries)"
@@ -67,30 +70,66 @@ class SpammContext:
         self._taps = []
         self._collect = True
 
-    def _record(self, f):
+    def set_phase(self, phase: str):
+        """Tag subsequent taps with a phase label ("prefill" | "decode" |
+        "train"). The label is captured at TRACE time, so set it before the
+        first call of each jitted step function — every execution of that
+        compiled step then reports under its phase, which is what lets the
+        engine tell prefill from decode gating fractions apart."""
+        self._phase = phase
+
+    def _record(self, phase, f):
         # host side of the tap; re-check _collect at RUN time — once a
         # callback is embedded in a compiled function it fires on every
         # execution, including ones outside a begin/end window
         if self._collect:
-            self._taps.append(float(f))
+            self._taps.append((phase, float(f)))
+
+    # -- trace-time buffering (the grad-safe path) --------------------------
+    # io_callback effects are DROPPED inside a custom_vjp fwd rule under
+    # value_and_grad (and inside grad-of-scan), so the train step cannot
+    # report through callbacks. Instead the stack collects taps as traced
+    # VALUES: while a trace buffer is open, tap() appends the traced
+    # fraction to it and the caller threads the sum through the scan carry
+    # into the step metrics — pure dataflow, survives grad and remat.
+    def begin_trace_buffer(self):
+        self._trace_buffer = []
+
+    def drain_trace_buffer(self) -> list:
+        buf, self._trace_buffer = (self._trace_buffer or []), None
+        return buf
+
+    def suspend_trace_buffer(self):
+        """Temporarily disable buffering (MoE blocks trace their gated GEMMs
+        inside shard_map — their tracers must not leak into an outer-trace
+        carry; those taps fall back to the callback path)."""
+        buf, self._trace_buffer = self._trace_buffer, None
+        return buf
+
+    def resume_trace_buffer(self, buf):
+        self._trace_buffer = buf
 
     def tap(self, valid_fraction):
-        """Record one gated GEMM's valid fraction (no-op unless collecting).
+        """Record one gated GEMM's valid fraction, tagged with the current
+        phase (no-op unless collecting or a trace buffer is open).
 
         The callback embeds into whatever computation is being traced, so a
         jitted prefill reports fractions on every execution."""
+        if self._trace_buffer is not None:
+            self._trace_buffer.append(jnp.asarray(valid_fraction, jnp.float32))
+            return
         if not self._collect:
             return
         from jax.experimental import io_callback  # deferred: cheap import
 
         io_callback(
-            self._record, None,
+            functools.partial(self._record, self._phase), None,
             jnp.asarray(valid_fraction, jnp.float32), ordered=False,
         )
 
     def end_stats(self):
-        """Stop collecting and drain: list of per-GEMM valid fractions tapped
-        since `begin_stats` (empty when no gated GEMM executed)."""
+        """Stop collecting and drain: list of (phase, valid_fraction) pairs
+        tapped since `begin_stats` (empty when no gated GEMM executed)."""
         taps, self._taps = self._taps, []
         self._collect = False
         return taps
@@ -117,6 +156,26 @@ def _flatten_pad(x, tile):
 @functools.partial(
     jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
 )
+def _spamm_linear_stats(
+    x: jax.Array,
+    w: jax.Array,
+    tau: jax.Array,
+    tile: int = 64,
+    backend: str = "auto",
+    bwd: str = "dense",
+    block_n: int = 1,
+    ctx: Optional[SpammContext] = None,
+    levels: int = 0,
+):
+    """(y, valid_fraction) — the gated GEMM plus its gating stat as a REAL
+    OUTPUT. The fraction must flow out of the custom_vjp rather than be
+    tapped inside it: the fwd rule is traced in its own subsidiary trace
+    under autodiff, so a tap fired there either gets dropped (callbacks) or
+    leaks an inner tracer (trace buffers). Callers tap the returned value."""
+    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
+    return y, p.valid_fraction
+
+
 def spamm_linear(
     x: jax.Array,
     w: jax.Array,
@@ -135,8 +194,8 @@ def spamm_linear(
     hierarchically over the norm pyramid (mask unchanged, planning cheaper;
     the weight-side pyramid is what the cache then holds).
     """
-    y, _ = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
-    return y
+    return _spamm_linear_stats(x, w, tau, tile, backend, bwd, block_n, ctx,
+                               levels)[0]
 
 
 def _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels=0):
@@ -148,7 +207,6 @@ def _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels=0):
             xp, w, tau, tile=tile, block_n=block_n, backend=backend,
             levels=levels,
         )
-        ctx.tap(p.valid_fraction)
     else:
         # N pads to tile·block_n (not just tile) so odd-N weights survive
         # super-column gating; the cache path does the same in weight_side
@@ -164,11 +222,12 @@ def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n, ctx, levels):
     y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
     # residuals carry the forward normmaps so bwd="spamm" replans without
     # re-running get-norm on x or w
-    return y, (x, w, tau, p.norm_a, p.norm_b)
+    return (y, p.valid_fraction), (x, w, tau, p.norm_a, p.norm_b)
 
 
 def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, levels, res, g):
     x, w, tau, norm_x, norm_w = res
+    g, _ = g  # cotangent of the valid-fraction stat output is discarded
     lead = x.shape[:-1]
     k, n = w.shape
     m = 1
@@ -203,7 +262,7 @@ def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, levels, res, g):
     return dx, dw, dtau
 
 
-spamm_linear.defvjp(_spamm_linear_fwd, _spamm_linear_bwd)
+_spamm_linear_stats.defvjp(_spamm_linear_fwd, _spamm_linear_bwd)
 
 
 def spamm_bmm_linear(x: jax.Array, w: jax.Array, spamm_ctx) -> jax.Array:
@@ -220,15 +279,45 @@ def spamm_bmm_linear(x: jax.Array, w: jax.Array, spamm_ctx) -> jax.Array:
     return c.astype(x.dtype)
 
 
-def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any) -> jax.Array:
+def spamm_linear_frozen(x: jax.Array, w: jax.Array, fp,
+                        ctx: Optional[SpammContext] = None) -> jax.Array:
+    """Gated GEMM with a frozen weight side (forward-only serving path).
+
+    `fp` is a `repro.plans.frozen.FrozenPlan` specialized to x's flattened
+    row grid, passed INTO the enclosing jit as an argument: the traced graph
+    computes only the activation-side gate and runs the frozen `SpammWork`
+    step tables — no weight get-norm, no dense-bitmap sort. Bit-identical to
+    `spamm_linear` with the same config (the frozen tables are a superset
+    re-gated by the exact flat τ-test). Inference path: no custom_vjp."""
+    tile = fp.tile
+    xp, (lead, m, k) = _flatten_pad(x, tile)
+    n = w.shape[-1]
+    p = _plan.plan(xp, frozen_weight=fp)
+    if ctx is not None:
+        ctx.tap(p.valid_fraction)
+    wp = pad_to_tile(w, tile, tile * fp.block_n)
+    c = _plan.execute(p, xp, wp)
+    return c[:m, :n].reshape(*lead, n).astype(x.dtype)
+
+
+def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any,
+                       frozen=None, require_frozen: bool = False) -> jax.Array:
     """The hook the model zoo calls for every eligible GEMM: dense when
     spamm_cfg is disabled, plan-routed spamm_linear when enabled.
-    `spamm_cfg` may be a SpammConfig or a SpammContext (cfg + plan cache)."""
+    `spamm_cfg` may be a SpammConfig or a SpammContext (cfg + plan cache).
+
+    `frozen` (a FrozenPlan jit input) routes the GEMM through the frozen
+    work-list path instead of tracing the gate from scratch.
+    `require_frozen=True` (the decode path) falls back to DENSE when no
+    frozen plan is available for this site — decode-step gating is only
+    worth its trace when the weight side comes precomputed."""
     ctx = as_context(spamm_cfg)
-    if ctx is None or not ctx.enable:
+    if ctx is None or not ctx.enable or (require_frozen and frozen is None):
         return x @ w
+    if frozen is not None:
+        return spamm_linear_frozen(x, w, frozen, ctx)
     cfg = ctx.cfg
-    return spamm_linear(
+    y, frac = _spamm_linear_stats(
         x,
         w,
         jnp.asarray(cfg.tau, jnp.float32),
@@ -239,3 +328,5 @@ def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any) -> jax.Array:
         ctx,
         getattr(cfg, "levels", 0),
     )
+    ctx.tap(frac)
+    return y

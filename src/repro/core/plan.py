@@ -684,6 +684,87 @@ def _side_pyramid(norm, x, levels: int, tile: int, bk, use_mxu: bool,
     )
 
 
+def _frozen_step_flags(fp, active: jax.Array) -> jax.Array:
+    """Traced INIT/ACC/FLUSH flags over a FrozenPlan's static step tables.
+
+    `active` is the traced per-step activation gate (already AND step_real).
+    Pure static-shape cumsum/gather arithmetic: INIT fires on a segment's
+    first active step, FLUSH on its last; a segment with NO active step gets
+    one forced INIT|FLUSH (no ACC) at its final step so its visited output
+    tile is written with explicit zeros — the frozen twin of
+    `compact_from_triples`'s empty-plan handling, and bit-identical to the
+    eager work-list (same active steps, same ascending-k f32 accumulation).
+    """
+    act = active.astype(jnp.int32)
+    cum = jnp.cumsum(act)
+    excl = cum - act                      # actives strictly before each step
+    first_excl = excl[fp.seg_first]
+    before = excl - first_excl            # actives before, within segment
+    total = cum[fp.seg_last] - first_excl  # actives in the whole segment
+    init = (active & (before == 0)).astype(jnp.int32)
+    flush = (active & (before + 1 == total)).astype(jnp.int32)
+    idx = jnp.arange(act.shape[0], dtype=jnp.int32)
+    empty_write = ((total == 0) & (idx == fp.seg_last)).astype(jnp.int32)
+    return (init * STEP_INIT + act * STEP_ACC + flush * STEP_FLUSH
+            + empty_write * (STEP_INIT | STEP_FLUSH))
+
+
+def _plan_frozen(a, fp, *, norm_a=None, use_mxu_norm: bool = False
+                 ) -> SpammPlan:
+    """Traced plan from a FrozenPlan weight side: the compiled graph runs
+    the activation-side get-norm plus an O(S) gather-compare over the frozen
+    step tables — zero weight-side get-norm, zero dense-bitmap sort, and the
+    concrete work-list path is the only executed path."""
+    from repro.plans.frozen import FrozenPlan, FrozenWeight  # circular-safe
+
+    if isinstance(fp, FrozenWeight):
+        if a is None:
+            raise ValueError("a FrozenWeight needs the activation to pick "
+                             "the row grid; pass `a` or pre-specialize with "
+                             "for_rows(gm)")
+        if isinstance(fp.nbmax, jax.core.Tracer):
+            raise ValueError(
+                "FrozenWeight.for_rows must run eagerly (its step tables "
+                "are concrete data); specialize before jit and pass the "
+                "FrozenPlan as a jit argument")
+        fp = fp.for_rows(a.shape[0] // fp.tile)
+    assert isinstance(fp, FrozenPlan), type(fp)
+    bk = kops.get_backend(fp.backend)
+    if bk.needs_compaction and bk.matmul_worklist is None:
+        raise ValueError(
+            f"backend {bk.name!r} consumes dense kidx tables but has no "
+            "work-list entry point — the frozen path cannot feed it; "
+            "register a matmul_worklist or use a mask-gating backend")
+    tile = fp.tile
+    if norm_a is None:
+        if a is None:
+            raise ValueError("need `a` or `norm_a`")
+        norm_a = bk.norms(a, tile, use_mxu=use_mxu_norm)
+    gm, gk = norm_a.shape
+    if (gm, gk) != (fp.gm, fp.gk):
+        raise ValueError(
+            f"frozen plan was specialized for a ({fp.gm}, {fp.gk}) "
+            f"activation grid, got ({gm}, {gk}) — rebuild with "
+            f"for_rows({gm})")
+    tau = jnp.asarray(fp.tau, jnp.float32)
+    # the traced activation gate: exact flat τ-test per frozen step (the
+    # super-column max commutes with the gate — fp32 multiply is monotone
+    # in each non-negative factor), restricted to real (non-padding) steps
+    pa = norm_a[fp.step_i, fp.step_k]
+    pb = fp.nbmax[fp.step_k, fp.step_j]
+    active = fp.step_real & (pa * pb >= tau)
+    flags = _frozen_step_flags(fp, active)
+    work = SpammWork(rows=None, cols=None, offsets=None, klist=None,
+                     step_i=fp.step_i, step_j=fp.step_j, step_k=fp.step_k,
+                     step_flags=flags)
+    nvalid = jnp.zeros((gm, fp.gnb), jnp.int32).at[fp.step_i, fp.step_j].add(
+        active.astype(jnp.int32))
+    valid_tiles = jnp.sum(active, dtype=jnp.int32)
+    return SpammPlan(tau, norm_a, fp.norm_b, None, None, nvalid, valid_tiles,
+                     work, tile=tile, block_n=fp.block_n, backend=bk.name,
+                     levels=fp.num_levels)
+
+
 def plan(
     a: Optional[jax.Array] = None,
     b: Optional[jax.Array] = None,
@@ -697,6 +778,7 @@ def plan(
     backend: str = "auto",
     use_mxu_norm: bool = False,
     levels: int = 0,
+    frozen_weight=None,
 ) -> SpammPlan:
     """Build the gating phase for (M, K) @ (K, N), dims divisible by tile
     (and N by tile·block_n) — pad upstream (see `pad_to_tile` /
@@ -715,7 +797,21 @@ def plan(
     (traced operands) the plan silently downgrades to flat gating: the mask
     is identical and the sparse descent can't run there, so `levels` is
     free on compiled paths rather than an overhead.
+
+    frozen_weight (a `repro.plans.frozen.FrozenPlan`, or a `FrozenWeight`
+    when planning eagerly) replaces the whole weight side with precomputed
+    artifacts: τ/tile/block_n/levels/backend come FROM the artifact (the
+    keyword args are ignored), only the activation-side gate is computed
+    (pass norm_a= to skip even that), and the resulting plan executes via
+    the frozen `SpammWork` step tables — the path compiled prefill/decode
+    take with plans as jit inputs.
     """
+    if frozen_weight is not None:
+        if tau is not None or valid_ratio is not None:
+            raise ValueError("frozen_weight carries its own tau; pass "
+                             "neither tau nor valid_ratio")
+        return _plan_frozen(a, frozen_weight, norm_a=norm_a,
+                            use_mxu_norm=use_mxu_norm)
     if (tau is None) == (valid_ratio is None):
         raise ValueError("give exactly one of tau / valid_ratio")
     bk = kops.get_backend(backend)
@@ -885,13 +981,23 @@ class WeightPlanCache:
     Tracers are never cached (inside jit the trace itself is cached, and
     tracer ids are meaningless); the cache is an eager-path optimization.
     LRU-bounded; `hits`/`misses` expose effectiveness for tests/benchmarks.
+
+    Frozen tier: `frozen_weight` memoizes `repro.plans.frozen.FrozenWeight`
+    artifacts by content fingerprint, falling through to the attached
+    `PlanStore` (`self.store`) and only then to a fresh build — the cache is
+    the in-memory tier above the on-disk store, so a warm store makes
+    engine start-up a pure load (no get-norm pass).
     """
 
-    def __init__(self, maxsize: int = 256):
+    def __init__(self, maxsize: int = 256, store=None):
         self._entries: collections.OrderedDict = collections.OrderedDict()
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self.store = store           # optional repro.plans.store.PlanStore
+        self._frozen: dict = {}
+        self.frozen_hits = 0
+        self.frozen_misses = 0
 
     @staticmethod
     def _cacheable(w) -> bool:
@@ -957,9 +1063,43 @@ class WeightPlanCache:
                  use_mxu_norm=use_mxu_norm, levels=levels)
         return p, wp
 
+    def frozen_weight(self, w, *, tau, tile: int = 64, block_n: int = 1,
+                      levels: int = 0, backend: str = "auto",
+                      use_mxu: bool = False, store=None):
+        """FrozenWeight for `w` at the given gating config, through the
+        memory → store → build tiers. Keyed on the weight's CONTENT
+        fingerprint (slices of a stacked parameter hash stably, unlike
+        id()), so repeated engine warm-ups and the precompute CLI agree."""
+        from repro.plans import frozen as _frozen  # circular-safe
+        from repro.plans import store as _pstore
+
+        store = store if store is not None else self.store
+        h = _pstore.fingerprint(w)
+        resolved = kops.resolve_backend(backend)
+        key = (h, float(tau), tile, block_n, levels, resolved, use_mxu)
+        hit = self._frozen.get(key)
+        if hit is not None:
+            self.frozen_hits += 1
+            return hit
+        self.frozen_misses += 1
+        fw = None
+        if store is not None:
+            fw = store.get(h, tau=tau, tile=tile, block_n=block_n,
+                           levels=levels, backend=resolved, use_mxu=use_mxu)
+        if fw is None:
+            fw = _frozen.FrozenWeight.build(
+                w, tau, tile=tile, block_n=block_n, levels=levels,
+                backend=resolved, use_mxu=use_mxu, weight_hash=h)
+            if store is not None:
+                store.put(fw)
+        self._frozen[key] = fw
+        return fw
+
     def clear(self):
         self._entries.clear()
         self.hits = self.misses = 0
+        self._frozen.clear()
+        self.frozen_hits = self.frozen_misses = 0
 
     def __len__(self):
         return len(self._entries)

@@ -1,0 +1,67 @@
+"""Offline plan precomputation driver: populate a PlanStore for a model.
+
+  PYTHONPATH=src python -m repro.launch.precompute_plans --arch musicgen-large \
+      --reduced --plan-store /tmp/plans --tau 0.05 --spamm-tile 16
+
+Walks every gated GEMM weight of the model (attention wq/wk/wv/wo + MLP
+w1/w3/w2 across all layers) and freezes its weight-side SpAMM plan into the
+content-addressed store; a serving engine launched with the same params and
+SpAMM config (`repro.launch.serve --plan-store ...`) then warm-starts with
+store hits only — no planning pass, no weight get-norm.
+
+Params here come from the same seeded init the serve driver uses, so the
+content fingerprints match; a production deployment would load them from a
+checkpoint instead (the checkpoint records the store pointer — see
+`repro.checkpoint.checkpoint.save(plan_store=...)`).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ParallelConfig, SpammConfig, get_config
+from repro.launch.mesh import make_ctx, make_host_mesh
+from repro.models import model as M
+from repro.plans.precompute import populate
+from repro.plans.store import PlanStore
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--plan-store", required=True,
+                    help="store directory (created if missing)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tau", type=float, required=True)
+    ap.add_argument("--spamm-tile", type=int, default=32)
+    ap.add_argument("--spamm-backend", default="auto")
+    ap.add_argument("--spamm-levels", type=int, default=0)
+    ap.add_argument("--block-n", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    pcfg = ParallelConfig(
+        compute_dtype="float32", remat="none", decode_seq_shard=False,
+        attn_q_chunk=64, attn_kv_chunk=64,
+    )
+    make_ctx(make_host_mesh())  # same init path as serve (device layout)
+    params = M.init_params(cfg, pcfg, jax.random.key(args.seed))
+    scfg = SpammConfig(enable=True, tau=args.tau, tile=args.spamm_tile,
+                       backend=args.spamm_backend, levels=args.spamm_levels,
+                       block_n=args.block_n)
+    store = PlanStore(args.plan_store)
+    t0 = time.time()
+    n = populate(store, params, scfg)
+    dt = time.time() - t0
+    print(f"precomputed {n} weight plans into {args.plan_store} "
+          f"({store.hits} already present, {store.misses} built) "
+          f"in {dt:.2f}s — {len(store)} artifacts total")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,9 +31,22 @@ def main():
                          "(one SpammContext per engine)")
     ap.add_argument("--spamm-tile", type=int, default=32)
     ap.add_argument("--spamm-backend", default="auto")
+    ap.add_argument("--spamm-block-n", type=int, default=1,
+                    help="super-column width of the mm kernel; must match "
+                         "the value the plan store was precomputed with, or "
+                         "every lookup misses and plans are rebuilt")
     ap.add_argument("--spamm-levels", type=int, default=0,
                     help="norm-pyramid coarsening steps for hierarchical "
                          "gating (0 = flat); coarse tile = tile · 2^levels")
+    ap.add_argument("--plan-store", default=None,
+                    help="on-disk PlanStore directory of precomputed frozen "
+                         "weight plans (populate offline with "
+                         "repro.launch.precompute_plans); the engine warm-"
+                         "starts from it instead of running a planning pass")
+    ap.add_argument("--no-freeze-plans", action="store_true",
+                    help="legacy in-trace gating (weight normmaps re-derived "
+                         "inside the compiled prefill) instead of frozen "
+                         "plans as jit inputs")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,9 +64,11 @@ def main():
         spamm_cfg = SpammConfig(enable=True, tau=args.spamm_tau,
                                 tile=args.spamm_tile,
                                 backend=args.spamm_backend,
+                                block_n=args.spamm_block_n,
                                 levels=args.spamm_levels)
     eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len,
-                 spamm_cfg=spamm_cfg)
+                 spamm_cfg=spamm_cfg, plan_store=args.plan_store,
+                 freeze_plans=not args.no_freeze_plans)
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -75,8 +90,15 @@ def main():
     if sp is not None:
         vf = sp["valid_fraction"]
         vf_s = f"{vf:.3f}" if vf is not None else "n/a"
+        dvf = sp.get("decode_valid_fraction")
+        dvf_s = f"{dvf:.3f}" if dvf is not None else "n/a"
         print(f"  spamm: valid_fraction={vf_s} gated_gemms={sp['gated_gemms']} "
+              f"decode_valid_fraction={dvf_s} "
+              f"decode_gated_gemms={sp['decode_gated_gemms']} "
               f"cache={sp['plan_cache_hits']}h/{sp['plan_cache_misses']}m")
+        if "plan_store_hits" in sp:
+            print(f"  plan_store: {sp['plan_store_hits']}h/"
+                  f"{sp['plan_store_misses']}m")
 
 
 if __name__ == "__main__":

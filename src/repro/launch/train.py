@@ -77,6 +77,12 @@ def main():
         f"done: steps={res.final_step} first_loss={res.losses[0]:.4f} "
         f"last_loss={res.losses[-1]:.4f} stragglers={res.straggler_steps}"
     )
+    if res.spamm_stats:
+        fracs = [s["valid_fraction"] for s in res.spamm_stats
+                 if s["valid_fraction"] is not None]
+        if fracs:
+            print(f"spamm: mean_valid_fraction={sum(fracs)/len(fracs):.3f} "
+                  f"gated_gemms/step={res.spamm_stats[-1]['gated_gemms']}")
 
 
 if __name__ == "__main__":

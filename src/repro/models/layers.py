@@ -45,17 +45,33 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # MLPs
 # ---------------------------------------------------------------------------
 
-def mlp(params: dict, x: jax.Array, act: str, spamm_cfg=None) -> jax.Array:
-    """SwiGLU ('silu'), GeGLU ('gelu'), or classic 4x MLP ('gelu_mlp')."""
+def mlp(params: dict, x: jax.Array, act: str, spamm_cfg=None, frozen=None,
+        require_frozen: bool = False) -> jax.Array:
+    """SwiGLU ('silu'), GeGLU ('gelu'), or classic 4x MLP ('gelu_mlp').
+
+    `frozen` is this layer's dict of per-weight FrozenPlans (jit inputs;
+    missing keys fall back to the traced gate, or to dense when
+    `require_frozen` — the decode contract)."""
     cdt = x.dtype
+    fz = frozen or {}
     if act in ("silu", "gelu"):
-        g = maybe_spamm_matmul(x, params["w1"].astype(cdt), spamm_cfg)
-        u = maybe_spamm_matmul(x, params["w3"].astype(cdt), spamm_cfg)
+        g = maybe_spamm_matmul(x, params["w1"].astype(cdt), spamm_cfg,
+                               frozen=fz.get("w1"),
+                               require_frozen=require_frozen)
+        u = maybe_spamm_matmul(x, params["w3"].astype(cdt), spamm_cfg,
+                               frozen=fz.get("w3"),
+                               require_frozen=require_frozen)
         g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
-        return maybe_spamm_matmul(g * u, params["w2"].astype(cdt), spamm_cfg)
+        return maybe_spamm_matmul(g * u, params["w2"].astype(cdt), spamm_cfg,
+                                  frozen=fz.get("w2"),
+                                  require_frozen=require_frozen)
     if act == "gelu_mlp":
-        h = jax.nn.gelu(maybe_spamm_matmul(x, params["w1"].astype(cdt), spamm_cfg))
-        return maybe_spamm_matmul(h, params["w2"].astype(cdt), spamm_cfg)
+        h = jax.nn.gelu(maybe_spamm_matmul(x, params["w1"].astype(cdt),
+                                           spamm_cfg, frozen=fz.get("w1"),
+                                           require_frozen=require_frozen))
+        return maybe_spamm_matmul(h, params["w2"].astype(cdt), spamm_cfg,
+                                  frozen=fz.get("w2"),
+                                  require_frozen=require_frozen)
     raise ValueError(act)
 
 

@@ -142,12 +142,15 @@ def shardings_for(mesh: Mesh, tree):
 # forward / loss
 # ---------------------------------------------------------------------------
 
-def forward_hidden(cfg, pcfg, ctx: NetCtx, params, batch, *, spamm_cfg=None):
+def forward_hidden(cfg, pcfg, ctx: NetCtx, params, batch, *, spamm_cfg=None,
+                   collect_spamm_stats: bool = False):
     """tokens or embeds → final-normed hidden states (B, S, d).
 
     `spamm_cfg` may be a SpammConfig or a prebuilt `SpammContext` (config +
     shared WeightPlanCache); the stack threads the context object, not raw
-    (tau, tile, backend, block_n) tuples."""
+    (tau, tile, backend, block_n) tuples. With `collect_spamm_stats` the
+    return gains a third element (frac_sum, gemm_count) of traced
+    gating-stat scalars (see `stack_fwd`)."""
     spamm_cfg = spmod.as_context(spamm_cfg)
     cdt = _dtype(pcfg.compute_dtype)
     if "embeds" in batch:
@@ -157,17 +160,36 @@ def forward_hidden(cfg, pcfg, ctx: NetCtx, params, batch, *, spamm_cfg=None):
     x = ctx.shard(x, ctx.batch_axes, None, None)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    x, aux = tr.stack_fwd(params, x, cfg, pcfg, ctx, positions,
-                          spamm_cfg=spamm_cfg)
+    out = tr.stack_fwd(params, x, cfg, pcfg, ctx, positions,
+                       spamm_cfg=spamm_cfg,
+                       collect_spamm_stats=collect_spamm_stats)
+    if len(out) == 3:
+        x, aux, spamm_stats = out
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), aux, spamm_stats
+    x, aux = out
     return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
 
 
 def loss_fn(cfg, pcfg, ctx, params, batch, *, spamm_cfg=None):
-    h, aux = forward_hidden(cfg, pcfg, ctx, params, batch, spamm_cfg=spamm_cfg)
+    spamm_cfg = spmod.as_context(spamm_cfg)
+    collect = spamm_cfg is not None and spamm_cfg.enable
+    if collect:
+        h, aux, (vs, vc) = forward_hidden(cfg, pcfg, ctx, params, batch,
+                                          spamm_cfg=spamm_cfg,
+                                          collect_spamm_stats=True)
+    else:
+        h, aux = forward_hidden(cfg, pcfg, ctx, params, batch,
+                                spamm_cfg=spamm_cfg)
     unembed = params["unembed"]["kernel"].astype(h.dtype)
     ce = chunked_ce_loss(h, unembed, batch["labels"], pcfg.loss_chunk)
     aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
-    return ce + aux_w * aux, {"ce": ce, "aux": aux}
+    met = {"ce": ce, "aux": aux}
+    if collect:
+        # same per-GEMM gating stats the serving engine taps, exported as
+        # step metrics (mean valid fraction over the step's gated GEMMs)
+        met["spamm_valid_fraction"] = vs / jnp.maximum(vc, 1.0)
+        met["spamm_gated_gemms"] = vc
+    return ce + aux_w * aux, met
 
 
 # ---------------------------------------------------------------------------
@@ -277,11 +299,16 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
 
 def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
                       *, spamm_cfg=None):
-    """fn(params, batch) → (cache, last_logits). Logits only for the final
-    position (materializing (B, S, V) at 32k is not a production thing)."""
+    """fn(params, batch, frozen=None) → (cache, last_logits). Logits only
+    for the final position (materializing (B, S, V) at 32k is not a
+    production thing).
+
+    `frozen` is the optional pytree of precomputed weight-side SpAMM plans
+    (see `repro.plans`): a jit ARGUMENT, so the compiled graph consumes the
+    step tables as data instead of re-deriving weight normmaps per trace."""
     spamm_cfg = spmod.as_context(spamm_cfg)  # one context for every call
 
-    def step(params, batch):
+    def step(params, batch, frozen=None):
         cdt = _dtype(pcfg.compute_dtype)
         if "embeds" in batch:
             x = batch["embeds"].astype(cdt)
@@ -292,7 +319,8 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
         cache_len = (min(cfg.sliding_window, s) if cfg.sliding_window else s)
         x, cache = tr.stack_prefill(params, x, cfg, pcfg, ctx, positions,
-                                    cache_len, spamm_cfg=spamm_cfg)
+                                    cache_len, spamm_cfg=spamm_cfg,
+                                    frozen=frozen)
         h_last = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
         logits = (h_last @ params["unembed"]["kernel"].astype(cdt)).astype(jnp.float32)
         return cache, logits
@@ -300,17 +328,22 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
     return step
 
 
-def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx):
-    """fn(params, tokens_or_embeds (B,1[,d]), cache, pos) → (logits, cache)."""
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
+                     *, spamm_cfg=None):
+    """fn(params, tokens_or_embeds (B,1[,d]), cache, pos, frozen=None) →
+    (logits, cache). Decode GEMMs gate only through `frozen` plans (sites
+    without one stay dense — see `stack_decode`)."""
+    spamm_cfg = spmod.as_context(spamm_cfg)  # one context for every call
 
-    def step(params, inp, cache, pos):
+    def step(params, inp, cache, pos, frozen=None):
         cdt = _dtype(pcfg.compute_dtype)
         if inp.ndim == 3:
             x = inp.astype(cdt)
         else:
             x = params["embed"]["embedding"].astype(cdt)[inp]
         x = ctx.shard(x, ctx.batch_axes, None, None)
-        x, cache = tr.stack_decode(params, x, cache, pos, cfg, pcfg, ctx)
+        x, cache = tr.stack_decode(params, x, cache, pos, cfg, pcfg, ctx,
+                                   spamm_cfg=spamm_cfg, frozen=frozen)
         h = rms_norm(x[:, 0], params["final_norm"], cfg.norm_eps)
         logits = (h @ params["unembed"]["kernel"].astype(cdt)).astype(jnp.float32)
         return logits, cache

@@ -220,5 +220,14 @@ def moe_block(
         in_specs=(w_specs, P(batch_axes, None, None)),
         out_specs=(P(batch_axes, None, None), P(batch_axes)),
     )
-    y, aux = fn(params, x)
+    # expert GEMMs tap inside the shard_map trace: suspend any open trace
+    # buffer so their tracers can't leak into an outer-trace carry (these
+    # taps report through the callback path instead)
+    sctx = as_context(spamm_cfg)
+    saved = sctx.suspend_trace_buffer() if sctx is not None else None
+    try:
+        y, aux = fn(params, x)
+    finally:
+        if sctx is not None:
+            sctx.resume_trace_buffer(saved)
     return y, jnp.mean(aux)

@@ -64,13 +64,18 @@ def attn_params(key, cfg: ModelConfig, dtype) -> dict:
     return p
 
 
-def _qkv(p, x, cfg: ModelConfig, ctx: NetCtx, positions, spamm_cfg=None):
+def _qkv(p, x, cfg: ModelConfig, ctx: NetCtx, positions, spamm_cfg=None,
+         frozen=None, require_frozen: bool = False):
     b, s, d = x.shape
     hq, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     cdt = x.dtype
-    q = maybe_spamm_matmul(x, p["wq"].astype(cdt), spamm_cfg)
-    k = maybe_spamm_matmul(x, p["wk"].astype(cdt), spamm_cfg)
-    v = maybe_spamm_matmul(x, p["wv"].astype(cdt), spamm_cfg)
+    fz = frozen or {}
+    q = maybe_spamm_matmul(x, p["wq"].astype(cdt), spamm_cfg,
+                           frozen=fz.get("wq"), require_frozen=require_frozen)
+    k = maybe_spamm_matmul(x, p["wk"].astype(cdt), spamm_cfg,
+                           frozen=fz.get("wk"), require_frozen=require_frozen)
+    v = maybe_spamm_matmul(x, p["wv"].astype(cdt), spamm_cfg,
+                           frozen=fz.get("wv"), require_frozen=require_frozen)
     if "bq" in p:
         q = q + p["bq"].astype(cdt)
         k = k + p["bk"].astype(cdt)
@@ -95,8 +100,9 @@ def attention_layer(
     window: Optional[int] = None,
     spamm_cfg=None,
     return_kv: bool = False,
+    frozen=None,
 ):
-    q, k, v = _qkv(p, x, cfg, ctx, positions, spamm_cfg)
+    q, k, v = _qkv(p, x, cfg, ctx, positions, spamm_cfg, frozen)
     o = attn_mod.flash_attention(
         q, k, v,
         causal=True,
@@ -105,7 +111,8 @@ def attention_layer(
         kv_chunk=pcfg.attn_kv_chunk,
     )
     o = o.reshape(*x.shape[:2], -1)
-    out = maybe_spamm_matmul(o, p["wo"].astype(x.dtype), spamm_cfg)
+    out = maybe_spamm_matmul(o, p["wo"].astype(x.dtype), spamm_cfg,
+                             frozen=(frozen or {}).get("wo"))
     if return_kv:
         return out, (k, v)
     return out
@@ -123,10 +130,15 @@ def attention_decode(
     *,
     window: Optional[int] = None,
     ring: bool = False,
+    spamm_cfg=None,
+    frozen=None,
 ):
     b = x.shape[0]
     hq, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    q, k, v = _qkv(p, x, cfg, ctx, jnp.full((b, 1), pos, jnp.int32), None)
+    # decode gates only through frozen plans (require_frozen): re-tracing the
+    # gate per decode step is never worth it, but a frozen weight side is
+    q, k, v = _qkv(p, x, cfg, ctx, jnp.full((b, 1), pos, jnp.int32),
+                   spamm_cfg, frozen, require_frozen=True)
     q1 = q[:, 0]  # (B, Hq, hd)
     if pcfg.decode_seq_shard and ctx.mesh is not None and ctx.mesh.shape[ctx.model_axis] > 1:
         o, cache_k, cache_v = attn_mod.decode_attention_seqsharded(
@@ -141,7 +153,9 @@ def attention_decode(
         o = attn_mod.decode_attention(
             q1, cache_k, cache_v, pos + 1, window=window, ring=ring,
         )
-    out = o.reshape(b, 1, hq * hd) @ p["wo"].astype(x.dtype)
+    out = maybe_spamm_matmul(
+        o.reshape(b, 1, hq * hd), p["wo"].astype(x.dtype), spamm_cfg,
+        frozen=(frozen or {}).get("wo"), require_frozen=True)
     return out, (cache_k, cache_v)
 
 
@@ -172,15 +186,21 @@ def layer_params(key, cfg: ModelConfig, dtype, kind: str, model_axis_size: int):
     return p
 
 
-def _ffn(p, h, cfg: ModelConfig, ctx: NetCtx, spamm_cfg):
-    """MLP or MoE sub-layer on normalized input h. Returns (out, aux)."""
+def _ffn(p, h, cfg: ModelConfig, ctx: NetCtx, spamm_cfg, frozen=None,
+         require_frozen: bool = False):
+    """MLP or MoE sub-layer on normalized input h. Returns (out, aux).
+
+    MoE blocks keep the traced gating path (their expert buffers live
+    inside shard_map; frozen plans cover the dense attention/MLP GEMMs)."""
     if cfg.moe is not None:
         return moe_mod.moe_block(
             p["moe"], h, cfg.moe, cfg.act,
             mesh=ctx.mesh, batch_axes=ctx.batch_axes,
-            model_axis=ctx.model_axis, spamm_cfg=spamm_cfg,
+            model_axis=ctx.model_axis,
+            spamm_cfg=None if require_frozen else spamm_cfg,
         )
-    return mlp(p["mlp"], h, cfg.act, spamm_cfg), jnp.float32(0.0)
+    return mlp(p["mlp"], h, cfg.act, spamm_cfg, frozen,
+               require_frozen), jnp.float32(0.0)
 
 
 def layer_fwd(
@@ -194,8 +214,11 @@ def layer_fwd(
     *,
     spamm_cfg=None,
     collect_cache: bool = False,
+    frozen=None,
 ):
-    """One residual layer. Returns (x, aux, cache)."""
+    """One residual layer. Returns (x, aux, cache). `frozen` is this
+    layer's {"mix": {...}, "mlp": {...}} dict of FrozenPlan jit inputs."""
+    fz = frozen or {}
     if pcfg.seq_shard_acts and x.shape[1] > 1:
         # Megatron-SP: residual stream seq-sharded over the model axis; GSPMD
         # turns the TP psum into reduce-scatter + all-gather (half the wire
@@ -214,12 +237,14 @@ def layer_fwd(
             h, (k, v) = attention_layer(
                 p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, pcfg, ctx,
                 positions, window=window, spamm_cfg=spamm_cfg, return_kv=True,
+                frozen=fz.get("mix"),
             )
             cache = {"k": k, "v": v}
         else:
             h = attention_layer(
                 p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, pcfg, ctx,
                 positions, window=window, spamm_cfg=spamm_cfg,
+                frozen=fz.get("mix"),
             )
             cache = None
     else:  # rec
@@ -228,7 +253,8 @@ def layer_fwd(
         )
         cache = cache if collect_cache else None
     x = x + h
-    f, aux = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, spamm_cfg)
+    f, aux = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, spamm_cfg,
+                  fz.get("mlp"))
     return x + f, aux, cache
 
 
@@ -241,7 +267,11 @@ def layer_decode(
     pcfg: ParallelConfig,
     ctx: NetCtx,
     kind: str,
+    *,
+    spamm_cfg=None,
+    frozen=None,
 ):
+    fz = frozen or {}
     if kind == "ssm":
         h, new = ssm_mod.ssm_decode_step(
             p["ssm"], rms_norm(x[:, 0], p["ln"], cfg.norm_eps), cache, cfg.ssm,
@@ -259,6 +289,7 @@ def layer_decode(
             p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps),
             cache["k"], cache["v"], pos, cfg, pcfg, ctx,
             window=cfg.sliding_window, ring=ring,
+            spamm_cfg=spamm_cfg, frozen=fz.get("mix"),
         )
         new = dict(cache, k=ck, v=cv)
     else:
@@ -267,7 +298,8 @@ def layer_decode(
         )
         h = h1[:, None]
     x = x + h
-    f, _ = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, None)
+    f, _ = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, spamm_cfg,
+                fz.get("mlp"), require_frozen=True)
     return x + f, new
 
 
@@ -311,46 +343,72 @@ def stack_fwd(
     positions: jax.Array,
     *,
     spamm_cfg=None,
+    collect_spamm_stats: bool = False,
 ):
-    """Run all layers (train/loss path, no caches). Returns (x, aux)."""
+    """Run all layers (train/loss path, no caches). Returns (x, aux), or
+    (x, aux, (frac_sum, gemm_count)) with `collect_spamm_stats`.
+
+    The stats ride the scan carry as traced values (SpammContext's trace
+    buffer), NOT io_callbacks — callbacks are dropped under
+    grad-of-custom_vjp, dataflow is not, so the train step can export the
+    same per-GEMM fractions the serving engine taps. MoE expert GEMMs trace
+    inside shard_map and are excluded (see moe_block)."""
     kind = stack_kinds(cfg)
+    collect = (collect_spamm_stats and spamm_cfg is not None
+               and spamm_cfg.enable)
+
+    def tapped_layer(p, h, k):
+        """layer_fwd with its gated-GEMM taps captured as traced values."""
+        if not collect:
+            h, a, _ = layer_fwd(p, h, cfg, pcfg, ctx, positions, k,
+                                spamm_cfg=spamm_cfg)
+            return h, a, jnp.float32(0.0), jnp.float32(0.0)
+        spamm_cfg.begin_trace_buffer()
+        try:
+            h, a, _ = layer_fwd(p, h, cfg, pcfg, ctx, positions, k,
+                                spamm_cfg=spamm_cfg)
+        finally:
+            fracs = spamm_cfg.drain_trace_buffer()
+        vs = jnp.float32(0.0)
+        for f in fracs:
+            vs = vs + f
+        return h, a, vs, jnp.float32(len(fracs))
+
+    zero = jnp.float32(0.0)
 
     if kind == "hybrid":
         n_groups, gkinds, tail = hybrid_pattern(cfg)
 
         def gbody(carry, p):
-            h, aux = carry
+            h, aux, vs, vc = carry
             for i, k in enumerate(gkinds):
-                h, a, _ = layer_fwd(p[f"l{i}"], h, cfg, pcfg, ctx, positions, k,
-                                    spamm_cfg=spamm_cfg)
-                aux = aux + a
-            return (h, aux), None
+                h, a, s, c = tapped_layer(p[f"l{i}"], h, k)
+                aux, vs, vc = aux + a, vs + s, vc + c
+            return (h, aux, vs, vc), None
 
-        (x, aux), _ = jax.lax.scan(
-            _remat(gbody, pcfg), (x, jnp.float32(0.0)), params["groups"]
+        (x, aux, vs, vc), _ = jax.lax.scan(
+            _remat(gbody, pcfg), (x, zero, zero, zero), params["groups"]
         )
         for i, k in enumerate(tail):
-            x, a, _ = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
-                                positions, k, spamm_cfg=spamm_cfg)
-            aux = aux + a
-        return x, aux
+            x, a, s, c = tapped_layer(params["tail"][f"l{i}"], x, k)
+            aux, vs, vc = aux + a, vs + s, vc + c
+        return (x, aux, (vs, vc)) if collect else (x, aux)
 
     def body(carry, p):
-        h, aux = carry
-        h, a, _ = layer_fwd(p, h, cfg, pcfg, ctx, positions, kind,
-                            spamm_cfg=spamm_cfg)
-        return (h, aux + a), None
+        h, aux, vs, vc = carry
+        h, a, s, c = tapped_layer(p, h, kind)
+        return (h, aux + a, vs + s, vc + c), None
 
     if pcfg.scan_layers:
-        (x, aux), _ = jax.lax.scan(
-            _remat(body, pcfg), (x, jnp.float32(0.0)), params["layers"]
+        (x, aux, vs, vc), _ = jax.lax.scan(
+            _remat(body, pcfg), (x, zero, zero, zero), params["layers"]
         )
     else:
-        aux = jnp.float32(0.0)
+        aux = vs = vc = zero
         for i in range(cfg.num_layers):
             p = jax.tree.map(lambda t: t[i], params["layers"])
-            (x, aux), _ = _remat(body, pcfg)((x, aux), p)
-    return x, aux
+            (x, aux, vs, vc), _ = _remat(body, pcfg)((x, aux, vs, vc), p)
+    return (x, aux, (vs, vc)) if collect else (x, aux)
 
 
 def stack_prefill(
@@ -363,13 +421,19 @@ def stack_prefill(
     cache_len: int,
     *,
     spamm_cfg=None,
+    frozen=None,
 ):
     """Forward + collect caches. Returns (x, cache_pytree).
 
     `spamm_cfg` is the SpammContext the serving engine threads so prefill
-    GEMMs run through the plan/execute pipeline like the train forward."""
+    GEMMs run through the plan/execute pipeline like the train forward.
+    `frozen` mirrors the params structure at the gated-weight subtrees with
+    FrozenPlan jit inputs (stacked per layer under "layers"/"groups" — they
+    ride the layer scan as a second xs); {} / missing keys fall back to the
+    traced gate."""
     kind = stack_kinds(cfg)
     s = x.shape[1]
+    fz = frozen or {}
 
     def trim(c):
         """Ring-ify sliding-window KV caches: token t lives at slot t % W."""
@@ -388,29 +452,36 @@ def stack_prefill(
     if kind == "hybrid":
         n_groups, gkinds, tail = hybrid_pattern(cfg)
 
-        def gbody(h, p):
+        def gbody(h, pf):
+            p, f = pf
             caches = {}
             for i, k in enumerate(gkinds):
                 h, _, c = layer_fwd(p[f"l{i}"], h, cfg, pcfg, ctx, positions, k,
-                                    spamm_cfg=spamm_cfg, collect_cache=True)
+                                    spamm_cfg=spamm_cfg, collect_cache=True,
+                                    frozen=f.get(f"l{i}"))
                 caches[f"l{i}"] = trim(c)
             return h, caches
 
-        x, gcaches = jax.lax.scan(gbody, x, params["groups"])
+        x, gcaches = jax.lax.scan(
+            gbody, x, (params["groups"], fz.get("groups", {})))
         tcaches = {}
         for i, k in enumerate(tail):
             x, _, c = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
                                 positions, k, spamm_cfg=spamm_cfg,
-                                collect_cache=True)
+                                collect_cache=True,
+                                frozen=fz.get("tail", {}).get(f"l{i}"))
             tcaches[f"l{i}"] = trim(c)
         return x, {"groups": gcaches, "tail": tcaches}
 
-    def body(h, p):
+    def body(h, pf):
+        p, f = pf
         h, _, c = layer_fwd(p, h, cfg, pcfg, ctx, positions, kind,
-                            spamm_cfg=spamm_cfg, collect_cache=True)
+                            spamm_cfg=spamm_cfg, collect_cache=True,
+                            frozen=f)
         return h, trim(c)
 
-    x, caches = jax.lax.scan(body, x, params["layers"])
+    x, caches = jax.lax.scan(body, x, (params["layers"],
+                                       fz.get("layers", {})))
     return x, {"layers": caches}
 
 
@@ -422,33 +493,46 @@ def stack_decode(
     cfg: ModelConfig,
     pcfg: ParallelConfig,
     ctx: NetCtx,
+    *,
+    spamm_cfg=None,
+    frozen=None,
 ):
+    """Decode gating is frozen-plan-only: sites with a FrozenPlan run the
+    compiled work-list, sites without fall back to dense (require_frozen in
+    `layer_decode`) — per-step re-tracing of the gate is never paid."""
     kind = stack_kinds(cfg)
+    fz = frozen or {}
 
     if kind == "hybrid":
         n_groups, gkinds, tail = hybrid_pattern(cfg)
 
-        def gbody(h, pc):
-            p, c = pc
+        def gbody(h, pcf):
+            p, c, f = pcf
             newc = {}
             for i, k in enumerate(gkinds):
                 h, nc = layer_decode(p[f"l{i}"], h, c[f"l{i}"], pos, cfg, pcfg,
-                                     ctx, k)
+                                     ctx, k, spamm_cfg=spamm_cfg,
+                                     frozen=f.get(f"l{i}"))
                 newc[f"l{i}"] = nc
             return h, newc
 
-        x, gcaches = jax.lax.scan(gbody, x, (params["groups"], cache["groups"]))
+        x, gcaches = jax.lax.scan(
+            gbody, x, (params["groups"], cache["groups"],
+                       fz.get("groups", {})))
         tcaches = {}
         for i, k in enumerate(tail):
             x, nc = layer_decode(params["tail"][f"l{i}"], x, cache["tail"][f"l{i}"],
-                                 pos, cfg, pcfg, ctx, k)
+                                 pos, cfg, pcfg, ctx, k, spamm_cfg=spamm_cfg,
+                                 frozen=fz.get("tail", {}).get(f"l{i}"))
             tcaches[f"l{i}"] = nc
         return x, {"groups": gcaches, "tail": tcaches}
 
-    def body(h, pc):
-        p, c = pc
-        h, nc = layer_decode(p, h, c, pos, cfg, pcfg, ctx, kind)
+    def body(h, pcf):
+        p, c, f = pcf
+        h, nc = layer_decode(p, h, c, pos, cfg, pcfg, ctx, kind,
+                             spamm_cfg=spamm_cfg, frozen=f)
         return h, nc
 
-    x, caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x, caches = jax.lax.scan(body, x, (params["layers"], cache["layers"],
+                                       fz.get("layers", {})))
     return x, {"layers": caches}

@@ -1,0 +1,21 @@
+"""Frozen-plan runtime + artifact store (the offline half of SpAMM serving).
+
+`frozen.py`    — FrozenWeight / FrozenPlan: weight-side gating artifacts
+                 frozen into pytrees that compiled prefill/decode take as
+                 jit *arguments* (no get-norm, no dense-bitmap sort in the
+                 traced graph).
+`store.py`     — PlanStore: content-addressed on-disk store of FrozenWeight
+                 artifacts (npz + versioned json manifest).
+`precompute.py`— walk a model's gated GEMM weights and populate the store
+                 offline (driven by `repro.launch.precompute_plans`).
+"""
+from repro.plans.frozen import (FrozenPlan, FrozenWeight, PLAN_FORMAT_VERSION,
+                                freeze_weight, stack_plans)
+from repro.plans.store import PlanStore, PlanStoreError, fingerprint
+from repro.plans.precompute import freeze_tree, iter_gated_weights, populate
+
+__all__ = [
+    "FrozenPlan", "FrozenWeight", "PLAN_FORMAT_VERSION", "freeze_weight",
+    "stack_plans", "PlanStore", "PlanStoreError", "fingerprint",
+    "freeze_tree", "iter_gated_weights", "populate",
+]

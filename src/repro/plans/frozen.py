@@ -1,0 +1,331 @@
+"""Frozen weight-side SpAMM plans — gating artifacts as jit *inputs*.
+
+cuSpAMM's weight-side norm hierarchy is a pure function of the (static)
+weight matrix, yet a jitted serving step re-derives it inside every compiled
+trace: tracers are never cached, so the `WeightPlanCache` amortization only
+helps eager callers. This module freezes the weight half of the gating phase
+into two pytrees that compiled prefill/decode consume as *data*:
+
+  * `FrozenWeight` — the shape-independent artifact: the weight-side
+    `NormPyramid`, the super-column max-norm table, and the weight-admissible
+    (k, j) pair list (tiles whose weight norm can pass the τ-test for SOME
+    activation; with τ > 0 a zero-norm weight tile can never pass). This is
+    what `PlanStore` serializes and `WeightPlanCache` memoizes.
+  * `FrozenPlan` — `FrozenWeight.for_rows(gm)`: the artifact specialized to
+    an activation row grid, carrying the `SpammWork`-style step tables
+    (pair-major, ascending k, bucket-padded) plus the per-step segment
+    index tables that let a *traced* activation gate compute the
+    INIT/ACC/FLUSH flags with static shapes. Passed as a jit argument, it
+    makes the concrete work-list path the only executed path: the compiled
+    graph contains the activation-side get-norm and an O(S) gather-compare —
+    zero weight-side get-norm ops and zero dense-bitmap sorts.
+
+Exactness: the frozen step tables are a *superset* of every reachable mask
+(they enumerate all weight-admissible (i, j, k)); the traced activation gate
+`norm_a[i,k] · nbmax[k,j] ≥ τ` re-applies the exact flat test per step
+(fp32 multiplication is monotone in each non-negative argument, so the
+super-column max commutes with the gate), which keeps the frozen path
+bit-identical to the eager `plan()+execute()` pipeline.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import NormPyramid, _bucket, pad_to_tile
+from repro.kernels import ops as kops
+
+# Bump when the on-disk/for_rows encoding changes incompatibly: PlanStore
+# refuses to load artifacts written under a different version (satellite:
+# clear error, never silent wrong-plan execution).
+PLAN_FORMAT_VERSION = 1
+
+
+@jax.tree_util.register_pytree_node_class
+class FrozenWeight:
+    """Shape-independent frozen gating artifact of ONE gated weight.
+
+    Array fields (pytree children, all concrete):
+      tau      f32 scalar — the τ this artifact was frozen at
+      levels   tuple of normmaps, finest (tile) first — the weight-side
+               NormPyramid stack (levels[0] is the plain normmap)
+      nbmax    (gk, gn//block_n) f32 — per super-column max of levels[0]
+               (the traced activation gate tests against this table)
+      kj_k/kj_j (W,) int32 — weight-admissible (k, j) tile pairs, sorted by
+               (j, k) so `for_rows` emits pair-major ascending-k steps
+
+    Static metadata (aux): tile, block_n, levels (coarsening steps),
+    backend (resolved name), wshape (true K, N), padded (Kp, Np),
+    weight_hash (content fingerprint, "" when unknown), version.
+    """
+
+    def __init__(self, tau, levels, nbmax, kj_k, kj_j, *, tile: int,
+                 block_n: int, num_levels: int, backend: str,
+                 wshape: Tuple[int, int], padded: Tuple[int, int],
+                 use_mxu: bool = False, weight_hash: str = "",
+                 version: int = PLAN_FORMAT_VERSION):
+        self.tau = tau
+        self.levels = tuple(levels)
+        self.nbmax = nbmax
+        self.kj_k = kj_k
+        self.kj_j = kj_j
+        self.tile = tile
+        self.block_n = block_n
+        self.num_levels = num_levels
+        self.backend = backend
+        self.wshape = tuple(wshape)
+        self.padded = tuple(padded)
+        self.use_mxu = use_mxu
+        self.weight_hash = weight_hash
+        self.version = version
+        self._rows_cache: dict = {}
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.tau, self.levels, self.nbmax, self.kj_k, self.kj_j)
+        aux = (self.tile, self.block_n, self.num_levels, self.backend,
+               self.wshape, self.padded, self.use_mxu, self.weight_hash,
+               self.version)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tau, levels, nbmax, kj_k, kj_j = children
+        (tile, block_n, num_levels, backend, wshape, padded, use_mxu, wh,
+         ver) = aux
+        return cls(tau, levels, nbmax, kj_k, kj_j, tile=tile, block_n=block_n,
+                   num_levels=num_levels, backend=backend, wshape=wshape,
+                   padded=padded, use_mxu=use_mxu, weight_hash=wh,
+                   version=ver)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def pyramid(self) -> NormPyramid:
+        return NormPyramid(self.levels, tile=self.tile)
+
+    @property
+    def norm_b(self) -> jax.Array:
+        return self.levels[0]
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        """(gk, gn//block_n) — the weight-side tile grid at super-column
+        granularity."""
+        return self.nbmax.shape
+
+    @property
+    def num_kj(self) -> int:
+        """Number of weight-admissible (k, j) pairs (W)."""
+        return int(self.kj_k.shape[0])
+
+    def config_key(self) -> dict:
+        """The config echo that (with the weight hash) addresses this
+        artifact in a PlanStore — EVERY field that changes the computed
+        normmaps or gate must appear here, or a stale artifact would hit."""
+        return {
+            "tau": float(np.asarray(self.tau)),
+            "tile": self.tile,
+            "block_n": self.block_n,
+            "levels": self.num_levels,
+            "backend": self.backend,
+            "use_mxu": self.use_mxu,
+        }
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, w, tau, *, tile: int = 64, block_n: int = 1,
+              levels: int = 0, backend: str = "auto", use_mxu: bool = False,
+              weight_hash: str = "") -> "FrozenWeight":
+        """Freeze the weight side of `x @ w` gating at threshold `tau`.
+
+        Runs the backend's get-norm ONCE (plus `levels` pooling reductions)
+        — this is the offline "planning pass" that serving then never pays.
+        """
+        bk = kops.get_backend(backend)
+        w = jnp.asarray(w)
+        assert w.ndim == 2, w.shape
+        k, n = w.shape
+        wp = pad_to_tile(w, tile, tile * block_n)
+        base = bk.norms(wp, tile, use_mxu=use_mxu)
+        pyr = NormPyramid.from_normmap(base, levels, tile=tile)
+        base_np = np.asarray(base, np.float32)
+        gk, gnp = base_np.shape
+        assert gnp % block_n == 0, (gnp, block_n)
+        gnb = gnp // block_n
+        nbmax = (base_np.reshape(gk, gnb, block_n).max(2)
+                 if block_n > 1 else base_np)
+        tau_f = float(np.asarray(tau))
+        if tau_f > 0.0:
+            # a zero-norm weight super-column can never pass `na·nb ≥ τ>0`
+            # for any activation — frozen-safe weight-side pruning
+            kk, jj = np.nonzero(nbmax > 0.0)
+        else:
+            kk, jj = [x.ravel() for x in
+                      np.mgrid[0:gk, 0:gnb].astype(np.int64)]
+        order = np.lexsort((kk, jj))  # (j asc, k asc) → pair-major steps
+        return cls(
+            jnp.asarray(tau_f, jnp.float32),
+            tuple(jnp.asarray(lv) for lv in pyr.levels),
+            jnp.asarray(nbmax),
+            jnp.asarray(kk[order], jnp.int32),
+            jnp.asarray(jj[order], jnp.int32),
+            tile=tile, block_n=block_n, num_levels=levels, backend=bk.name,
+            wshape=(int(k), int(n)),
+            padded=(int(wp.shape[0]), int(wp.shape[1])),
+            use_mxu=use_mxu, weight_hash=weight_hash,
+        )
+
+    # -- shape specialization -----------------------------------------------
+    def for_rows(self, gm: int, *, min_steps: int = 0) -> "FrozenPlan":
+        """Specialize to an activation row grid of `gm` tiles.
+
+        Emits the step tables pair-major ((i, j) runs contiguous, k
+        ascending within a run) exactly like `compact_from_triples`, padded
+        to a power-of-two bucket of at least `min_steps` (pass a common
+        bucket when plans of several weights must stack into one scan
+        input). Padding steps repeat the last real triple with the `real`
+        bit clear, so the traced gate can never activate them. Cached per
+        (gm, bucket)."""
+        gk, gnb = self.grid
+        w = self.num_kj
+        s_real = gm * w
+        s = _bucket(max(s_real, min_steps))
+        key = (gm, s)
+        hit = self._rows_cache.get(key)
+        if hit is not None:
+            return hit
+        kj_k = np.asarray(self.kj_k, np.int32)
+        kj_j = np.asarray(self.kj_j, np.int32)
+        if s_real:
+            step_i = np.repeat(np.arange(gm, dtype=np.int32), w)
+            step_j = np.tile(kj_j, gm)
+            step_k = np.tile(kj_k, gm)
+            pad = s - s_real
+            if pad:
+                step_i = np.concatenate([step_i, np.full(pad, step_i[-1])])
+                step_j = np.concatenate([step_j, np.full(pad, step_j[-1])])
+                step_k = np.concatenate([step_k, np.full(pad, step_k[-1])])
+        else:
+            step_i = np.zeros(s, np.int32)
+            step_j = np.zeros(s, np.int32)
+            step_k = np.zeros(s, np.int32)
+        step_real = np.zeros(s, bool)
+        step_real[:s_real] = True
+        # segment (= output pair) runs over the PADDED tables: padding
+        # repeats the last real (i, j), so it merges into the final run and
+        # the in-trace flag arithmetic needs no special cases
+        pair = step_i.astype(np.int64) * gnb + step_j
+        new = np.ones(s, bool)
+        new[1:] = pair[1:] != pair[:-1]
+        starts = np.flatnonzero(new)
+        counts = np.diff(np.append(starts, s))
+        ends = np.append(starts[1:], s) - 1
+        seg_first = np.repeat(starts, counts).astype(np.int32)
+        seg_last = np.repeat(ends, counts).astype(np.int32)
+        fp = FrozenPlan(
+            self.tau, self.levels[0], self.nbmax,
+            jnp.asarray(step_i.astype(np.int32)),
+            jnp.asarray(step_j.astype(np.int32)),
+            jnp.asarray(step_k.astype(np.int32)),
+            jnp.asarray(step_real),
+            jnp.asarray(seg_first), jnp.asarray(seg_last),
+            tile=self.tile, block_n=self.block_n, num_levels=self.num_levels,
+            backend=self.backend, gm=gm, gk=gk, gnb=gnb,
+            wshape=self.wshape, version=self.version,
+        )
+        self._rows_cache[key] = fp
+        return fp
+
+
+@jax.tree_util.register_pytree_node_class
+class FrozenPlan:
+    """A FrozenWeight specialized to one activation row grid — THE pytree a
+    jitted prefill/decode step takes as an argument.
+
+    Array fields (children; concrete when built, tracers inside the jit):
+      tau          f32 scalar
+      norm_b       (gk, gnp) weight-side finest normmap (plan metadata /
+                   execute shape contract)
+      nbmax        (gk, gnb) per-super-column max norms — the traced gate's
+                   weight half
+      step_i/j/k   (S,) int32 — pair-major ascending-k step tables over ALL
+                   weight-admissible (i, j, k); S = gm·W bucket-padded
+      step_real    (S,) bool — clear on bucket padding steps
+      seg_first/seg_last (S,) int32 — index of the first/last step of each
+                   step's (i, j) segment: what lets the traced activation
+                   gate derive INIT/FLUSH flags with pure static-shape
+                   cumsum/gather arithmetic
+
+    Static metadata (aux): tile, block_n, num_levels, backend, gm, gk, gnb,
+    wshape, version. Leading batch dims on every child are allowed (stacked
+    per-layer plans riding a lax.scan — see `stack_plans`).
+    """
+
+    def __init__(self, tau, norm_b, nbmax, step_i, step_j, step_k, step_real,
+                 seg_first, seg_last, *, tile: int, block_n: int,
+                 num_levels: int, backend: str, gm: int, gk: int, gnb: int,
+                 wshape: Tuple[int, int], version: int = PLAN_FORMAT_VERSION):
+        self.tau = tau
+        self.norm_b = norm_b
+        self.nbmax = nbmax
+        self.step_i = step_i
+        self.step_j = step_j
+        self.step_k = step_k
+        self.step_real = step_real
+        self.seg_first = seg_first
+        self.seg_last = seg_last
+        self.tile = tile
+        self.block_n = block_n
+        self.num_levels = num_levels
+        self.backend = backend
+        self.gm = gm
+        self.gk = gk
+        self.gnb = gnb
+        self.wshape = tuple(wshape)
+        self.version = version
+
+    def tree_flatten(self):
+        children = (self.tau, self.norm_b, self.nbmax, self.step_i,
+                    self.step_j, self.step_k, self.step_real, self.seg_first,
+                    self.seg_last)
+        aux = (self.tile, self.block_n, self.num_levels, self.backend,
+               self.gm, self.gk, self.gnb, self.wshape, self.version)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tile, block_n, num_levels, backend, gm, gk, gnb, wshape, ver = aux
+        return cls(*children, tile=tile, block_n=block_n,
+                   num_levels=num_levels, backend=backend, gm=gm, gk=gk,
+                   gnb=gnb, wshape=wshape, version=ver)
+
+    @property
+    def num_steps(self) -> int:
+        return self.step_i.shape[-1]
+
+
+def freeze_weight(w, tau, *, tile: int = 64, block_n: int = 1,
+                  levels: int = 0, backend: str = "auto",
+                  use_mxu: bool = False, weight_hash: str = "") -> FrozenWeight:
+    """Convenience alias for `FrozenWeight.build`."""
+    return FrozenWeight.build(w, tau, tile=tile, block_n=block_n,
+                              levels=levels, backend=backend, use_mxu=use_mxu,
+                              weight_hash=weight_hash)
+
+
+def stack_plans(fps) -> FrozenPlan:
+    """Stack per-layer FrozenPlans (same static metadata, same bucket — use
+    `for_rows(gm, min_steps=...)` with a common bucket) into ONE plan whose
+    children carry a leading layer dim: the shape lax.scan slices per step,
+    which is how frozen plans ride a scanned-layer prefill."""
+    fps = list(fps)
+    assert fps, "stack_plans of nothing"
+    aux0 = fps[0].tree_flatten()[1]
+    for fp in fps[1:]:
+        assert fp.tree_flatten()[1] == aux0, (
+            "stack_plans needs identical static metadata (shapes/bucket): "
+            f"{fp.tree_flatten()[1]} != {aux0}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *fps)

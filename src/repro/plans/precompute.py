@@ -1,0 +1,106 @@
+"""Offline plan precomputation: walk a model's gated GEMM weights and
+freeze/store their weight-side plans.
+
+The model zoo gates exactly the GEMMs that go through
+`core.module.maybe_spamm_matmul`: the attention projections (wq/wk/wv/wo
+under a layer's "mix" subtree) and the MLP matmuls (w1/w3/w2 under "mlp").
+MoE expert/shared FFNs are gated too but run inside shard_map with
+per-token buffers; they keep the traced gating path and are not frozen
+(documented engine limitation — their GEMMs simply fall back).
+
+`freeze_tree` mirrors the params structure at those leaves: a stacked
+(L, K, N) leaf becomes a list of per-layer `FrozenWeight`s (what
+`stack_plans` later turns into scan inputs), a 2-D leaf a single one.
+`populate` is the CLI-facing store writer (`repro.launch.precompute_plans`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.plans.frozen import FrozenWeight
+from repro.plans.store import PlanStore, fingerprint
+
+# leaf name × parent subtree that identifies a gated GEMM weight
+GATED_NAMES = ("wq", "wk", "wv", "wo", "w1", "w2", "w3")
+GATED_PARENTS = ("mix", "mlp")
+
+
+def iter_gated_weights(params, _prefix=()):
+    """Yield (path_tuple, leaf) for every gated GEMM weight in a params
+    pytree: leaves named wq/wk/wv/wo/w1/w2/w3 directly under a "mix" or
+    "mlp" subtree. Stacked leaves (leading layer/group dim) are yielded
+    whole; callers slice axis 0 per layer."""
+    if not isinstance(params, dict):
+        return
+    for name, sub in params.items():
+        path = _prefix + (name,)
+        if isinstance(sub, dict):
+            yield from iter_gated_weights(sub, path)
+        elif (len(path) >= 2 and path[-2] in GATED_PARENTS
+              and name in GATED_NAMES and getattr(sub, "ndim", 0) >= 2):
+            yield path, sub
+
+
+def _freeze_one(w, scfg, *, cache=None, store: Optional[PlanStore] = None,
+                use_mxu: bool = False) -> FrozenWeight:
+    """One weight → FrozenWeight, through the cache/store tiers when given."""
+    kw = dict(tau=scfg.tau, tile=scfg.tile, block_n=scfg.block_n,
+              levels=getattr(scfg, "levels", 0), backend=scfg.backend)
+    if cache is not None:
+        return cache.frozen_weight(w, use_mxu=use_mxu, store=store, **kw)
+    h = fingerprint(w)
+    if store is not None:
+        # may raise PlanStoreError on stale artifacts
+        fw = store.get(h, use_mxu=use_mxu, **kw)
+        if fw is not None:
+            return fw
+    fw = FrozenWeight.build(w, use_mxu=use_mxu, weight_hash=h, **kw)
+    if store is not None:
+        store.put(fw)
+    return fw
+
+
+def freeze_tree(params, scfg, *, cache=None, store: Optional[PlanStore] = None,
+                use_mxu: bool = False):
+    """Freeze every gated weight of a params pytree.
+
+    Returns (tree, count): `tree` mirrors the params dict structure at the
+    gated leaves, each leaf a `FrozenWeight` (2-D weight) or a list of
+    per-layer `FrozenWeight`s (stacked weight); `count` is the number of
+    distinct weight matrices frozen. `cache` (a `WeightPlanCache`) is the
+    in-memory tier; `store` the persistent one — with a warm store this
+    whole walk is load-only, no get-norm pass."""
+    count = 0
+    tree: dict = {}
+    for path, leaf in iter_gated_weights(params):
+        if leaf.ndim == 2:
+            fz = _freeze_one(leaf, scfg, cache=cache, store=store,
+                             use_mxu=use_mxu)
+            count += 1
+        else:
+            # stacked (L, K, N): freeze per layer slice (flattening extra
+            # leading dims first keeps hybrid group stacks uniform)
+            flat = np.asarray(leaf).reshape(-1, *leaf.shape[-2:])
+            fz = [
+                _freeze_one(flat[l], scfg, cache=cache, store=store,
+                            use_mxu=use_mxu)
+                for l in range(flat.shape[0])
+            ]
+            count += flat.shape[0]
+        node = tree
+        for name in path[:-1]:
+            node = node.setdefault(name, {})
+        node[path[-1]] = fz
+    return tree, count
+
+
+def populate(store: PlanStore, params, scfg, *, cache=None,
+             use_mxu: bool = False) -> int:
+    """Populate `store` with frozen plans for every gated GEMM weight of
+    `params` under SpAMM config `scfg`. Returns the number of weights
+    processed (store hits + fresh builds)."""
+    _, count = freeze_tree(params, scfg, cache=cache, store=store,
+                           use_mxu=use_mxu)
+    return count

@@ -1,0 +1,185 @@
+"""PlanStore: content-addressed on-disk store of FrozenWeight artifacts.
+
+Layout:  <root>/<key>/manifest.json + arrays.npz   (tmp-dir + os.rename,
+the checkpoint module's atomicity idiom — a crashed put can never be
+mistaken for a complete artifact).
+
+The key is a content address: sha256 over the weight fingerprint AND the
+full gating config echo (τ, tile, block_n, levels, resolved backend, format
+version). Changing the weight or ANY config field therefore changes the key
+— a stale artifact is a clean miss, never a silent wrong-plan hit. Loads
+additionally re-validate the manifest: a format-version mismatch or a
+backend that is not in the running registry raises `PlanStoreError` instead
+of handing compiled serving a plan the executor cannot honor.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.plans.frozen import FrozenWeight, PLAN_FORMAT_VERSION
+
+
+class PlanStoreError(RuntimeError):
+    """An on-disk plan artifact is incompatible with the running code."""
+
+
+def fingerprint(w) -> str:
+    """Content fingerprint of a weight matrix: sha256 over dtype, shape and
+    raw bytes (host transfer happens once per weight, offline)."""
+    a = np.asarray(w)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def _config_echo(tau, tile, block_n, levels, backend, use_mxu) -> dict:
+    return {
+        # canonicalize through f32: artifacts carry τ as float32, queries
+        # often pass the python double — both must address the same key
+        "tau": float(np.float32(tau)),
+        "tile": int(tile),
+        "block_n": int(block_n),
+        "levels": int(levels),
+        "backend": kops.resolve_backend(backend),
+        # the get-norm variant changes the stored normmaps' rounding, so it
+        # is part of the content address like every other gate-shaping field
+        "use_mxu": bool(use_mxu),
+    }
+
+
+class PlanStore:
+    """Content-addressed FrozenWeight artifacts on disk.
+
+    `get`/`put` address by (weight fingerprint × config echo); `hits`/
+    `misses` expose warm-start effectiveness (the acceptance contract:
+    misses only while first populating). A `WeightPlanCache` with its
+    `store` attribute set uses this as the persistent tier below its
+    in-memory map (see `WeightPlanCache.frozen_weight`).
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    # -- addressing ---------------------------------------------------------
+    @staticmethod
+    def key_for(weight_hash: str, *, tau, tile: int, block_n: int,
+                levels: int, backend: str, use_mxu: bool = False) -> str:
+        echo = _config_echo(tau, tile, block_n, levels, backend, use_mxu)
+        blob = json.dumps({"weight": weight_hash, "cfg": echo,
+                           "version": PLAN_FORMAT_VERSION}, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+    def _dir(self, key: str) -> str:
+        return os.path.join(self.root, key)
+
+    def keys(self):
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(
+            d for d in os.listdir(self.root)
+            if not d.startswith(".")  # .tmp_* = crashed/in-progress puts
+            and os.path.isfile(os.path.join(self.root, d, "manifest.json"))
+        )
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+    def contains(self, weight_hash: str, **cfg) -> bool:
+        return os.path.isfile(
+            os.path.join(self._dir(self.key_for(weight_hash, **cfg)),
+                         "manifest.json"))
+
+    # -- put / get ----------------------------------------------------------
+    def put(self, fw: FrozenWeight) -> str:
+        """Persist one artifact; returns its key. Atomic (tmp + rename)."""
+        assert fw.weight_hash, "FrozenWeight needs a weight_hash to be stored"
+        key = self.key_for(fw.weight_hash, **fw.config_key())
+        final = self._dir(key)
+        tmp = os.path.join(self.root, f".tmp_{key}")
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {
+            "nbmax": np.asarray(fw.nbmax),
+            "kj_k": np.asarray(fw.kj_k),
+            "kj_j": np.asarray(fw.kj_j),
+        }
+        for l, lv in enumerate(fw.levels):
+            arrays[f"level_{l}"] = np.asarray(lv)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "format_version": fw.version,
+            "weight_hash": fw.weight_hash,
+            **fw.config_key(),
+            "num_pyramid_levels": len(fw.levels),
+            "wshape": list(fw.wshape),
+            "padded": list(fw.padded),
+            "arrays": sorted(arrays),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return key
+
+    def get(self, weight_hash: str, *, tau, tile: int, block_n: int,
+            levels: int, backend: str, use_mxu: bool = False
+            ) -> Optional[FrozenWeight]:
+        """Load an artifact, or None on miss. Raises `PlanStoreError` when
+        an artifact exists but its manifest does not match the running code
+        (format version / backend registry) — never silently executes a
+        wrong or unexecutable plan."""
+        key = self.key_for(weight_hash, tau=tau, tile=tile, block_n=block_n,
+                           levels=levels, backend=backend, use_mxu=use_mxu)
+        path = self._dir(key)
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.isfile(mpath):
+            self.misses += 1
+            return None
+        with open(mpath) as f:
+            man = json.load(f)
+        if man.get("format_version") != PLAN_FORMAT_VERSION:
+            raise PlanStoreError(
+                f"plan artifact {key} was written with format version "
+                f"{man.get('format_version')!r}; this build reads version "
+                f"{PLAN_FORMAT_VERSION} — re-run precompute_plans")
+        if man.get("backend") not in kops.BACKENDS:
+            raise PlanStoreError(
+                f"plan artifact {key} targets backend {man.get('backend')!r} "
+                f"which is not registered ({sorted(kops.BACKENDS)}) — "
+                "re-run precompute_plans against this build")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        n_levels = int(man["num_pyramid_levels"])
+        fw = FrozenWeight(
+            jnp.asarray(man["tau"], jnp.float32),
+            tuple(jnp.asarray(data[f"level_{l}"]) for l in range(n_levels)),
+            jnp.asarray(data["nbmax"]),
+            jnp.asarray(data["kj_k"], jnp.int32),
+            jnp.asarray(data["kj_j"], jnp.int32),
+            tile=int(man["tile"]), block_n=int(man["block_n"]),
+            num_levels=int(man["levels"]), backend=man["backend"],
+            wshape=tuple(man["wshape"]), padded=tuple(man["padded"]),
+            use_mxu=bool(man.get("use_mxu", False)),
+            weight_hash=man["weight_hash"],
+            version=int(man["format_version"]),
+        )
+        self.hits += 1
+        return fw
+
+    def manifest_pointer(self) -> dict:
+        """What a checkpoint records next to the weights so a restored
+        server finds its precomputed plans (see `checkpoint.save`)."""
+        return {"path": os.path.abspath(self.root),
+                "format_version": PLAN_FORMAT_VERSION}

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import module as spmod
+from repro.core.plan import _bucket
 from repro.models import model as M
 from repro.models.transformer import NetCtx
 
@@ -33,29 +34,91 @@ class Request:
 
 class Engine:
     """`spamm_cfg` (SpammConfig or SpammContext) turns on norm-gated GEMMs in
-    prefill. The engine owns ONE SpammContext threaded through every request.
+    prefill AND decode. The engine owns ONE SpammContext threaded through
+    every request.
 
-    Note on amortization: the prefill step is jitted, so inside the compiled
-    graph the weight normmaps are recomputed per call (tracers are never
-    cached — see WeightPlanCache) and plans stay dense-bitmap; what jit
-    amortizes is the Python-side gating/trace. The cache pays off on the
-    EAGER plan/execute serving path (see benchmarks/plan_cache.py), where
-    plans now carry the §3.3 compacted work-list straight from the gating
-    descent and execution runs the ragged Σnvalid-step kernel
-    (`spamm_mm_worklist`) — cost proportional to valid work, see
-    benchmarks/sparse_exec.py. Moving weight plans to jit inputs so the
-    compiled prefill skips get-norm too is the natural next step.
+    Frozen-plan contract (the amortization story): the weight-side gating
+    artifacts are a pure function of the static weights, so the engine
+    freezes them ONCE (`repro.plans.freeze_tree`, optionally warm-started
+    from an on-disk `PlanStore` populated by `repro.launch.precompute_plans`
+    — then engine start-up is a pure load, no planning pass) and passes the
+    per-shape `FrozenPlan` pytrees into the jitted `_prefill`/`_decode` as
+    ARGUMENTS. Inside the compiled graphs only the activation-side gate is
+    traced; the weight get-norm and the dense-bitmap + `spamm_compact_ref`
+    sort never appear — the concrete `SpammWork` work-list path (PR 3) is
+    the only executed path, bit-identical to the eager plan/execute
+    pipeline. `WeightPlanCache` is the in-memory tier above the store (it
+    memoizes the frozen artifacts by weight fingerprint) and still serves
+    the eager plan/execute path (benchmarks/plan_cache.py). MoE expert FFNs
+    keep the traced prefill gate (their buffers live inside shard_map) and
+    stay dense in decode.
+
+    `freeze_plans=False` opts back into the legacy in-trace gating for A/B
+    comparisons (benchmarks/frozen_prefill.py measures the gap).
     """
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
-                 params, *, max_len: int = 512, spamm_cfg=None):
+                 params, *, max_len: int = 512, spamm_cfg=None,
+                 plan_store=None, freeze_plans: Optional[bool] = None):
         self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
         self.params = params
         self.max_len = max_len
         self.spamm_ctx = spmod.as_context(spamm_cfg)
+        enabled = self.spamm_ctx is not None and self.spamm_ctx.enable
+        if isinstance(plan_store, str):
+            from repro.plans.store import PlanStore  # deferred: optional dep
+
+            plan_store = PlanStore(plan_store)
+        self.plan_store = plan_store
+        self._freeze = enabled if freeze_plans is None else (
+            bool(freeze_plans) and enabled)
+        if enabled and plan_store is not None:
+            self.spamm_ctx.cache.store = plan_store
+        self._fw_tree = None     # path-tree of FrozenWeight (lists per layer)
+        self._fp_cache: dict = {}  # row-tile grid gm → FrozenPlan pytree
         self._prefill = jax.jit(
             M.make_prefill_step(cfg, pcfg, ctx, spamm_cfg=self.spamm_ctx))
-        self._decode = jax.jit(M.make_decode_step(cfg, pcfg, ctx))
+        self._decode = jax.jit(M.make_decode_step(
+            cfg, pcfg, ctx,
+            spamm_cfg=self.spamm_ctx if self._freeze else None))
+
+    # -- frozen-plan assembly ------------------------------------------------
+    def _frozen_for(self, rows: int) -> dict:
+        """The FrozenPlan pytree for a step whose gated GEMMs see `rows`
+        flattened activation rows — built once per row-tile grid and reused
+        (the jitted steps recompile per shape anyway, so this adds no
+        compiles). Stacked layers get stacked plans (scan xs)."""
+        if not self._freeze:
+            return {}
+        scfg = self.spamm_ctx.cfg
+        tile = scfg.tile
+        gm = (rows + tile - 1) // tile
+        hit = self._fp_cache.get(gm)
+        if hit is not None:
+            return hit
+        if self._fw_tree is None:
+            from repro.plans.precompute import freeze_tree
+
+            self._fw_tree, _ = freeze_tree(
+                self.params, scfg, cache=self.spamm_ctx.cache,
+                store=self.plan_store)
+
+        from repro.plans.frozen import stack_plans
+
+        def specialize(node):
+            if isinstance(node, dict):
+                return {k: specialize(v) for k, v in node.items()}
+            if isinstance(node, list):
+                # per-layer plans must share one step bucket to stack into a
+                # scan input; padding steps carry a clear `real` bit
+                bucket = max(_bucket(gm * fw.num_kj) for fw in node)
+                return stack_plans(
+                    [fw.for_rows(gm, min_steps=bucket) for fw in node])
+            return node.for_rows(gm)
+
+        tree = specialize(self._fw_tree)
+        self._fp_cache[gm] = tree
+        return tree
 
     def _pad_cache(self, cache, cur_len: int):
         """Grow linear KV caches from cur_len to max_len slots."""
@@ -74,24 +137,37 @@ class Engine:
 
         return jax.tree_util.tree_map_with_path(grow, cache)
 
-    def _spamm_stats(self, fracs, hits0: int, misses0: int):
-        """Per-wave gating stats dict from the drained valid fractions and
-        the plan-cache counter deltas across this wave."""
+    def _spamm_stats(self, taps, hits0: int, misses0: int,
+                     store0: Optional[tuple]):
+        """Per-wave gating stats dict from the drained (phase, fraction)
+        taps and the plan-cache/plan-store counter DELTAS across this wave
+        (every counter in the dict is per-wave: after first population a
+        warm wave reports 0/0 store traffic, never stale lifetime totals)."""
         cache = self.spamm_ctx.cache
-        return {
-            "valid_fraction": float(np.mean(fracs)) if fracs else None,
-            "gated_gemms": len(fracs),
+        pre = [v for ph, v in taps if ph != "decode"]
+        dec = [v for ph, v in taps if ph == "decode"]
+        stats = {
+            "valid_fraction": float(np.mean(pre)) if pre else None,
+            "gated_gemms": len(pre),
+            "decode_valid_fraction": float(np.mean(dec)) if dec else None,
+            "decode_gated_gemms": len(dec),
             "plan_cache_hits": cache.hits - hits0,
             "plan_cache_misses": cache.misses - misses0,
         }
+        if store0 is not None:
+            stats["plan_store_hits"] = self.plan_store.hits - store0[0]
+            stats["plan_store_misses"] = self.plan_store.misses - store0[1]
+        return stats
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
         """Greedy-decode a batch of same-length prompts (engine pads to the
         longest prompt internally with left-trim to uniform length).
 
         When SpAMM is enabled, each request's `out` metadata carries the
-        prefill gating stats of its wave (mean valid_fraction over the gated
-        GEMMs, plan-cache hit/miss deltas) instead of dropping them.
+        gating stats of its wave, split by phase: prefill (valid_fraction /
+        gated_gemms over the gated prefill GEMMs) and decode
+        (decode_valid_fraction / decode_gated_gemms summed over the wave's
+        decode steps), plus plan-cache hit/miss deltas.
         """
         assert requests, "empty batch"
         b = len(requests)
@@ -99,44 +175,57 @@ class Engine:
         toks = np.stack([r.prompt[-plen:] for r in requests]).astype(np.int32)
         collect = self.spamm_ctx is not None and self.spamm_ctx.enable
         spamm_meta = None
+        store0 = None
         if collect:
             hits0 = self.spamm_ctx.cache.hits
             misses0 = self.spamm_ctx.cache.misses
+            if self.plan_store is not None:
+                store0 = (self.plan_store.hits, self.plan_store.misses)
+        # frozen-plan assembly counts into this wave's store deltas (it is
+        # where first population / warm-start loading happens)
+        frozen_pre = self._frozen_for(b * plen)
+        frozen_dec = self._frozen_for(b) if self._freeze else {}
+        if collect:
             self.spamm_ctx.begin_stats()
-            try:
-                cache, logits = self._prefill(
-                    self.params, {"tokens": jnp.asarray(toks)})
-            finally:
+        try:
+            if collect:
+                self.spamm_ctx.set_phase("prefill")
+            cache, logits = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, frozen_pre)
+            cache = self._pad_cache(cache, plen)
+            outs = [[] for _ in range(b)]
+            done = np.zeros(b, bool)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos = plen
+            budget = max(r.max_new_tokens for r in requests)
+            if collect:
+                self.spamm_ctx.set_phase("decode")
+            for t in range(budget):
+                for i, r in enumerate(requests):
+                    if not done[i]:
+                        outs[i].append(int(cur[i]))
+                        if (r.eos_id is not None and int(cur[i]) == r.eos_id) or \
+                           len(outs[i]) >= r.max_new_tokens:
+                            done[i] = True
+                if done.all() or pos >= self.max_len - 1:
+                    break
+                logits, cache = self._decode(
+                    self.params, cur[:, None], cache, jnp.int32(pos),
+                    frozen_dec
+                )
+                cur = jnp.argmax(logits, -1).astype(jnp.int32)
+                pos += 1
+        finally:
+            if collect:
                 # unordered io_callbacks are NOT flushed by output readiness
                 # — effects_barrier is the documented flush; the finally
-                # closes the collect window even on a failed prefill so the
+                # closes the collect window even on a failed step so the
                 # context's telemetry can't be left collecting forever
                 jax.effects_barrier()
-                fracs = self.spamm_ctx.end_stats()
-            spamm_meta = self._spamm_stats(fracs, hits0, misses0)
-        else:
-            cache, logits = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)})
-        cache = self._pad_cache(cache, plen)
-        outs = [[] for _ in range(b)]
-        done = np.zeros(b, bool)
-        cur = jnp.argmax(logits, -1).astype(jnp.int32)
-        pos = plen
-        budget = max(r.max_new_tokens for r in requests)
-        for t in range(budget):
-            for i, r in enumerate(requests):
-                if not done[i]:
-                    outs[i].append(int(cur[i]))
-                    if (r.eos_id is not None and int(cur[i]) == r.eos_id) or \
-                       len(outs[i]) >= r.max_new_tokens:
-                        done[i] = True
-            if done.all() or pos >= self.max_len - 1:
-                break
-            logits, cache = self._decode(
-                self.params, cur[:, None], cache, jnp.int32(pos)
-            )
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
-            pos += 1
+                taps = self.spamm_ctx.end_stats()
+                self.spamm_ctx.set_phase("prefill")
+        if collect:
+            spamm_meta = self._spamm_stats(taps, hits0, misses0, store0)
         results = [np.asarray(o, np.int32) for o in outs]
         for r, toks_out in zip(requests, results):
             r.out = {"tokens": toks_out, "spamm": spamm_meta}

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.core import module as spmod
 from repro.data.pipeline import SyntheticLM
 from repro.distributed.compression import Int8EF
 from repro.models import model as M
@@ -34,6 +35,10 @@ class TrainResult:
     restarts: int
     straggler_steps: int
     final_step: int
+    # per-step SpAMM gating stats, one entry per executed step (the same
+    # stats the serving engine attaches to Request.out["spamm"]): list of
+    # {"step", "valid_fraction", "gated_gemms"} dicts, empty when SpAMM off
+    spamm_stats: list = dataclasses.field(default_factory=list)
 
 
 def train(
@@ -78,9 +83,15 @@ def train(
         params = M.init_params(cfg, pcfg, jax.random.key(tcfg.seed))
         opt_state = opt.init(params)
 
-    step_fn = jax.jit(M.make_train_step(cfg, pcfg, ctx, opt, spamm_cfg=spamm_cfg))
+    # one context for the whole run, so train steps export the SAME gating
+    # stats the serving engine attaches to Request.out["spamm"] — carried as
+    # step METRICS (loss_fn threads them through the scan carry; callbacks
+    # would be dropped under grad)
+    spamm_ctx = spmod.as_context(spamm_cfg)
+    collect_spamm = spamm_ctx is not None and spamm_ctx.enable
+    step_fn = jax.jit(M.make_train_step(cfg, pcfg, ctx, opt, spamm_cfg=spamm_ctx))
 
-    losses, durations = [], []
+    losses, durations, spamm_stats = [], [], []
     stragglers = 0
     restarts = 1 if resume and start_step else 0
     step = start_step
@@ -93,6 +104,14 @@ def train(
             params, opt_state, batch, jnp.int32(step)
         )
         loss = float(metrics["loss"])
+        sp = None
+        if collect_spamm and "spamm_valid_fraction" in metrics:
+            n_gemms = int(metrics["spamm_gated_gemms"])
+            sp = {"step": step,
+                  "valid_fraction": (float(metrics["spamm_valid_fraction"])
+                                     if n_gemms else None),
+                  "gated_gemms": n_gemms}
+            spamm_stats.append(sp)
         dt = time.time() - t0
         durations.append(dt)
         med = float(np.median(durations[-50:]))
@@ -100,7 +119,12 @@ def train(
             stragglers += 1
         losses.append(loss)
         if log_every and step % log_every == 0:
-            print(f"step {step:5d} loss {loss:.4f} ({dt*1e3:.0f} ms)", flush=True)
+            extra = ""
+            if sp is not None and sp["valid_fraction"] is not None:
+                extra = (f" spamm_valid {sp['valid_fraction']:.3f} "
+                         f"({sp['gated_gemms']} gemms)")
+            print(f"step {step:5d} loss {loss:.4f} ({dt*1e3:.0f} ms){extra}",
+                  flush=True)
         step += 1
         if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
             ckpt.save(
@@ -108,4 +132,4 @@ def train(
                 {"params": params, "opt_state": opt_state},
                 async_=False,
             )
-    return TrainResult(losses, restarts, stragglers, step)
+    return TrainResult(losses, restarts, stragglers, step, spamm_stats)
