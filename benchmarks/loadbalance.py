@@ -1,14 +1,57 @@
 """Paper Fig. 4 / §3.5.1: load-imbalance of contiguous vs cyclic tile-row
-assignment across device counts, on a diagonal-heavy decay workload."""
+assignment across device counts, on a diagonal-heavy decay workload — plus
+the equal-work extension: variable-width row strips cut by prefix sum over
+the coarse work estimate (`schedule.equal_work_partition`).
+
+The equal-work section is parity-asserting (CI runs it via --smoke): the
+partition's predicted loads must conserve the total work, its imbalance must
+never exceed the contiguous schedule's (uniform-split guard), executing the
+partition strip-by-strip must reproduce the flat single-device `spamm()`
+product, and on the stride-aliased banded grid — hot tile-rows recurring at
+the cyclic stride, the structure BOTH uniform schedules lose on — the
+equal-work imbalance must be strictly lower than contiguous AND cyclic.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import row
 from repro.core import spamm as cs, schedule
 from repro.kernels import ref
 
 N, TILE = 1024, 32  # paper Fig. 4 uses 1024² with 32² tiles
+
+
+def _aliased_banded(n: int, stride_rows: int, seed: int = 1) -> np.ndarray:
+    """Banded decay matrix with DENSE tile-row stripes recurring at
+    `stride_rows` tile-rows in the leading half (attention-sink-like global
+    rows in an otherwise banded norm structure). The stripes alias the
+    cyclic assignment's stride — strided sampling piles them onto few
+    devices — while the uniform contiguous strips catch unequal stripe
+    counts; only a variable-width cut balances both."""
+    rng = np.random.default_rng(seed)
+    a = cs.exponential_decay(n, lam=0.6, seed=0).copy()
+    for r in range(0, n // 2, stride_rows * TILE):
+        a[r:r + TILE] = 0.05 * rng.standard_normal((TILE, n)).astype(
+            np.float32)
+    return a
+
+
+def _strip_exec_parity(a: np.ndarray, tau: float, offsets) -> None:
+    """Executing the variable strips one by one ≡ flat single-device spamm
+    (the distributed bodies compute exactly these strips)."""
+    ja = jnp.asarray(a)
+    flat, _ = cs.spamm(ja, ja, tau, tile=TILE, backend="jnp")
+    gm = a.shape[0] // TILE
+    at = a.reshape(gm, TILE, a.shape[1])
+    parts = []
+    for d in range(len(offsets) - 1):
+        loc = at[offsets[d]:offsets[d + 1]].reshape(-1, a.shape[1])
+        c, _ = cs.spamm(jnp.asarray(loc), ja, tau, tile=TILE, backend="jnp")
+        parts.append(np.asarray(c))
+    np.testing.assert_allclose(
+        np.concatenate(parts), np.asarray(flat), atol=1e-5)
 
 
 def run(quick: bool = False):
@@ -18,26 +61,76 @@ def run(quick: bool = False):
     for ndev in (4, 8, 16, 64):
         imb_c = float(schedule.tile_imbalance(v, ndev, "contiguous"))
         imb_s = float(schedule.tile_imbalance(v, ndev, "cyclic"))
+        imb_e = float(schedule.tile_imbalance(v, ndev, "equal_work"))
         row(
             f"loadbalance/tile-workers={ndev}",
             0.0,
             f"imbalance_contiguous={imb_c:.3f};imbalance_cyclic={imb_s:.3f};"
+            f"imbalance_equal_work={imb_e:.3f};"
             f"improvement={imb_c/imb_s:.2f}x",
         )
-    # row-strip variant (the §3.4 distributed partition)
+    # row-strip variant (the §3.4 distributed partition): banded grid
     for ndev in (4, 8):
         imb_c = float(schedule.imbalance(v, ndev, "contiguous"))
         imb_s = float(schedule.imbalance(v, ndev, "cyclic"))
+        imb_e = schedule.partition_imbalance(
+            v, schedule.equal_work_partition(v, ndev))
+        # uniform-split guard (compare in the same f64 attribution pipeline)
+        lc = schedule.device_loads(v, ndev, "contiguous")
+        assert imb_e <= lc.max() / max(lc.mean(), 1e-9) + 1e-9, (imb_e, lc)
         row(
             f"loadbalance/row-devices={ndev}",
             0.0,
             f"imbalance_contiguous={imb_c:.3f};imbalance_cyclic={imb_s:.3f};"
+            f"imbalance_equal_work={imb_e:.3f};"
             f"improvement={imb_c/imb_s:.2f}x",
         )
 
+    # equal-work vs contiguous/cyclic on the stride-aliased banded grid —
+    # the structure both uniform schedules lose on. Parity-asserting: the
+    # strict win below and the strip-execution identity are the CI gate.
+    tau = 0.02
+    aa = _aliased_banded(N, 4)
+    bb = (0.05 * np.random.default_rng(2).standard_normal((N, N))).astype(
+        np.float32)
+    na_alias = ref.tile_norms_ref(jnp.asarray(aa), TILE)
+    nb_dense = ref.tile_norms_ref(jnp.asarray(bb), TILE)
+    for ndev in (4, 8):
+        va = schedule.v_matrix(na_alias, nb_dense, tau)
+        offs = schedule.equal_work_partition(va, ndev)
+        loads = schedule.partition_loads(va, offs)
+        total = float(np.asarray(jnp.sum(va, axis=1)).sum())
+        assert abs(loads.sum() - total) < 1e-6 * max(total, 1.0)
+        imb_c = float(schedule.imbalance(va, ndev, "contiguous"))
+        imb_s = float(schedule.imbalance(va, ndev, "cyclic"))
+        imb_e = schedule.partition_imbalance(va, offs)
+        assert imb_e < imb_c and imb_e < imb_s, (imb_e, imb_c, imb_s)
+        row(
+            f"loadbalance/aliased-row-devices={ndev}",
+            0.0,
+            f"imbalance_contiguous={imb_c:.3f};imbalance_cyclic={imb_s:.3f};"
+            f"imbalance_equal_work={imb_e:.3f};"
+            f"improvement_vs_best_uniform={min(imb_c, imb_s)/imb_e:.2f}x",
+        )
+    # strip execution ≡ flat spamm (small grid; ragged 3-device count)
+    n_par = 256
+    a_par = _aliased_banded(n_par, 4)
+    v_par = schedule.v_matrix(
+        ref.tile_norms_ref(jnp.asarray(a_par), TILE),
+        ref.tile_norms_ref(jnp.asarray(a_par), TILE), tau)
+    for ndev in (2, 3):
+        _strip_exec_parity(a_par, tau, schedule.equal_work_partition(v_par, ndev))
+    row("loadbalance/equal-work-parity", 0.0, "strip_exec=flat_spamm;ok=1")
+
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import header
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast lane: same sweep, asserts are the gate")
+    args = ap.parse_args()
     header()
-    run()
+    run(quick=args.smoke)

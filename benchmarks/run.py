@@ -14,10 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CPU-friendly trimmed sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias of --quick (the CI fast lane's spelling)")
     ap.add_argument("--only", default=None,
                     help="run a single module (table2|table3|table4|table5|"
                          "loadbalance|kernels|roofline)")
     args = ap.parse_args()
+    args.quick = args.quick or args.smoke
 
     from benchmarks import (frozen_prefill, kernel_blocks, kernels_micro,
                             loadbalance, plan_cache, pyramid_gating, roofline,

@@ -13,8 +13,22 @@ accepts NormPyramid operands + a `level`): each coarse V entry aggregates a
 2^level × 2^level block of C tiles and costs 8^level fewer gate products —
 cheap enough for the distributed paths to re-estimate per step and pick the
 schedule automatically (`auto_schedule`).
+
+Equal-work partitioning (`equal_work_partition`): instead of fixing the
+strip SHAPES and permuting rows (cyclic), cut variable-width CONTIGUOUS
+strips whose predicted work is equal — a prefix-sum split of the per-row
+work estimate, the same move SpMM row-partitioners make when they split by
+nonzero count rather than row count (Yang/Buluç/Owens; Merrill/Garland).
+Contiguous strips keep the cheap HLO of the paper's default (no in-step
+permutation collective) while absorbing banded/skewed/stride-aliased norm
+structure that defeats both uniform schedules. The partition is a plain
+row-offset table, so it can be FROZEN and re-cut between steps when the
+estimate drifts (`ReshardController`).
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,15 +63,30 @@ def v_matrix(norm_a, norm_b, tau, *, level: int = 0) -> jax.Array:
 
 
 def rows_for_device(d: int, num_devices: int, gm: int, schedule: str) -> np.ndarray:
-    """Tile-row indices device d owns. 'contiguous' = paper §3.4 default;
-    'cyclic' = §3.5.1 strided load balance. Non-divisible gm spreads the
-    remainder over the leading devices (matters only for coarse estimates —
-    the distributed paths themselves require divisibility)."""
+    """Tile-row indices device d owns under a UNIFORM-shape schedule.
+    'contiguous' = paper §3.4 default; 'cyclic' = §3.5.1 strided load
+    balance. Non-divisible gm spreads the remainder over the leading devices
+    (matters only for coarse estimates — the uniform distributed paths
+    themselves require divisibility). 'equal_work' strips have data-dependent
+    shapes and are described by an explicit offset table instead — see
+    `equal_work_partition` / `rows_for_partition`."""
     if schedule == "contiguous":
         return np.array_split(np.arange(gm), num_devices)[d]
     if schedule == "cyclic":
         return np.arange(d, gm, num_devices)
+    if schedule == "equal_work":
+        raise ValueError(
+            "equal_work strips are variable-width: build an offset table "
+            "with equal_work_partition(v, ...) and index it with "
+            "rows_for_partition(d, offsets)")
     raise ValueError(schedule)
+
+
+def rows_for_partition(d: int, offsets: np.ndarray) -> np.ndarray:
+    """Tile-row indices device d owns under an explicit variable-width
+    partition (`offsets` as returned by `equal_work_partition`)."""
+    offsets = np.asarray(offsets, np.int64)
+    return np.arange(offsets[d], offsets[d + 1])
 
 
 def device_permutation(num_devices: int, gm: int, schedule: str) -> np.ndarray:
@@ -68,40 +97,153 @@ def device_permutation(num_devices: int, gm: int, schedule: str) -> np.ndarray:
     )
 
 
-def device_loads(v: jax.Array, num_devices: int, schedule: str, *,
-                 level: int = 0, fine_rows: int = None) -> np.ndarray:
-    """Per-device work under a row-strip assignment, attributed at FINE
-    tile-row granularity.
+def _fine_work(v, *, level: int = 0, fine_rows: Optional[int] = None
+               ) -> np.ndarray:
+    """Per-FINE-tile-row work estimate from a (possibly coarse) V.
 
     V's rows may be coarse (each ceil-pooling 2^level fine tile-rows, the
-    norm-pyramid work estimate): a coarse row that straddles a fine shard
-    boundary must split its work across the devices that actually own its
-    fine rows — `rows_for_device`'s array_split over COARSE rows does not
-    match that ownership (its remainder spreading differs from how fine
-    contiguous shards map onto ceil-pooled coarse rows, and cyclic strides
-    walk fine rows, not coarse ones). Each coarse row's work is spread
-    uniformly over its member fine rows (clipped at the ragged edge), then
-    summed per device with the exact fine assignment.
-    """
+    norm-pyramid work estimate): each coarse row's work is spread uniformly
+    over its member fine rows (clipped at the ragged edge), so any fine
+    row-range — uniform shard, cyclic stride, or variable-width strip —
+    can sum exactly the work it owns, including coarse rows that STRADDLE
+    a strip boundary. Eager-only (host numpy)."""
     work_rows = np.asarray(jnp.sum(v, axis=1), np.float64)
     f = 1 << level
     gm = fine_rows if fine_rows is not None else work_rows.shape[0] * f
-    assert work_rows.shape[0] == -(-gm // f), (v.shape, level, gm)
+    assert work_rows.shape[0] == -(-gm // f), (np.shape(v), level, gm)
     # last coarse row may pool fewer than 2^level fine rows (ceil pooling)
     counts = np.clip(gm - np.arange(work_rows.shape[0]) * f, 0, f)
-    per_fine = np.repeat(work_rows / np.maximum(counts, 1), f)[:gm]
-    # ownership comes from rows_for_device — the SAME function the execution
-    # sharding (device_permutation) is built from, so estimate and execution
-    # cannot drift apart again
+    return np.repeat(work_rows / np.maximum(counts, 1), f)[:gm]
+
+
+def _uniform_offsets(n: int, parts: int) -> np.ndarray:
+    """Offset table of the uniform contiguous split (== np.array_split's
+    strip boundaries, i.e. rows_for_device's 'contiguous' shapes)."""
+    sizes = np.full(parts, n // parts, np.int64)
+    sizes[: n % parts] += 1
+    return np.concatenate(([0], np.cumsum(sizes)))
+
+
+def _equal_cuts(work: np.ndarray, parts: int) -> np.ndarray:
+    """Greedy prefix-sum cut of a 1-D work profile into `parts` contiguous
+    non-empty segments targeting total/parts each, then clamped so no
+    segment is empty. Returns the better of the cut and the uniform split
+    (by max/mean), so quantization at segment granularity can never make
+    the result WORSE than uniform-width strips."""
+    n = work.shape[0]
+    if n < parts:
+        raise ValueError(f"cannot cut {n} rows into {parts} non-empty strips")
+    uniform = _uniform_offsets(n, parts)
+    total = float(work.sum())
+    if not np.isfinite(total) or total <= 0:
+        return uniform  # degenerate (all-zero) estimate: uniform fallback
+    cum = np.cumsum(work, dtype=np.float64)
+    targets = total * np.arange(1, parts, dtype=np.float64) / parts
+    # first prefix ≥ target, then check if stopping one row earlier is closer
+    cuts = np.searchsorted(cum, targets, side="left") + 1
+    for i in range(parts - 1):
+        c = int(cuts[i])
+        if c > 1 and abs(cum[c - 2] - targets[i]) < abs(cum[c - 1] - targets[i]):
+            cuts[i] = c - 1
+    offsets = np.concatenate(([0], cuts, [n])).astype(np.int64)
+    for d in range(1, parts):                    # ≥ 1 row per strip, forward
+        offsets[d] = max(offsets[d], offsets[d - 1] + 1)
+    for d in range(parts - 1, 0, -1):            # … and backward
+        offsets[d] = min(offsets[d], offsets[d + 1] - 1)
+
+    def _imb(offs):
+        cs = np.concatenate(([0.0], cum))
+        loads = cs[offs[1:]] - cs[offs[:-1]]
+        return loads.max() / max(loads.mean(), 1e-9)
+
+    return offsets if _imb(offsets) <= _imb(uniform) else uniform
+
+
+def equal_work_partition(v, num_devices: int, *, level: int = 0,
+                         fine_rows: Optional[int] = None) -> np.ndarray:
+    """Variable-width equal-work row strips from a (possibly coarse) work
+    estimate V: offsets[d] .. offsets[d+1] are the FINE tile-rows device d
+    owns (offsets has num_devices + 1 entries, offsets[0] = 0, offsets[-1]
+    = gm). Strips are contiguous, cover [0, gm) exactly once, and every
+    strip is non-empty (requires gm ≥ num_devices). Boundaries live on the
+    fine TILE grid, so each strip pads to whole tiles by construction.
+
+    The cut is a prefix-sum split of the per-fine-row work (coarse V rows
+    are spread over their member fine rows first — see `_fine_work`), with
+    a uniform-split guard: an all-zero V, or a profile where row-granularity
+    quantization would beat the greedy cut, falls back to the uniform strips
+    (never empty ones, never worse than 'contiguous'). Eager-only.
+    """
+    per_fine = _fine_work(v, level=level, fine_rows=fine_rows)
+    return _equal_cuts(per_fine, num_devices)
+
+
+def partition_loads(v, offsets, *, level: int = 0,
+                    fine_rows: Optional[int] = None) -> np.ndarray:
+    """Per-device predicted work under an explicit variable-width partition
+    (fine-granularity attribution: coarse rows straddling a strip boundary
+    split their work across the strips that own their fine rows).
+
+    The table must cover THIS grid exactly — a stale one cut for another
+    grid raises instead of silently reading as phantom zero-load strips
+    (the same guard the execution path's `_strip_tables` applies)."""
+    per_fine = _fine_work(v, level=level, fine_rows=fine_rows)
+    gm = per_fine.shape[0]
+    offs = np.asarray(offsets, np.int64)
+    if offs[0] != 0 or offs[-1] != gm or np.any(np.diff(offs) < 0):
+        raise ValueError(
+            f"offset table {offs} does not cover row grid {gm}: re-cut the "
+            f"partition for this grid (equal_work_partition)")
+    cs = np.concatenate(([0.0], np.cumsum(per_fine, dtype=np.float64)))
+    return cs[offs[1:]] - cs[offs[:-1]]
+
+
+def partition_imbalance(v, offsets, *, level: int = 0,
+                        fine_rows: Optional[int] = None) -> float:
+    """max-device-work / mean-device-work under an explicit partition — the
+    drift signal the re-sharding controller compares against a fresh cut."""
+    loads = partition_loads(v, offsets, level=level, fine_rows=fine_rows)
+    return float(loads.max() / max(loads.mean(), 1e-9))
+
+
+def device_loads(v: jax.Array, num_devices: int, schedule: str, *,
+                 level: int = 0, fine_rows: int = None,
+                 offsets=None) -> np.ndarray:
+    """Per-device work under a row-strip assignment, attributed at FINE
+    tile-row granularity (see `_fine_work` for the coarse-row spreading).
+
+    schedule = 'contiguous' / 'cyclic' take rows_for_device's uniform
+    shapes; 'equal_work' (or an explicit `offsets` table from
+    `equal_work_partition`) sums the variable-width strips — including
+    coarse rows that straddle a strip boundary, which split their work
+    across their actual owners. Ownership comes from the SAME functions the
+    execution sharding is built from (`rows_for_device` /
+    `equal_work_partition`), so estimate and execution cannot drift apart.
+    """
+    if schedule == "equal_work" or offsets is not None:
+        if offsets is None:
+            offsets = equal_work_partition(v, num_devices, level=level,
+                                           fine_rows=fine_rows)
+        offsets = np.asarray(offsets, np.int64)
+        assert offsets.shape == (num_devices + 1,), (offsets.shape, num_devices)
+        return partition_loads(v, offsets, level=level, fine_rows=fine_rows)
+    per_fine = _fine_work(v, level=level, fine_rows=fine_rows)
+    gm = per_fine.shape[0]
     return np.array([
         per_fine[rows_for_device(d, num_devices, gm, schedule)].sum()
         for d in range(num_devices)
     ])
 
 
-def imbalance(v: jax.Array, num_devices: int, schedule: str) -> jax.Array:
+def imbalance(v: jax.Array, num_devices: int, schedule: str,
+              offsets=None) -> jax.Array:
     """max-device-work / mean-device-work under a row-strip assignment of V
-    (the §3.4 row partition; banded matrices are naturally balanced here)."""
+    (the §3.4 row partition; banded matrices are naturally balanced here).
+    'equal_work' / explicit `offsets` evaluate the variable-width strips
+    (eager-only, like the partition itself)."""
+    if schedule == "equal_work" or offsets is not None:
+        loads = device_loads(v, num_devices, schedule, offsets=offsets)
+        return jnp.asarray(loads.max() / max(loads.mean(), 1e-9), jnp.float32)
     gm = v.shape[0]
     work_rows = jnp.sum(v, axis=1)  # work per tile-row
     loads = []
@@ -115,8 +257,17 @@ def imbalance(v: jax.Array, num_devices: int, schedule: str) -> jax.Array:
 def tile_imbalance(v: jax.Array, num_workers: int, schedule: str) -> jax.Array:
     """Paper Fig. 4 setting: workers own individual C *tiles* (row-major
     flattened). 'contiguous' gives diagonal-adjacent chunks to one worker
-    (v is diagonal-heavy ⇒ imbalance); 'cyclic' is the §3.5.1 stride-s fix."""
+    (v is diagonal-heavy ⇒ imbalance); 'cyclic' is the §3.5.1 stride-s fix;
+    'equal_work' cuts variable-length contiguous tile runs by prefix sum
+    (eager-only) — no truncation to a worker multiple, because the strips
+    need not share a shape."""
     flat = v.reshape(-1)
+    if schedule == "equal_work":
+        work = np.asarray(flat, np.float64)
+        offs = _equal_cuts(work, num_workers)
+        cs = np.concatenate(([0.0], np.cumsum(work)))
+        loads = jnp.asarray(cs[offs[1:]] - cs[offs[:-1]])
+        return jnp.max(loads) / jnp.maximum(jnp.mean(loads), 1e-9)
     n = flat.shape[0] - (flat.shape[0] % num_workers)
     flat = flat[:n]
     if schedule == "contiguous":
@@ -130,13 +281,24 @@ def tile_imbalance(v: jax.Array, num_workers: int, schedule: str) -> jax.Array:
 
 def auto_schedule(v: jax.Array, num_devices: int, *,
                   threshold: float = 1.25, level: int = 0,
-                  fine_rows: int = None) -> str:
+                  fine_rows: int = None,
+                  equal_work_margin: float = 1.1,
+                  allow_equal_work: bool = True) -> str:
     """Pick the row-strip schedule from a (possibly coarse) work estimate V:
-    'cyclic' when the contiguous assignment is measurably imbalanced AND
-    cyclic actually improves it, else 'contiguous' (the cheapest HLO — no
-    in-step permutation). The threshold is deliberately conservative: the
-    in-step cyclic permutation costs a collective, so mild imbalance (e.g.
-    banded matrices' lighter edge rows) should not trigger it.
+
+      1. 'cyclic' when the contiguous assignment is measurably imbalanced
+         (> `threshold`) AND cyclic actually improves it, else 'contiguous'
+         (the cheapest HLO — no in-step permutation);
+      2. 'equal_work' when the pick from step 1 is STILL imbalanced beyond
+         `threshold` and the equal-work cut beats it by `equal_work_margin`
+         — variable-width contiguous strips fix the profiles both uniform
+         schedules lose on (stride-aliased hot rows defeat cyclic, skewed
+         mass defeats contiguous) at zero permutation cost.
+
+    The thresholds are deliberately conservative: the in-step cyclic
+    permutation costs a collective and an equal-work re-cut invalidates a
+    frozen partition, so mild imbalance (e.g. banded matrices' lighter edge
+    rows) should trigger neither.
 
     level/fine_rows: set when V is a coarse pyramid-level estimate of a
     product whose FINE row grid is what actually shards — the loads are then
@@ -148,9 +310,150 @@ def auto_schedule(v: jax.Array, num_devices: int, *,
     if gm < num_devices:
         return "contiguous"  # fewer rows than devices: nothing to fix
     imbs = {}
-    for sched in ("contiguous", "cyclic"):
+    scheds = ("contiguous", "cyclic") + (
+        ("equal_work",) if allow_equal_work else ())
+    for sched in scheds:
         loads = device_loads(v, num_devices, sched, level=level,
                              fine_rows=gm)
         imbs[sched] = float(loads.max() / max(loads.mean(), 1e-9))
-    return ("cyclic" if imbs["contiguous"] > threshold
+    pick = ("cyclic" if imbs["contiguous"] > threshold
             and imbs["cyclic"] < imbs["contiguous"] else "contiguous")
+    if (allow_equal_work and imbs[pick] > threshold
+            and imbs[pick] >= equal_work_margin * imbs["equal_work"]):
+        pick = "equal_work"
+    return pick
+
+
+# ---------------------------------------------------------------------------
+# drift-triggered re-sharding (control plane)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReshardConfig:
+    """Knobs of the drift-triggered re-sharding loop.
+
+    num_devices: strips to cut (a pod passes its data-axis size; 0 lets the
+      OWNER — engine/train loop — default it from its mesh before building
+      the controller, which itself requires a positive count).
+    every: probe cadence in engine/train steps (0 disables the controller).
+    drift_threshold: re-cut when the LIVE partition's predicted imbalance
+      exceeds the fresh equal-work cut's by this factor (1.0 = re-cut
+      whenever a different cut is better at all; higher = stickier
+      partitions, fewer re-shards).
+    level: norm-pyramid level of the probe estimate (coarse = cheaper).
+    probe_window: serving probes estimate from at most this many of each
+      request's most recent tokens, keeping per-probe cost constant as
+      generation grows (0 = unbounded).
+    """
+    num_devices: int = 0
+    every: int = 16
+    drift_threshold: float = 1.2
+    level: int = 0
+    probe_window: int = 2048
+
+
+class ReshardController:
+    """Owns the live equal-work partition and re-cuts it when the work
+    estimate drifts (the between-steps half of the load-balance story:
+    `equal_work_partition` cuts strips from a snapshot; activations evolve,
+    so a frozen cut decays — the controller re-probes every `cfg.every`
+    steps and replaces the partition only when the drift exceeds
+    `cfg.drift_threshold`, keeping re-shards rare enough to amortize).
+
+    Pure control plane: probing/re-cutting never touches the computed
+    values — consumers hand `offsets` to `distributed.spamm_rowpart`/
+    `spamm_2d`, whose outputs are bit-identical under ANY partition.
+    """
+
+    def __init__(self, cfg: ReshardConfig):
+        if cfg.num_devices <= 0:
+            raise ValueError(
+                "ReshardController needs a positive num_devices — resolve "
+                "the 0-means-mesh-default before constructing it (the "
+                "engine and train loop do this from ctx.batch_axes)")
+        self.cfg = cfg
+        self.offsets: Optional[np.ndarray] = None  # live partition
+        self.resharded = 0        # partition replacements (drift events)
+        self.probes = 0           # estimate recomputations
+        self.history: list = []   # one dict per probe (telemetry series)
+
+    @property
+    def live_imbalance(self) -> Optional[float]:
+        """Predicted imbalance of the live partition at the last probe."""
+        return self.history[-1]["live_imbalance"] if self.history else None
+
+    def due(self, step: int) -> bool:
+        return self.cfg.every > 0 and step % self.cfg.every == 0
+
+    def probe(self, v, step: int, *, level: Optional[int] = None,
+              fine_rows: Optional[int] = None) -> np.ndarray:
+        """Feed a fresh work estimate; returns the (possibly re-cut) live
+        offsets. The first probe cuts the initial partition (not counted as
+        a re-shard). Later probes compare the live partition's predicted
+        imbalance under the FRESH estimate against a fresh cut's and replace
+        the partition only beyond the drift threshold.
+
+        A probe whose row grid differs from the live partition's (serving
+        waves grow/shrink the token count) resets like a first probe:
+        partitions for different grids are incomparable — evaluating stale
+        offsets against the new grid would clip them into phantom zero-load
+        strips and fire spurious drift events."""
+        lv = self.cfg.level if level is None else level
+        ndev = self.cfg.num_devices
+        self.probes += 1
+        fresh = equal_work_partition(v, ndev, level=lv, fine_rows=fine_rows)
+        fresh_imb = partition_imbalance(v, fresh, level=lv,
+                                        fine_rows=fine_rows)
+        event = False
+        stale = (self.offsets is None or self.offsets.shape != fresh.shape
+                 or self.offsets[-1] != fresh[-1])
+        if stale:
+            self.offsets = fresh
+            live_imb = fresh_imb
+        else:
+            live_imb = partition_imbalance(v, self.offsets, level=lv,
+                                           fine_rows=fine_rows)
+            event = (live_imb > self.cfg.drift_threshold * fresh_imb
+                     and not np.array_equal(fresh, self.offsets))
+            if event:
+                self.offsets = fresh
+                self.resharded += 1
+        self.history.append({
+            "step": step,
+            "grid": int(fresh[-1]),
+            "live_imbalance": live_imb,
+            "fresh_imbalance": fresh_imb,
+            "resharded": event,
+        })
+        return self.offsets
+
+
+def resolve_reshard_devices(cfg: ReshardConfig, mesh,
+                            batch_axes) -> ReshardConfig:
+    """Resolve ReshardConfig's num_devices=0 convention to the mesh's
+    batch-axis extent (the strips a pod's row partition would shard over) —
+    the one place the engine and train loop share for it."""
+    if cfg.num_devices > 0:
+        return cfg
+    ndev = 1
+    for ax in batch_axes:
+        ndev *= mesh.shape[ax]
+    return dataclasses.replace(cfg, num_devices=ndev)
+
+
+def probe_v_estimate(x, weight_norms, tau, *, tile: int = 64,
+                     backend: str = "auto", level: int = 0):
+    """Work-estimate V for activation rows `x` against a CACHED weight-side
+    normmap/pyramid — the cheap re-sharding probe: only the activation-side
+    get-norm (plus `level` poolings) is fresh; the weight side piggybacks on
+    `WeightPlanCache.weight_side`. Returns (v, fine_rows) where fine_rows is
+    x's tile-row count (the grid the partition shards)."""
+    from repro.core import plan as _plan     # circular-safe
+    from repro.kernels import ops as kops
+
+    bk = kops.get_backend(backend)
+    xp = _plan.pad_to_tile(jnp.asarray(x, jnp.float32), tile)
+    nx = bk.norms(xp, tile)
+    if level > 0:
+        nx = _plan.NormPyramid.from_normmap(nx, level, tile=tile)
+    return v_matrix(nx, weight_norms, tau, level=level), xp.shape[0] // tile

@@ -47,6 +47,20 @@ def main():
                     help="legacy in-trace gating (weight normmaps re-derived "
                          "inside the compiled prefill) instead of frozen "
                          "plans as jit inputs")
+    ap.add_argument("--reshard-every", type=int, default=0,
+                    help="drift-triggered re-sharding probe cadence in "
+                         "engine steps (prefill + decode); 0 = off; needs "
+                         "--spamm-tau. The engine maintains the equal-work "
+                         "row partition a pod feeds to "
+                         "distributed.spamm_rowpart(offsets=)")
+    ap.add_argument("--reshard-devices", type=int, default=0,
+                    help="strips to cut (0 = the mesh's data-axis extent)")
+    ap.add_argument("--reshard-threshold", type=float, default=1.2,
+                    help="re-cut when the live partition's predicted "
+                         "imbalance exceeds the fresh cut's by this factor")
+    ap.add_argument("--reshard-level", type=int, default=0,
+                    help="norm-pyramid level of the re-sharding probe "
+                         "estimate (coarser = cheaper)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -66,9 +80,20 @@ def main():
                                 backend=args.spamm_backend,
                                 block_n=args.spamm_block_n,
                                 levels=args.spamm_levels)
+    reshard_cfg = None
+    if args.reshard_every > 0:
+        if spamm_cfg is None:
+            print("warning: --reshard-every needs --spamm-tau (the probe "
+                  "estimates gated work); re-sharding stays OFF")
+        from repro.core.schedule import ReshardConfig
+
+        reshard_cfg = ReshardConfig(
+            num_devices=args.reshard_devices, every=args.reshard_every,
+            drift_threshold=args.reshard_threshold, level=args.reshard_level)
     eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len,
                  spamm_cfg=spamm_cfg, plan_store=args.plan_store,
-                 freeze_plans=not args.no_freeze_plans)
+                 freeze_plans=not args.no_freeze_plans,
+                 reshard_cfg=reshard_cfg)
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -99,6 +124,13 @@ def main():
         if "plan_store_hits" in sp:
             print(f"  plan_store: {sp['plan_store_hits']}h/"
                   f"{sp['plan_store_misses']}m")
+        if "resharded" in sp:
+            imb = sp["partition_imbalance"]
+            imb_s = f"{imb:.3f}" if imb is not None else "n/a"
+            print(f"  reshard: events={sp['resharded']} "
+                  f"probes={sp['reshard_probes']} "
+                  f"partition_imbalance={imb_s} "
+                  f"offsets={eng.partition_offsets}")
 
 
 if __name__ == "__main__":

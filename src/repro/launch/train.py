@@ -42,6 +42,14 @@ def main():
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "int8_ef"])
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--reshard-every", type=int, default=0,
+                    help="drift-triggered re-sharding probe cadence in "
+                         "train steps; 0 = off (needs --spamm)")
+    ap.add_argument("--reshard-devices", type=int, default=0,
+                    help="strips to cut (0 = the mesh's data-axis extent)")
+    ap.add_argument("--reshard-threshold", type=float, default=1.2,
+                    help="re-cut when the live partition's predicted "
+                         "imbalance exceeds the fresh cut's by this factor")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -68,9 +76,17 @@ def main():
                     backend="auto")
         if args.spamm else None
     )
+    reshard_cfg = None
+    if args.reshard_every > 0:
+        from repro.core.schedule import ReshardConfig
+
+        reshard_cfg = ReshardConfig(
+            num_devices=args.reshard_devices, every=args.reshard_every,
+            drift_threshold=args.reshard_threshold)
     res = train(
         cfg, pcfg, tcfg, ctx,
         global_batch=args.batch, seq_len=args.seq, spamm_cfg=spamm_cfg,
+        reshard_cfg=reshard_cfg,
         resume=(args.resume == "auto"),
     )
     print(
@@ -83,6 +99,12 @@ def main():
         if fracs:
             print(f"spamm: mean_valid_fraction={sum(fracs)/len(fracs):.3f} "
                   f"gated_gemms/step={res.spamm_stats[-1]['gated_gemms']}")
+        last = res.spamm_stats[-1]
+        if "resharded" in last:
+            imb = last["imbalance"]
+            imb_s = f"{imb:.3f}" if imb is not None else "n/a"
+            print(f"reshard: events={last['resharded']} "
+                  f"partition_imbalance={imb_s}")
 
 
 if __name__ == "__main__":

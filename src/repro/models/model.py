@@ -349,3 +349,32 @@ def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
         return logits, cache
 
     return step
+
+
+def reshard_probe(controller, spamm_ctx, params, step: int, *,
+                  tokens=None, x=None) -> None:
+    """Shared body of the drift-triggered re-sharding probe (serving engine
+    and train loop both call this — one implementation, one drift behavior).
+
+    Activation rows come from `x` directly (frontend archs feed embeds) or
+    from embedding `tokens` through the model's table (ids clamped into the
+    vocab). Their norms are computed FRESH; the weight side piggybacks on
+    the cached `WeightPlanCache.weight_side` norms of the unembed kernel —
+    present for every arch and shaped like every gated GEMM's weight side —
+    so a probe costs one activation get-norm, nothing else. Feeds the
+    controller only when the row grid has at least one row per device."""
+    scfg = spamm_ctx.cfg
+    lv = controller.cfg.level
+    if x is None:
+        emb = params["embed"]["embedding"]
+        ids = jnp.asarray(np.asarray(tokens, np.int64) % emb.shape[0])
+        x = jnp.take(jnp.asarray(emb), ids, axis=0)
+    from repro.core import schedule as _schedule  # circular-safe
+
+    _, nw = spamm_ctx.cache.weight_side(
+        params["unembed"]["kernel"], tile=scfg.tile, backend=scfg.backend,
+        levels=lv)
+    v, fine_rows = _schedule.probe_v_estimate(
+        x, nw, scfg.tau, tile=scfg.tile, backend=scfg.backend, level=lv)
+    if fine_rows >= controller.cfg.num_devices:
+        controller.probe(v, step, level=lv, fine_rows=fine_rows)

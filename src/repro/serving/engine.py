@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import module as spmod
+from repro.core import schedule as _schedule
 from repro.core.plan import _bucket
 from repro.models import model as M
 from repro.models.transformer import NetCtx
@@ -55,11 +56,28 @@ class Engine:
 
     `freeze_plans=False` opts back into the legacy in-trace gating for A/B
     comparisons (benchmarks/frozen_prefill.py measures the gap).
+
+    Drift-triggered re-sharding (`reshard_cfg`, a `schedule.ReshardConfig`):
+    the engine owns a `schedule.ReshardController` holding the equal-work
+    row partition a pod deployment would feed to
+    `distributed.spamm_rowpart(offsets=...)`. Every `reshard_cfg.every`
+    engine steps (prefill counts one, each decode step one, cumulative
+    across waves) it re-probes the coarse V estimate — activation-side
+    norms of the live token embeddings, weight side piggybacking on the
+    cached `WeightPlanCache.weight_side` pyramid of the probe weight (the
+    unembed kernel: present for every arch, shaped like every gated GEMM's
+    weight side) — and re-cuts the strips only when the live partition's
+    predicted imbalance drifts beyond the fresh cut's by the configured
+    threshold. Pure control plane: outputs are bit-identical with
+    re-sharding on, off, or at any cadence; `Request.out["spamm"]` reports
+    the wave's `resharded` event count, probe count, and the live
+    partition's predicted imbalance.
     """
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
                  params, *, max_len: int = 512, spamm_cfg=None,
-                 plan_store=None, freeze_plans: Optional[bool] = None):
+                 plan_store=None, freeze_plans: Optional[bool] = None,
+                 reshard_cfg: Optional[_schedule.ReshardConfig] = None):
         self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
         self.params = params
         self.max_len = max_len
@@ -76,11 +94,48 @@ class Engine:
             self.spamm_ctx.cache.store = plan_store
         self._fw_tree = None     # path-tree of FrozenWeight (lists per layer)
         self._fp_cache: dict = {}  # row-tile grid gm → FrozenPlan pytree
+        self._resharder = None
+        self._steps = 0          # engine steps (prefill + decode), all waves
+        if reshard_cfg is not None and enabled and reshard_cfg.every > 0:
+            reshard_cfg = _schedule.resolve_reshard_devices(
+                reshard_cfg, ctx.mesh, ctx.batch_axes)
+            self._resharder = _schedule.ReshardController(reshard_cfg)
         self._prefill = jax.jit(
             M.make_prefill_step(cfg, pcfg, ctx, spamm_cfg=self.spamm_ctx))
         self._decode = jax.jit(M.make_decode_step(
             cfg, pcfg, ctx,
             spamm_cfg=self.spamm_ctx if self._freeze else None))
+
+    # -- drift-triggered re-sharding (control plane) -------------------------
+    @property
+    def partition_offsets(self):
+        """Live equal-work row-offset table (None until the first probe) —
+        what a pod deployment passes to `distributed.spamm_rowpart`."""
+        return self._resharder.offsets if self._resharder else None
+
+    def _maybe_reshard(self, requests, outs):
+        """Advance the engine step counter; at the configured cadence,
+        re-probe the coarse work estimate from the live tokens (prompts +
+        generated so far) and let the controller re-cut on drift
+        (`model.reshard_probe` is the shared probe body). Never touches the
+        computed values."""
+        step, self._steps = self._steps, self._steps + 1
+        rs = self._resharder
+        if rs is None or not rs.due(step):
+            return
+        win = rs.cfg.probe_window
+        # per-request most-recent window keeps probe cost constant as
+        # generation grows (the estimate tracks the live distribution; the
+        # distant past doesn't shard the next step's rows anyway)
+
+        def recent(r, o):
+            t = np.concatenate([np.asarray(r.prompt, np.int64),
+                                np.asarray(o, np.int64)])
+            return t[-win:] if win else t
+
+        toks = np.concatenate([recent(r, o)
+                               for r, o in zip(requests, outs)])
+        M.reshard_probe(rs, self.spamm_ctx, self.params, step, tokens=toks)
 
     # -- frozen-plan assembly ------------------------------------------------
     def _frozen_for(self, rows: int) -> dict:
@@ -138,11 +193,14 @@ class Engine:
         return jax.tree_util.tree_map_with_path(grow, cache)
 
     def _spamm_stats(self, taps, hits0: int, misses0: int,
-                     store0: Optional[tuple]):
+                     store0: Optional[tuple], reshard0: Optional[tuple]):
         """Per-wave gating stats dict from the drained (phase, fraction)
         taps and the plan-cache/plan-store counter DELTAS across this wave
         (every counter in the dict is per-wave: after first population a
-        warm wave reports 0/0 store traffic, never stale lifetime totals)."""
+        warm wave reports 0/0 store traffic, never stale lifetime totals).
+        With re-sharding on, `resharded`/`reshard_probes` are the wave's
+        event deltas and `partition_imbalance` the live partition's
+        predicted imbalance at the last probe."""
         cache = self.spamm_ctx.cache
         pre = [v for ph, v in taps if ph != "decode"]
         dec = [v for ph, v in taps if ph == "decode"]
@@ -157,6 +215,11 @@ class Engine:
         if store0 is not None:
             stats["plan_store_hits"] = self.plan_store.hits - store0[0]
             stats["plan_store_misses"] = self.plan_store.misses - store0[1]
+        if reshard0 is not None:
+            rs = self._resharder
+            stats["resharded"] = rs.resharded - reshard0[0]
+            stats["reshard_probes"] = rs.probes - reshard0[1]
+            stats["partition_imbalance"] = rs.live_imbalance
         return stats
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
@@ -176,11 +239,14 @@ class Engine:
         collect = self.spamm_ctx is not None and self.spamm_ctx.enable
         spamm_meta = None
         store0 = None
+        reshard0 = None
         if collect:
             hits0 = self.spamm_ctx.cache.hits
             misses0 = self.spamm_ctx.cache.misses
             if self.plan_store is not None:
                 store0 = (self.plan_store.hits, self.plan_store.misses)
+            if self._resharder is not None:
+                reshard0 = (self._resharder.resharded, self._resharder.probes)
         # frozen-plan assembly counts into this wave's store deltas (it is
         # where first population / warm-start loading happens)
         frozen_pre = self._frozen_for(b * plen)
@@ -190,10 +256,11 @@ class Engine:
         try:
             if collect:
                 self.spamm_ctx.set_phase("prefill")
+            outs = [[] for _ in range(b)]
+            self._maybe_reshard(requests, outs)
             cache, logits = self._prefill(
                 self.params, {"tokens": jnp.asarray(toks)}, frozen_pre)
             cache = self._pad_cache(cache, plen)
-            outs = [[] for _ in range(b)]
             done = np.zeros(b, bool)
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
             pos = plen
@@ -209,6 +276,7 @@ class Engine:
                             done[i] = True
                 if done.all() or pos >= self.max_len - 1:
                     break
+                self._maybe_reshard(requests, outs)
                 logits, cache = self._decode(
                     self.params, cur[:, None], cache, jnp.int32(pos),
                     frozen_dec
@@ -225,7 +293,8 @@ class Engine:
                 taps = self.spamm_ctx.end_stats()
                 self.spamm_ctx.set_phase("prefill")
         if collect:
-            spamm_meta = self._spamm_stats(taps, hits0, misses0, store0)
+            spamm_meta = self._spamm_stats(taps, hits0, misses0, store0,
+                                           reshard0)
         results = [np.asarray(o, np.int32) for o in outs]
         for r, toks_out in zip(requests, results):
             r.out = {"tokens": toks_out, "spamm": spamm_meta}

@@ -22,6 +22,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
 from repro.core import module as spmod
+from repro.core import schedule as _schedule
 from repro.data.pipeline import SyntheticLM
 from repro.distributed.compression import Int8EF
 from repro.models import model as M
@@ -37,7 +38,10 @@ class TrainResult:
     final_step: int
     # per-step SpAMM gating stats, one entry per executed step (the same
     # stats the serving engine attaches to Request.out["spamm"]): list of
-    # {"step", "valid_fraction", "gated_gemms"} dicts, empty when SpAMM off
+    # {"step", "valid_fraction", "gated_gemms"} dicts, empty when SpAMM off.
+    # With re-sharding on, each entry also carries the live equal-work
+    # partition's predicted "imbalance" (the drift series — None until the
+    # first probe) and the cumulative "resharded" event count
     spamm_stats: list = dataclasses.field(default_factory=list)
 
 
@@ -50,6 +54,7 @@ def train(
     global_batch: int = 8,
     seq_len: int = 128,
     spamm_cfg=None,
+    reshard_cfg: Optional[_schedule.ReshardConfig] = None,
     fail_at_step: Optional[int] = None,
     resume: bool = False,
     straggler_factor: float = 3.0,
@@ -91,6 +96,30 @@ def train(
     collect_spamm = spamm_ctx is not None and spamm_ctx.enable
     step_fn = jax.jit(M.make_train_step(cfg, pcfg, ctx, opt, spamm_cfg=spamm_ctx))
 
+    # drift-triggered re-sharding (control plane, same contract as the
+    # serving engine): every reshard_cfg.every steps re-probe the coarse V
+    # estimate — fresh activation-side norms of the step's token embeddings
+    # against the CACHED weight-side norms of the probe weight — and re-cut
+    # the equal-work partition when the live cut's predicted imbalance
+    # drifts past the fresh cut's. Never touches the computed values.
+    resharder = None
+    if reshard_cfg is not None and collect_spamm and reshard_cfg.every > 0:
+        resharder = _schedule.ReshardController(
+            _schedule.resolve_reshard_devices(reshard_cfg, ctx.mesh,
+                                              ctx.batch_axes))
+
+    def probe_reshard(step, batch):
+        # `model.reshard_probe` is the shared probe body (same drift
+        # behavior as the serving engine); frontend archs feed embedding
+        # rows directly instead of tokens
+        if "tokens" in batch:
+            M.reshard_probe(resharder, spamm_ctx, params, step,
+                            tokens=np.asarray(batch["tokens"]).reshape(-1))
+        else:
+            M.reshard_probe(resharder, spamm_ctx, params, step,
+                            x=jnp.asarray(batch["embeds"]).reshape(
+                                -1, cfg.d_model))
+
     losses, durations, spamm_stats = [], [], []
     stragglers = 0
     restarts = 1 if resume and start_step else 0
@@ -104,6 +133,8 @@ def train(
             params, opt_state, batch, jnp.int32(step)
         )
         loss = float(metrics["loss"])
+        if resharder is not None and resharder.due(step):
+            probe_reshard(step, batch)
         sp = None
         if collect_spamm and "spamm_valid_fraction" in metrics:
             n_gemms = int(metrics["spamm_gated_gemms"])
@@ -111,6 +142,9 @@ def train(
                   "valid_fraction": (float(metrics["spamm_valid_fraction"])
                                      if n_gemms else None),
                   "gated_gemms": n_gemms}
+            if resharder is not None:
+                sp["imbalance"] = resharder.live_imbalance
+                sp["resharded"] = resharder.resharded
             spamm_stats.append(sp)
         dt = time.time() - t0
         durations.append(dt)

@@ -1,0 +1,482 @@
+"""Equal-work pyramid re-sharding: variable-width strip cutting
+(`schedule.equal_work_partition`), the variable-partition diagnostics, the
+distributed execution parity against the single-device oracle, and the
+drift-triggered re-sharding control plane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.core import schedule as S
+
+# ---------------------------------------------------------------------------
+# partition properties
+# ---------------------------------------------------------------------------
+
+
+def _profiles(gm, rng):
+    """Skewed / banded / uniform per-row work profiles (the three norm
+    structures the partition must absorb)."""
+    band = np.clip(8 - np.abs(np.arange(gm) - gm / 2) / 2, 1, None)
+    skew = np.exp(-np.arange(gm) / max(gm / 3, 1)) * 50 + 1
+    unif = np.full(gm, 5.0)
+    noisy = rng.integers(0, 40, gm).astype(float)
+    return {"banded": band, "skewed": skew, "uniform": unif, "random": noisy}
+
+
+def _v_of(profile):
+    return jnp.asarray(np.outer(profile, np.ones(4)).astype(np.float32))
+
+
+def test_partition_covers_once_and_nonempty():
+    rng = np.random.default_rng(0)
+    for gm in (4, 7, 9, 16, 33):
+        for name, prof in _profiles(gm, rng).items():
+            v = _v_of(prof)
+            for ndev in (1, 2, 3, 4):
+                offs = S.equal_work_partition(v, ndev)
+                assert offs.shape == (ndev + 1,), (name, gm, ndev)
+                assert offs[0] == 0 and offs[-1] == gm
+                assert np.all(np.diff(offs) >= 1), (name, gm, ndev, offs)
+                # strips cover [0, gm) exactly once
+                rows = np.concatenate(
+                    [S.rows_for_partition(d, offs) for d in range(ndev)])
+                np.testing.assert_array_equal(rows, np.arange(gm))
+
+
+def test_all_zero_v_falls_back_to_uniform_strips():
+    v = jnp.zeros((9, 5), jnp.int32)
+    for ndev in (1, 2, 3, 4):
+        offs = S.equal_work_partition(v, ndev)
+        assert np.all(np.diff(offs) >= 1), offs  # never empty strips
+        # ... and the fallback is exactly the contiguous uniform split
+        want = np.concatenate([[0], np.cumsum(
+            [len(S.rows_for_device(d, ndev, 9, "contiguous"))
+             for d in range(ndev)])])
+        np.testing.assert_array_equal(offs, want)
+
+
+def test_partition_never_worse_than_contiguous():
+    """Seeded sweep of the property-test invariant (the hypothesis variant
+    lives in test_spamm_properties.py; this runs without the optional dep):
+    predicted imbalance of the equal-work cut ≤ the contiguous schedule's,
+    on any random V — the uniform-split guard makes this structural."""
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        gm = int(rng.integers(2, 40))
+        ndev = int(rng.integers(1, min(gm, 8) + 1))
+        v = jnp.asarray(
+            rng.integers(0, 50, (gm, int(rng.integers(1, 9)))).astype(
+                np.float32))
+        offs = S.equal_work_partition(v, ndev)
+        assert offs[0] == 0 and offs[-1] == gm and np.all(np.diff(offs) >= 1)
+        imb_eq = S.partition_imbalance(v, offs)
+        lc = S.device_loads(v, ndev, "contiguous")
+        imb_c = lc.max() / max(lc.mean(), 1e-9)
+        assert imb_eq <= imb_c + 1e-9, (gm, ndev, offs, imb_eq, imb_c)
+
+
+def test_too_few_rows_raises():
+    with pytest.raises(ValueError):
+        S.equal_work_partition(jnp.ones((2, 2)), 3)
+    with pytest.raises(ValueError):
+        S.rows_for_device(0, 2, 8, "equal_work")  # needs an offset table
+
+
+# ---------------------------------------------------------------------------
+# variable-width diagnostics: straddling coarse rows (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_device_loads_offsets_straddle_coarse_rows():
+    """device_loads with an explicit variable partition must split a coarse
+    row's work across the strips that own its fine rows — the uniform-shape
+    assumption (rows_for_device) would misattribute it wholesale."""
+    # gm=18 fine rows, level=2 (4 fine rows per coarse row, ceil → 5 coarse
+    # rows); all work in coarse row 2 = fine rows 8..11, spread 5 each.
+    v = np.zeros((5, 5), np.int64)
+    v[2, :] = 4
+    v = jnp.asarray(v)
+    # boundary at 9 cuts the coarse row 1:3
+    loads = S.device_loads(v, 2, "equal_work", level=2, fine_rows=18,
+                           offsets=np.array([0, 9, 18]))
+    np.testing.assert_allclose(loads, [5.0, 15.0])
+    # boundary at 10 cuts it 2:2
+    loads = S.device_loads(v, 2, "equal_work", level=2, fine_rows=18,
+                           offsets=np.array([0, 10, 18]))
+    np.testing.assert_allclose(loads, [10.0, 10.0])
+    # three strips, boundaries 9 and 11: splits 1:2:1
+    loads = S.device_loads(v, 3, "equal_work", level=2, fine_rows=18,
+                           offsets=np.array([0, 9, 11, 18]))
+    np.testing.assert_allclose(loads, [5.0, 10.0, 5.0])
+    # the cut itself lands inside the hot coarse row and balances it
+    offs = S.equal_work_partition(v, 2, level=2, fine_rows=18)
+    np.testing.assert_allclose(
+        S.partition_loads(v, offs, level=2, fine_rows=18), [10.0, 10.0])
+
+
+def test_partition_imbalance_matches_device_loads():
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.integers(0, 9, (16, 6)).astype(np.int32))
+    offs = S.equal_work_partition(v, 4)
+    loads = S.device_loads(v, 4, "equal_work", offsets=offs)
+    want = loads.max() / max(loads.mean(), 1e-9)
+    assert S.partition_imbalance(v, offs) == pytest.approx(want)
+    # schedule-name route and explicit-offsets route agree
+    np.testing.assert_allclose(
+        S.device_loads(v, 4, "equal_work"), loads)
+    # imbalance() speaks variable partitions too
+    assert float(S.imbalance(v, 4, "equal_work")) == pytest.approx(want)
+
+
+def test_tile_imbalance_equal_work_variable_runs():
+    """tile_imbalance grows an 'equal_work' mode: variable-length contiguous
+    tile runs, no truncation to a worker multiple (the uniform modes drop
+    trailing tiles; v here has 35 — indivisible by 4)."""
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.integers(0, 20, (5, 7)).astype(np.int32))
+    imb_eq = float(S.tile_imbalance(v, 4, "equal_work"))
+    imb_c = float(S.tile_imbalance(v, 4, "contiguous"))
+    assert imb_eq >= 1.0
+    # hot tiles aliased to the cyclic stride: equal_work must beat both
+    hot = np.ones(36, np.float32)
+    hot[0:16:4] = 50.0
+    v_hot = jnp.asarray(hot.reshape(6, 6))
+    imb = {s: float(S.tile_imbalance(v_hot, 4, s))
+           for s in ("contiguous", "cyclic", "equal_work")}
+    assert imb["equal_work"] < imb["contiguous"]
+    assert imb["equal_work"] < imb["cyclic"]
+
+
+# ---------------------------------------------------------------------------
+# auto-schedule: equal_work only when both uniform schedules lose
+# ---------------------------------------------------------------------------
+
+
+def test_auto_schedule_picks_equal_work_on_aliased_hot_rows():
+    gm = 32
+    w = np.ones(gm, np.float32)
+    w[0:16:4] = 9.0  # hot rows at the cyclic stride, first half only
+    v = _v_of(w)
+    assert S.auto_schedule(v, 4) == "equal_work"
+    assert S.auto_schedule(v, 4, allow_equal_work=False) in (
+        "contiguous", "cyclic")
+    # smooth top-heavy profile: cyclic already balances it (stride sampling)
+    skew = np.full(gm, 1e-3, np.float32)
+    skew[: gm // 4] = 10.0
+    assert S.auto_schedule(_v_of(skew), 4) == "cyclic"
+    # flat profile: nothing to fix
+    assert S.auto_schedule(jnp.ones((gm, 4), jnp.int32), 4) == "contiguous"
+
+
+# ---------------------------------------------------------------------------
+# ReshardController: cadence + drift threshold
+# ---------------------------------------------------------------------------
+
+
+def _aliased_v(gm, phase):
+    w = np.ones(gm, np.float32)
+    w[phase:gm // 2 + phase:4] = 9.0
+    return _v_of(w)
+
+
+def test_reshard_controller_cadence_and_drift():
+    rc = S.ReshardController(
+        S.ReshardConfig(num_devices=4, every=2, drift_threshold=1.05))
+    assert rc.due(0) and not rc.due(1) and rc.due(2)
+    v0 = _aliased_v(32, 0)
+    o0 = rc.probe(v0, 0)
+    # first probe cuts the initial partition — not a re-shard event
+    assert rc.probes == 1 and rc.resharded == 0
+    assert o0[0] == 0 and o0[-1] == 32
+    # same estimate again: live == fresh, no event
+    rc.probe(v0, 2)
+    assert rc.resharded == 0
+    # drifted estimate (work mass moved to the other half): re-cut
+    v1 = _v_of(np.concatenate([np.ones(16, np.float32),
+                               np.full(16, 9.0, np.float32)]))
+    o1 = rc.probe(v1, 4)
+    assert rc.resharded == 1 and not np.array_equal(o0, o1)
+    assert rc.live_imbalance is not None
+    assert [h["resharded"] for h in rc.history] == [False, False, True]
+
+
+def test_reshard_controller_resets_on_grid_change():
+    """A probe on a different row grid (serving waves grow/shrink the token
+    count) resets the partition instead of comparing incomparable offsets —
+    the stale cut clipped to the new grid would read as phantom zero-load
+    strips and fire a spurious drift event."""
+    rc = S.ReshardController(
+        S.ReshardConfig(num_devices=2, every=1, drift_threshold=1.0))
+    rc.probe(jnp.ones((10, 4), jnp.float32), 0)   # uniform: cut [0, 5, 10]
+    np.testing.assert_array_equal(rc.offsets, [0, 5, 10])
+    rc.probe(jnp.ones((4, 4), jnp.float32), 1)    # shrunk, still uniform
+    assert rc.resharded == 0, rc.history          # reset, NOT a drift event
+    np.testing.assert_array_equal(rc.offsets, [0, 2, 4])
+    assert rc.history[-1]["grid"] == 4
+    assert rc.history[-1]["live_imbalance"] == pytest.approx(1.0)
+
+
+def test_reshard_controller_rejects_unresolved_device_count():
+    """num_devices=0 means 'owner defaults it from the mesh'; building a
+    controller before resolving it must fail loudly, not ZeroDivisionError
+    inside the first probe."""
+    with pytest.raises(ValueError):
+        S.ReshardController(S.ReshardConfig())
+
+
+def test_strip_tables_reject_stale_offset_tables():
+    """A frozen offset table cut for a different grid or device count must
+    be rejected, not silently shard strips across the wrong devices."""
+    from repro.core import distributed as D
+
+    with pytest.raises(ValueError):  # 2 strips on a 4-device mesh
+        D._strip_tables(np.array([0, 4, 8]), 8, 4)
+    with pytest.raises(ValueError):  # wrong grid extent
+        D._strip_tables(np.array([0, 4, 8]), 10, 2)
+    with pytest.raises(ValueError):  # empty strip
+        D._strip_tables(np.array([0, 4, 4, 8]), 8, 3)
+    perm, keep = D._strip_tables(np.array([0, 3, 8]), 8, 2)
+    np.testing.assert_array_equal(perm[np.flatnonzero(keep)], np.arange(8))
+
+
+def test_supplied_offsets_force_equal_work_path():
+    """offsets= routes through the equal_work path whatever `schedule` says
+    — a frozen partition must never be silently dropped."""
+    from repro.core import distributed as D
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32) * 0.1)
+    mesh = make_host_mesh()
+    ref_c, _ = D.spamm_rowpart(a, a, 0.0, mesh, tile=32, backend="jnp")
+    c, _ = D.spamm_rowpart(a, a, 0.0, mesh, tile=32, backend="jnp",
+                           schedule="contiguous",  # overridden by offsets
+                           offsets=np.array([0, 4]))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(ref_c))
+    with pytest.raises(ValueError):  # stale table: wrong strip count
+        D.spamm_rowpart(a, a, 0.0, mesh, tile=32, backend="jnp",
+                        offsets=np.array([0, 2, 4]))
+
+
+def test_reshard_controller_sticky_below_threshold():
+    """A huge drift threshold keeps the first cut forever (telemetry still
+    records the widening live-vs-fresh gap)."""
+    rc = S.ReshardController(
+        S.ReshardConfig(num_devices=4, every=1, drift_threshold=100.0))
+    o0 = rc.probe(_aliased_v(32, 0), 0)
+    for step, phase in ((1, 1), (2, 2), (3, 3)):
+        assert np.array_equal(rc.probe(_aliased_v(32, phase), step), o0)
+    assert rc.resharded == 0 and rc.probes == 4
+    assert rc.history[-1]["live_imbalance"] >= rc.history[-1]["fresh_imbalance"]
+
+
+# ---------------------------------------------------------------------------
+# serving engine: drift-triggered re-sharding is pure control plane
+# ---------------------------------------------------------------------------
+
+
+def test_engine_reshard_cadence_and_bit_identity():
+    """A drifting-activation serving run re-cuts at the configured cadence,
+    outputs stay bit-identical to the never-reshard run, and
+    Request.out["spamm"] counts the events."""
+    from repro.configs import ParallelConfig, SpammConfig, get_config
+    from repro.launch.mesh import make_ctx, make_host_mesh
+    from repro.models import model as M
+    from repro.serving.engine import Engine, Request
+
+    pcfg = ParallelConfig(
+        compute_dtype="float32", param_dtype="float32", remat="none",
+        attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=32,
+        decode_seq_shard=False,
+    )
+    cfg = get_config("musicgen-large").reduced()
+    ctx = make_ctx(make_host_mesh())
+    params = M.init_params(cfg, pcfg, jax.random.key(0))
+    # give the embedding a strong id→norm profile so changing the token
+    # distribution between waves drifts the activation-side work estimate
+    emb = np.asarray(params["embed"]["embedding"])
+    scale = np.where(np.arange(cfg.vocab) < cfg.vocab // 2, 0.05, 5.0)
+    params["embed"]["embedding"] = jnp.asarray(emb * scale[:, None])
+
+    # τ sits between the cold-row (~0.2) and hot-row (~20) norm products of
+    # the probe GEMM, so the work estimate follows the token distribution
+    sc = SpammConfig(enable=True, tau=2.0, tile=16, backend="jnp")
+    rcfg = S.ReshardConfig(num_devices=2, every=2, drift_threshold=1.0)
+    eng = Engine(cfg, pcfg, ctx, params, max_len=96, spamm_cfg=sc,
+                 reshard_cfg=rcfg)
+    eng_ref = Engine(cfg, pcfg, ctx, params, max_len=96,
+                     spamm_cfg=SpammConfig(enable=True, tau=2.0, tile=16,
+                                           backend="jnp"))
+
+    rng = np.random.default_rng(0)
+    max_new = 5
+
+    def wave(lo, hi):
+        prompts = [rng.integers(lo, hi, size=32).astype(np.int32)
+                   for _ in range(2)]
+        reqs = [Request(prompt=p.copy(), max_new_tokens=max_new)
+                for p in prompts]
+        refs = [Request(prompt=p.copy(), max_new_tokens=max_new)
+                for p in prompts]
+        out = eng.generate(reqs)
+        out_ref = eng_ref.generate(refs)
+        # pure control plane: re-sharding never changes a single bit
+        for o, r in zip(out, out_ref):
+            np.testing.assert_array_equal(o, r)
+        return reqs
+
+    # wave A: cold tokens (uniform low-norm rows)
+    reqs_a = wave(1, cfg.vocab // 2)
+    sp = reqs_a[0].out["spamm"]
+    assert {"resharded", "reshard_probes", "partition_imbalance"} <= set(sp)
+    # engine steps per wave: 1 prefill + (max_new - 1) decode; cadence 2
+    steps = 1 + (max_new - 1)
+    assert sp["reshard_probes"] == len(
+        [s for s in range(steps) if s % rcfg.every == 0])
+    assert eng.partition_offsets is not None
+    # wave B: slot 0 jumps to hot ids, slot 1 stays cold — the work profile
+    # concentrates in the leading rows and the live cut must drift
+    prompts = [rng.integers(cfg.vocab // 2, cfg.vocab, 32).astype(np.int32),
+               rng.integers(1, cfg.vocab // 2, 32).astype(np.int32)]
+    reqs_b = [Request(prompt=p.copy(), max_new_tokens=max_new)
+              for p in prompts]
+    refs_b = [Request(prompt=p.copy(), max_new_tokens=max_new)
+              for p in prompts]
+    out_b = eng.generate(reqs_b)
+    out_bref = eng_ref.generate(refs_b)
+    for o, r in zip(out_b, out_bref):
+        np.testing.assert_array_equal(o, r)
+    sp_b = reqs_b[0].out["spamm"]
+    assert sp_b["reshard_probes"] >= 1
+    assert eng._resharder.resharded >= 1, eng._resharder.history
+    assert sp_b["resharded"] == eng._resharder.resharded - (
+        reqs_a[0].out["spamm"]["resharded"])
+    assert sp_b["partition_imbalance"] is not None
+    # a no-reshard engine reports no reshard keys
+    assert "resharded" not in refs_b[0].out["spamm"]
+
+
+# ---------------------------------------------------------------------------
+# distributed parity: every sharding path pins to the single-device oracle
+# ---------------------------------------------------------------------------
+
+CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import spamm as cs, distributed, schedule
+from repro.launch.mesh import make_mesh
+
+n, tile, tau = 256, 32, 0.02
+gm = n // tile
+devs = jax.devices()
+
+rng = np.random.default_rng(0)
+banded = cs.exponential_decay(n, lam=0.6, seed=0)
+skewed = banded * np.exp(-np.arange(n) / n * 4)[:, None]
+uniform = (0.05 * rng.standard_normal((n, n))).astype(np.float32)
+aliased = banded.copy()
+for r in range(0, n, 4 * tile):  # hot tile-rows at the cyclic stride
+    aliased[r:r + tile] *= 8.0
+b = cs.exponential_decay(n, lam=0.6, seed=1)
+jb = jnp.asarray(b)
+
+def strip_oracle(ja, offsets):
+    # single-device spamm() run strip-by-strip with the SAME clamp-padded
+    # local shapes the shard_map bodies see; pads dropped on the way back
+    ndev = len(offsets) - 1
+    perm, keep = distributed._strip_tables(offsets, gm, ndev)
+    wmax = len(perm) // ndev
+    outs = []
+    a_t = np.asarray(ja).reshape(gm, tile, n)
+    for d in range(ndev):
+        a_loc = a_t[perm[d * wmax:(d + 1) * wmax]].reshape(wmax * tile, n)
+        c_loc, _ = cs.spamm(jnp.asarray(a_loc), jb, tau, tile=tile,
+                            backend="jnp")
+        outs.append(np.asarray(c_loc).reshape(wmax, tile, -1))
+    return np.concatenate(outs)[np.flatnonzero(keep)].reshape(n, -1)
+
+for name, a in (("banded", banded), ("skewed", skewed),
+                ("uniform", uniform), ("aliased", aliased)):
+    ja = jnp.asarray(a)
+    ref_c, _ = cs.spamm(ja, jb, tau, tile=tile, backend="jnp")
+    for ndev in (1, 2, 3, 4):
+        mesh = make_mesh((ndev,), ("data",),
+                         devices=np.array(devs[:ndev]))
+        offs = distributed._equal_work_offsets(
+            ja, jb, tau, ndev, tile=tile, backend="jnp", sched_levels=3,
+            gm=gm)
+        c, frac = distributed.spamm_rowpart(
+            ja, jb, tau, mesh, axis="data", tile=tile, backend="jnp",
+            schedule="equal_work", offsets=offs)
+        # bit-identity to the strip-wise single-device oracle (same local
+        # computation); the FULL single-device product differs by XLA's
+        # shape-dependent einsum contraction order (~1e-7, pre-existing for
+        # every distributed schedule), so it gets a tight allclose
+        assert np.array_equal(np.asarray(c), strip_oracle(ja, offs)), (
+            name, ndev)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(ref_c),
+                                   atol=1e-5)
+        # auto may pick any schedule; parity must hold regardless
+        c2, _ = distributed.spamm_rowpart(ja, jb, tau, mesh, axis="data",
+                                          tile=tile, backend="jnp",
+                                          schedule="auto")
+        np.testing.assert_allclose(np.asarray(c2), np.asarray(ref_c),
+                                   atol=1e-5)
+print("matrix grid OK")
+
+# ragged gm % ndev != 0 (gm=8, ndev=3): only equal_work can cover it
+ja = jnp.asarray(banded)
+ref_c, _ = cs.spamm(ja, jb, tau, tile=tile, backend="jnp")
+mesh3 = make_mesh((3,), ("data",), devices=np.array(devs[:3]))
+for sched in ("equal_work", "auto"):
+    c, _ = distributed.spamm_rowpart(ja, jb, tau, mesh3, axis="data",
+                                     tile=tile, backend="jnp", schedule=sched)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(ref_c), atol=1e-5)
+print("ragged OK")
+
+# frozen offset table (what the re-sharding controller feeds) + uniform
+# offsets reproduce the contiguous path BIT-identically (the gather is
+# numerically inert)
+mesh2 = make_mesh((2,), ("data",), devices=np.array(devs[:2]))
+c_frozen, _ = distributed.spamm_rowpart(
+    ja, jb, tau, mesh2, axis="data", tile=tile, backend="jnp",
+    schedule="equal_work", offsets=np.array([0, 3, 8]))
+np.testing.assert_allclose(np.asarray(c_frozen), np.asarray(ref_c),
+                           atol=1e-5)
+c_cont, _ = distributed.spamm_rowpart(ja, jb, tau, mesh2, axis="data",
+                                      tile=tile, backend="jnp",
+                                      schedule="contiguous")
+c_eq_uni, _ = distributed.spamm_rowpart(
+    ja, jb, tau, mesh2, axis="data", tile=tile, backend="jnp",
+    schedule="equal_work", offsets=np.array([0, 4, 8]))
+assert np.array_equal(np.asarray(c_eq_uni), np.asarray(c_cont))
+print("frozen/uniform offsets OK")
+
+# degenerate all-zero V (everything gated off): uniform strips, zero C
+offs0 = distributed._equal_work_offsets(ja, jb, 1e9, 3, tile=tile,
+                                        backend="jnp", sched_levels=3, gm=gm)
+np.testing.assert_array_equal(offs0, [0, 3, 6, 8])
+c0, _ = distributed.spamm_rowpart(ja, jb, 1e9, mesh3, axis="data", tile=tile,
+                                  backend="jnp", schedule="equal_work")
+assert float(jnp.max(jnp.abs(c0))) == 0.0
+print("all-zero-V OK")
+
+# 2-D SUMMA path with equal-work row strips (ragged rows over 3 devices)
+mesh2d = make_mesh((3, 2), ("data", "model"), devices=np.array(devs[:6]))
+for sched in ("equal_work", "auto"):
+    c2d, _ = distributed.spamm_2d(ja, jb, tau, mesh2d, tile=tile,
+                                  backend="jnp", schedule=sched)
+    np.testing.assert_allclose(np.asarray(c2d), np.asarray(ref_c), atol=1e-4)
+print("2d OK")
+"""
+
+
+@pytest.mark.slow
+def test_equal_work_distributed_parity():
+    out = run_subprocess(CODE, devices=12)
+    assert "matrix grid OK" in out
+    assert "ragged OK" in out
+    assert "frozen/uniform offsets OK" in out
+    assert "all-zero-V OK" in out
+    assert "2d OK" in out
