@@ -1,0 +1,111 @@
+"""Mixed-precision SpAMM: f32 vs bf16 vs int8 on the same work-list.
+
+One decay matrix pair per cell, one τ, three compute dtypes through the
+SAME plan/execute pipeline (`core.plan` with `compute_dtype=`). Reports
+per-dtype execute time, the plan's GEMM bytes-moved estimate
+(`SpammPlan.bytes_moved()`), and the accuracy cost vs the f32 SpAMM
+result, then asserts:
+
+  * parity — each low-precision result matches the f32 kernel run on the
+    quantize-dequantized operands with the same plan (bf16: bit-identical,
+    the bf16×bf16 products are exact in the f32 accumulator; int8: a few
+    ulps, the int8 kernel's int32 tile dots are EXACT where the f32 oracle
+    rounds inside the tile);
+  * gate superset — every (i, k, j) triple the f32 gate keeps is kept by
+    the quantized gate (the widened-τ guarantee from kernels.quantize);
+  * bandwidth — the work-list moves ≥ 1.5× fewer GEMM bytes at int8 than
+    f32 (the acceptance floor; the analytic ratio is higher).
+
+The machine-readable report lands in BENCH_mixed_precision.json
+(`benchmarks.report.write_bench_json`; .gitignore'd, uploaded by CI).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from benchmarks.report import write_bench_json
+from repro.core import plan as cplan
+from repro.core.spamm import exponential_decay
+from repro.kernels import quantize as kquant
+
+DTYPES = ("float32", "bfloat16", "int8")
+
+
+def _quantized_oracle(p, a, b, dtype, tile, backend):
+    """f32 execution over the quantize-dequantized operands with the SAME
+    plan — what each low-precision kernel must reproduce."""
+    av = kquant.quantized_view(a, dtype, tile)
+    bv = kquant.quantized_view(b, dtype, tile)
+    p32 = cplan.SpammPlan(
+        p.tau, p.norm_a, p.norm_b, p.mask, p.kidx, p.nvalid, p.valid_tiles,
+        p.work, tile=p.tile, block_n=p.block_n, backend=p.backend,
+        levels=p.levels,
+    )
+    return cplan.execute(p32, av, bv)
+
+
+def _cell(n: int, tile: int, tau: float, lam: float, backend: str):
+    a = jnp.asarray(exponential_decay(n, lam=lam, seed=0))
+    b = jnp.asarray(exponential_decay(n, lam=lam, seed=1))
+    dense = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+    results = {}
+    for dtype in DTYPES:
+        p = cplan.plan(a, b, tau, tile=tile, backend=backend,
+                       compute_dtype=dtype)
+        c = cplan.execute(p, a, b)
+        t = timeit(lambda: cplan.execute(p, a, b))
+        if dtype != "float32":
+            oracle = _quantized_oracle(p, a, b, dtype, tile, backend)
+            kdiff = float(jnp.max(jnp.abs(c - oracle)))
+            scale = float(jnp.max(jnp.abs(oracle))) or 1.0
+            assert kdiff <= 1e-5 * scale, (
+                f"{dtype} kernel drifted from its dequantized-f32 oracle: "
+                f"max|Δ|={kdiff:.3e} vs {1e-5 * scale:.3e}")
+        results[dtype] = {
+            "plan": p,
+            "bytes": float(p.bytes_moved()),
+            "us": t,
+            "err_vs_dense": float(np.max(np.abs(np.asarray(c) - dense))),
+        }
+
+    # gate superset: the widened-τ quantized gates keep every f32-kept pair
+    m32 = np.asarray(results["float32"]["plan"].mask)
+    for dtype in ("bfloat16", "int8"):
+        mq = np.asarray(results[dtype]["plan"].mask)
+        assert bool(np.all(~m32 | mq)), (
+            f"{dtype} gate dropped a tile the f32 gate keeps (n={n} τ={tau})")
+
+    cell = {"n": n, "tile": tile, "tau": tau, "lam": lam, "backend": backend}
+    b32 = results["float32"]["bytes"]
+    for dtype in DTYPES:
+        r = results[dtype]
+        ratio = b32 / max(r["bytes"], 1.0)
+        cell[dtype] = {
+            "gemm_bytes_moved": r["bytes"],
+            "bytes_ratio_vs_f32": ratio,
+            "us_per_execute": r["us"],
+            "max_err_vs_dense": r["err_vs_dense"],
+            "valid_fraction": float(results[dtype]["plan"].valid_fraction),
+        }
+        row(f"mixed_precision/{backend}/n{n}t{tile}/tau{tau}/{dtype}",
+            r["us"],
+            f"bytes={r['bytes']:.0f};ratio={ratio:.2f}x;"
+            f"err={r['err_vs_dense']:.2e}")
+    assert cell["int8"]["bytes_ratio_vs_f32"] >= 1.5, (
+        "int8 must move >=1.5x fewer GEMM bytes than f32 on the same "
+        f"work-list, got {cell['int8']['bytes_ratio_vs_f32']:.2f}x")
+    return cell
+
+
+def run(quick: bool = False):
+    cells = ([(256, 32, 0.05, 0.8)] if quick
+             else [(512, 32, 0.05, 0.8), (1024, 64, 0.02, 0.9)])
+    # interpret exercises the real Pallas kernel bodies (worklist + the int8
+    # variant) on CPU; the jnp fallback is covered by the unit tests
+    out = [_cell(n, tile, tau, lam, backend="interpret")
+           for n, tile, tau, lam in cells]
+    path = write_bench_json("mixed_precision", {"cells": out})
+    print(f"# wrote {path}", flush=True)

@@ -111,6 +111,18 @@ def roofline_table(d, mesh):
     return "\n".join(rows)
 
 
+def write_bench_json(name: str, payload: dict, out_dir: str = ".") -> str:
+    """Write one benchmark's machine-readable report as BENCH_<name>.json.
+
+    These files are deliberately .gitignore'd: they are machine-local
+    measurements, and the durable trajectory is the CI artifact upload of
+    the same files (see .github/workflows/ci.yml). Returns the path."""
+    fn = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(fn, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return fn
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")

@@ -18,14 +18,15 @@ def main() -> None:
                     help="alias of --quick (the CI fast lane's spelling)")
     ap.add_argument("--only", default=None,
                     help="run a single module (table2|table3|table4|table5|"
-                         "loadbalance|kernels|roofline)")
+                         "loadbalance|kernels|mixed_precision|roofline)")
     args = ap.parse_args()
     args.quick = args.quick or args.smoke
 
     from benchmarks import (frozen_prefill, kernel_blocks, kernels_micro,
-                            loadbalance, plan_cache, pyramid_gating, roofline,
-                            sparse_exec, table1_taus, table2_dense,
-                            table3_sparse, table4_ergo, table5_vgg)
+                            loadbalance, mixed_precision, plan_cache,
+                            pyramid_gating, roofline, sparse_exec,
+                            table1_taus, table2_dense, table3_sparse,
+                            table4_ergo, table5_vgg)
     from benchmarks.common import header
 
     mods = {
@@ -41,6 +42,7 @@ def main() -> None:
         "pyramid_gating": pyramid_gating,
         "sparse_exec": sparse_exec,
         "frozen_prefill": frozen_prefill,
+        "mixed_precision": mixed_precision,
         "roofline": roofline,
     }
     header()

@@ -28,6 +28,10 @@ class SpammConfig:
     levels: int = 0                     # norm-pyramid coarsening steps for
                                         # hierarchical gating (0 = flat); the
                                         # coarsest gate runs at coarse_tile
+    dtype: str = "float32"              # GEMM compute dtype: float32 | bf16 |
+                                        # int8 (f32 accumulate always; gating
+                                        # stays conservative via widened τ —
+                                        # see repro.kernels.quantize)
     moe_bmm: bool = False               # inference-only: run MoE grouped FFNs
                                         # through the batched spamm_bmm path
                                         # (per-expert weight plans; grads flow

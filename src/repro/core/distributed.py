@@ -176,11 +176,18 @@ def _equal_work_offsets(a, b, tau, num_devices, *, tile, backend,
                                           fine_rows=gm)
 
 
-def _local_spamm(a_loc, b, tau, tile, backend, block_n):
+def _local_spamm(a_loc, b, tau, tile, backend, block_n,
+                 compute_dtype="float32"):
     # gating on the device-local shard: plans are built per shard (each
     # shard's normmap slice is its own) and executed in place — the same
     # single gating implementation (core.plan) as the flat call path.
-    p = _plan.plan(a_loc, b, tau, tile=tile, backend=backend, block_n=block_n)
+    # compute_dtype != f32 reproduces the numerics of a LOW-PRECISION
+    # REPLICATED B: quantization is a pure per-tile function of b, so every
+    # shard quantizing its replica equals quantize-once-then-broadcast — the
+    # wire payload of that broadcast is what distributed.compression's
+    # compress_tiles/halo_wire_bytes account for.
+    p = _plan.plan(a_loc, b, tau, tile=tile, backend=backend, block_n=block_n,
+                   compute_dtype=compute_dtype)
     c = _plan.execute(p, a_loc, b)
     return c, p.valid_fraction.reshape(1)
 
@@ -198,6 +205,7 @@ def spamm_rowpart(
     schedule: str = "contiguous",
     sched_levels: int = 3,
     offsets=None,
+    compute_dtype: str = "float32",
 ):
     """Paper §3.4: row-partition C over `axis`, B replicated.
 
@@ -221,6 +229,10 @@ def spamm_rowpart(
     to the plain mean); clamp-pad rows can still nudge a device's own
     fraction toward its last row's density — telemetry-grade, the product
     itself is exact.
+    compute_dtype (float32 | bfloat16 | int8) runs each shard's gated GEMM
+    in low precision with the conservative widened-τ gate; the replicated B
+    then only needs to cross the wire in the quantized format (see
+    `repro.distributed.compression.compress_tiles` / `halo_wire_bytes`).
     """
     m, k = a.shape
     ndev = mesh.shape[axis]
@@ -232,7 +244,8 @@ def spamm_rowpart(
                                            offsets=offsets)
     fn = shard_map(
         functools.partial(
-            _local_spamm, tau=tau, tile=tile, backend=backend, block_n=block_n
+            _local_spamm, tau=tau, tile=tile, backend=backend,
+            block_n=block_n, compute_dtype=compute_dtype,
         ),
         mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),

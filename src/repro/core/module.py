@@ -45,13 +45,14 @@ class SpammContext:
     begin/end and attaches the drained stats to the request metadata.
     """
 
-    __slots__ = ("cfg", "cache", "_taps", "_collect", "_phase",
+    __slots__ = ("cfg", "cache", "_taps", "_byte_taps", "_collect", "_phase",
                  "_trace_buffer")
 
     def __init__(self, cfg: Any, cache: Optional[WeightPlanCache] = None):
         self.cfg = cfg
         self.cache = cache if cache is not None else WeightPlanCache()
         self._taps: list = []
+        self._byte_taps: list = []
         self._collect = False
         self._phase = "prefill"
         self._trace_buffer: Optional[list] = None
@@ -68,6 +69,7 @@ class SpammContext:
         """Start collecting per-GEMM valid fractions (must be called before
         the first trace of the step that should report them)."""
         self._taps = []
+        self._byte_taps = []
         self._collect = True
 
     def set_phase(self, phase: str):
@@ -84,6 +86,10 @@ class SpammContext:
         # execution, including ones outside a begin/end window
         if self._collect:
             self._taps.append((phase, float(f)))
+
+    def _record_bytes(self, phase, nb):
+        if self._collect:
+            self._byte_taps.append((phase, float(nb)))
 
     # -- trace-time buffering (the grad-safe path) --------------------------
     # io_callback effects are DROPPED inside a custom_vjp fwd rule under
@@ -127,11 +133,34 @@ class SpammContext:
             jnp.asarray(valid_fraction, jnp.float32), ordered=False,
         )
 
+    def tap_bytes(self, nbytes):
+        """Record one gated GEMM's bytes-moved estimate (plan.bytes_moved()),
+        tagged with the current phase. Separate channel from tap(): the
+        fraction taps feed the gating-quality stats, the byte taps feed the
+        mixed-precision bandwidth telemetry — draining one must not consume
+        the other. Callback-only (no trace-buffer tier: bytes are a serving
+        metric, the grad path never reports them)."""
+        if not self._collect:
+            return
+        from jax.experimental import io_callback  # deferred: cheap import
+
+        io_callback(
+            functools.partial(self._record_bytes, self._phase), None,
+            jnp.asarray(nbytes, jnp.float32), ordered=False,
+        )
+
     def end_stats(self):
         """Stop collecting and drain: list of (phase, valid_fraction) pairs
         tapped since `begin_stats` (empty when no gated GEMM executed)."""
         taps, self._taps = self._taps, []
         self._collect = False
+        return taps
+
+    def drain_byte_stats(self):
+        """Drain the bytes-moved taps: list of (phase, bytes) pairs recorded
+        since `begin_stats`. Call before `end_stats` flips _collect off if
+        callbacks may still be landing; the engine drains both together."""
+        taps, self._byte_taps = self._byte_taps, []
         return taps
 
 
@@ -154,7 +183,7 @@ def _flatten_pad(x, tile):
 
 
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9)
 )
 def _spamm_linear_stats(
     x: jax.Array,
@@ -166,13 +195,15 @@ def _spamm_linear_stats(
     block_n: int = 1,
     ctx: Optional[SpammContext] = None,
     levels: int = 0,
+    compute_dtype: str = "float32",
 ):
     """(y, valid_fraction) — the gated GEMM plus its gating stat as a REAL
     OUTPUT. The fraction must flow out of the custom_vjp rather than be
     tapped inside it: the fwd rule is traced in its own subsidiary trace
     under autodiff, so a tap fired there either gets dropped (callbacks) or
     leaks an inner tracer (trace buffers). Callers tap the returned value."""
-    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
+    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels,
+                     compute_dtype)
     return y, p.valid_fraction
 
 
@@ -186,46 +217,59 @@ def spamm_linear(
     block_n: int = 1,
     ctx: Optional[SpammContext] = None,
     levels: int = 0,
+    compute_dtype: str = "float32",
 ) -> jax.Array:
     """y[..., n] = SpAMM(x[..., k] @ w[k, n], tau). Output dtype follows x.
 
     `ctx` (optional, static) supplies the WeightPlanCache so eager callers
     (serving) pay the weight-side gating once per weight. `levels` > 0 plans
     hierarchically over the norm pyramid (mask unchanged, planning cheaper;
-    the weight-side pyramid is what the cache then holds).
+    the weight-side pyramid is what the cache then holds). `compute_dtype`
+    selects the forward GEMM operand precision (float32 | bfloat16 | int8 —
+    f32 accumulate, conservative widened-τ gate); gradients always run f32.
     """
     return _spamm_linear_stats(x, w, tau, tile, backend, bwd, block_n, ctx,
-                               levels)[0]
+                               levels, compute_dtype)[0]
 
 
-def _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels=0):
+def _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels=0,
+              compute_dtype="float32"):
     """Plan + execute one gated GEMM; returns (y, plan)."""
     xp, (lead, m, k) = _flatten_pad(x, tile)
     n = w.shape[-1]
     if ctx is not None:
         p, wp = ctx.cache.plan_for(
             xp, w, tau, tile=tile, block_n=block_n, backend=backend,
-            levels=levels,
+            levels=levels, compute_dtype=compute_dtype,
         )
     else:
         # N pads to tile·block_n (not just tile) so odd-N weights survive
         # super-column gating; the cache path does the same in weight_side
         wp = pad_to_tile(w, tile, tile * block_n)
         p = _plan.plan(xp, wp, tau, tile=tile, block_n=block_n,
-                       backend=backend, levels=levels)
+                       backend=backend, levels=levels,
+                       compute_dtype=compute_dtype)
     c = _plan.execute(p, xp, wp)
     y = c[:m, :n].reshape(*lead, n).astype(x.dtype)
     return y, p
 
 
-def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n, ctx, levels):
-    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels)
+def _spamm_linear_fwd(x, w, tau, tile, backend, bwd, block_n, ctx, levels,
+                      compute_dtype):
+    y, p = _fwd_impl(x, w, tau, tile, backend, block_n, ctx, levels,
+                     compute_dtype)
     # residuals carry the forward normmaps so bwd="spamm" replans without
     # re-running get-norm on x or w
     return (y, p.valid_fraction), (x, w, tau, p.norm_a, p.norm_b)
 
 
-def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, levels, res, g):
+def _spamm_linear_bwd(tile, backend, bwd, block_n, ctx, levels, compute_dtype,
+                      res, g):
+    # gradients deliberately ignore compute_dtype: bwd="dense" is exact f32
+    # by contract, and bwd="spamm" regates from the forward normmaps (already
+    # quantization-aware via the widened forward τ) but multiplies in f32 —
+    # low-precision grads would bias training for no serving win
+    del compute_dtype
     x, w, tau, norm_x, norm_w = res
     g, _ = g  # cotangent of the valid-fraction stat output is discarded
     lead = x.shape[:-1]
@@ -295,6 +339,7 @@ def spamm_linear_frozen(x: jax.Array, w: jax.Array, fp,
     p = _plan.plan(xp, frozen_weight=fp)
     if ctx is not None:
         ctx.tap(p.valid_fraction)
+        ctx.tap_bytes(p.bytes_moved())
     wp = pad_to_tile(w, tile, tile * fp.block_n)
     c = _plan.execute(p, xp, wp)
     return c[:m, :n].reshape(*lead, n).astype(x.dtype)
@@ -327,6 +372,7 @@ def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any,
         cfg.block_n,
         ctx,
         getattr(cfg, "levels", 0),
+        getattr(cfg, "dtype", "float32"),
     )
     ctx.tap(frac)
     return y

@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels import quantize as kquant
 from repro.kernels import ref as kref
 from repro.kernels import spamm_mm as kmm
 
@@ -374,15 +375,24 @@ class SpammPlan:
       work        SpammWork or None — the §3.3 compacted work-list, present
                   on every concretely-planned product; `execute` drives the
                   ragged kernel from it when the backend has one.
+      a_scale     (gm, gk) f32 per-tile int8 scales for A, or None — present
+                  only on int8 plans built from the matrix; `execute`
+                  recomputes missing scales (quantization is a pure function
+                  of the operand, so either way is bit-identical).
+      b_scale     (gk, gn) f32 per-FINE-tile int8 scales for B, or None.
 
     Static metadata (aux): tile, block_n, backend (resolved name), levels
     (pyramid coarsening steps the mask was gated with; 0 = flat — the mask is
-    bit-identical either way, `levels` only records how it was built).
+    bit-identical either way, `levels` only records how it was built), and
+    compute_dtype ("float32" | "bfloat16" | "int8" — the precision `execute`
+    feeds the kernel; the plan's τ is already quantization-widened and its
+    normmaps describe the quantized operand view, see kernels/quantize.py).
     """
 
     def __init__(self, tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
-                 work=None, *, tile: int, block_n: int, backend: str,
-                 levels: int = 0):
+                 work=None, a_scale=None, b_scale=None, *, tile: int,
+                 block_n: int, backend: str, levels: int = 0,
+                 compute_dtype: str = "float32"):
         self.tau = tau
         self.norm_a = norm_a
         self.norm_b = norm_b
@@ -391,10 +401,13 @@ class SpammPlan:
         self.nvalid = nvalid
         self.valid_tiles = valid_tiles
         self.work = work
+        self.a_scale = a_scale
+        self.b_scale = b_scale
         self.tile = tile
         self.block_n = block_n
         self.backend = backend
         self.levels = levels
+        self.compute_dtype = compute_dtype
 
     # -- pytree protocol ----------------------------------------------------
     @property
@@ -411,14 +424,16 @@ class SpammPlan:
         # flatten the real bitmap.
         mask_child = None if self._mask_is_derived else self._mask
         children = (self.tau, self.norm_a, self.norm_b, mask_child,
-                    self.kidx, self.nvalid, self.valid_tiles, self.work)
-        return children, (self.tile, self.block_n, self.backend, self.levels)
+                    self.kidx, self.nvalid, self.valid_tiles, self.work,
+                    self.a_scale, self.b_scale)
+        return children, (self.tile, self.block_n, self.backend, self.levels,
+                          self.compute_dtype)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        tile, block_n, backend, levels = aux
+        tile, block_n, backend, levels, compute_dtype = aux
         return cls(*children, tile=tile, block_n=block_n, backend=backend,
-                   levels=levels)
+                   levels=levels, compute_dtype=compute_dtype)
 
     # -- derived quantities -------------------------------------------------
     @property
@@ -460,6 +475,28 @@ class SpammPlan:
     @property
     def valid_fraction(self) -> jax.Array:
         return self.valid_tiles / self.total_tiles
+
+    def bytes_moved(self):
+        """Analytic GEMM bytes the executed work-list moves at this plan's
+        compute dtype: per real step one (tile, tile) A block and one
+        (tile, tile·block_n) B block at `compute_dtype` itemsize, plus one
+        f32 (tile, tile·block_n) output flush per active output pair. The
+        mixed-precision bandwidth lever in one number (ROADMAP: cut decode
+        GEMM bytes ~2× on the same work-list); int8 scale tables are a few
+        f32 scalars per step and are not counted."""
+        isize = kquant.dtype_itemsize(self.compute_dtype)
+        t2 = float(self.tile * self.tile)
+        nvalid = self.nvalid
+        if nvalid is not None:
+            pairs = jnp.sum(nvalid > 0, dtype=jnp.int32)
+        else:
+            pairs = jnp.sum(jnp.any(self.mask, axis=-1), dtype=jnp.int32)
+        # float accumulation: byte counts overflow int32 well before any
+        # interesting grid does
+        gemm_in = self.valid_tiles.astype(jnp.float32) * (
+            t2 * (1 + self.block_n) * isize)
+        flush_out = pairs.astype(jnp.float32) * (t2 * self.block_n * 4)
+        return gemm_in + flush_out
 
     def info(self) -> dict:
         """The info dict `kernels.ops.spamm_matmul` has always returned.
@@ -736,10 +773,22 @@ def _plan_frozen(a, fp, *, norm_a=None, use_mxu_norm: bool = False
             "work-list entry point — the frozen path cannot feed it; "
             "register a matmul_worklist or use a mask-gating backend")
     tile = fp.tile
+    dtype = getattr(fp, "compute_dtype", "float32")
+    a_scale = None
     if norm_a is None:
         if a is None:
             raise ValueError("need `a` or `norm_a`")
-        norm_a = bk.norms(a, tile, use_mxu=use_mxu_norm)
+        # low-precision plans gate on the quantized activation view (the
+        # weight-side tables were frozen from the quantized weight, and
+        # fp.tau is already the widened gate threshold)
+        if dtype == "int8":
+            qa, a_scale = kquant.quantize_tiles(a, tile)
+            a_view = kquant.dequantize_tiles(qa, a_scale, tile)
+        elif dtype != "float32":
+            a_view = kquant.quantized_view(a, dtype, tile)
+        else:
+            a_view = a
+        norm_a = bk.norms(a_view, tile, use_mxu=use_mxu_norm)
     gm, gk = norm_a.shape
     if (gm, gk) != (fp.gm, fp.gk):
         raise ValueError(
@@ -761,8 +810,9 @@ def _plan_frozen(a, fp, *, norm_a=None, use_mxu_norm: bool = False
         active.astype(jnp.int32))
     valid_tiles = jnp.sum(active, dtype=jnp.int32)
     return SpammPlan(tau, norm_a, fp.norm_b, None, None, nvalid, valid_tiles,
-                     work, tile=tile, block_n=fp.block_n, backend=bk.name,
-                     levels=fp.num_levels)
+                     work, a_scale, getattr(fp, "b_scale", None),
+                     tile=tile, block_n=fp.block_n, backend=bk.name,
+                     levels=fp.num_levels, compute_dtype=dtype)
 
 
 def plan(
@@ -779,6 +829,7 @@ def plan(
     use_mxu_norm: bool = False,
     levels: int = 0,
     frozen_weight=None,
+    compute_dtype: str = "float32",
 ) -> SpammPlan:
     """Build the gating phase for (M, K) @ (K, N), dims divisible by tile
     (and N by tile·block_n) — pad upstream (see `pad_to_tile` /
@@ -800,11 +851,22 @@ def plan(
 
     frozen_weight (a `repro.plans.frozen.FrozenPlan`, or a `FrozenWeight`
     when planning eagerly) replaces the whole weight side with precomputed
-    artifacts: τ/tile/block_n/levels/backend come FROM the artifact (the
-    keyword args are ignored), only the activation-side gate is computed
-    (pass norm_a= to skip even that), and the resulting plan executes via
-    the frozen `SpammWork` step tables — the path compiled prefill/decode
-    take with plans as jit inputs.
+    artifacts: τ/tile/block_n/levels/backend/compute_dtype come FROM the
+    artifact (the keyword args are ignored), only the activation-side gate
+    is computed (pass norm_a= to skip even that), and the resulting plan
+    executes via the frozen `SpammWork` step tables — the path compiled
+    prefill/decode take with plans as jit inputs.
+
+    compute_dtype ("float32" | "bfloat16" | "int8", aliases accepted) plans
+    for low-precision execution: normmaps are computed (in f32) from the
+    QUANTIZED operand view — the values the kernel will actually multiply —
+    and an explicit τ is widened by the analytic quantization error bound
+    (kernels/quantize.py) so the low-precision gate provably keeps every
+    tile the f32 gate at the requested τ keeps. With valid_ratio the
+    τ-search runs directly on the quantized norms (the target ratio IS the
+    spec; no widening on top). Callers who pass precomputed norm_a/norm_b
+    at a low dtype are responsible for having computed them from the
+    quantized view (`WeightPlanCache.weight_side(dtype=...)` does).
     """
     if frozen_weight is not None:
         if tau is not None or valid_ratio is not None:
@@ -815,6 +877,27 @@ def plan(
     if (tau is None) == (valid_ratio is None):
         raise ValueError("give exactly one of tau / valid_ratio")
     bk = kops.get_backend(backend)
+
+    compute_dtype = kquant.canonical_dtype(compute_dtype)
+    a_scale = b_scale = None
+    if compute_dtype != "float32":
+        # gate on what the kernel will multiply: quantize-dequantize the
+        # operands (f32 view) before any norm computation; int8 keeps the
+        # per-tile scales on the plan so execute() reuses them
+        if a is not None:
+            if compute_dtype == "int8":
+                qa, a_scale = kquant.quantize_tiles(a, tile)
+                a = kquant.dequantize_tiles(qa, a_scale, tile)
+            else:
+                a = kquant.quantized_view(a, compute_dtype, tile)
+        if b is not None:
+            if compute_dtype == "int8":
+                qb, b_scale = kquant.quantize_tiles(b, tile)
+                b = kquant.dequantize_tiles(qb, b_scale, tile)
+            else:
+                b = kquant.quantized_view(b, compute_dtype, tile)
+        if tau is not None:
+            tau = kquant.widen_tau(tau, compute_dtype, tile)
 
     hier = (levels > 0 or isinstance(norm_a, NormPyramid)
             or isinstance(norm_b, NormPyramid))
@@ -929,8 +1012,9 @@ def plan(
         kidx, nvalid = _maybe_compact(mask, bk.name)
         work = None
     return SpammPlan(tau, norm_a, norm_b, mask, kidx, nvalid, valid_tiles,
-                     work, tile=tile, block_n=block_n, backend=bk.name,
-                     levels=(want if hier else 0))
+                     work, a_scale, b_scale, tile=tile, block_n=block_n,
+                     backend=bk.name, levels=(want if hier else 0),
+                     compute_dtype=compute_dtype)
 
 
 def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
@@ -940,6 +1024,16 @@ def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
     the same plan twice on the same operands is bit-identical to the
     unplanned `kernels.ops.spamm_matmul` — the plan IS that call's first
     half.
+
+    Low-precision plans (`p.compute_dtype`): callers keep passing the
+    ORIGINAL operands — execute owns the cast/quantization. bf16 casts both
+    operands and takes the normal kernel entry points (f32 accumulate is
+    their contract); int8 quantizes per tile (reusing plan-stored scales
+    when present — bit-identical either way, quantization is a pure function
+    of the operand) and drives `matmul_worklist_int8`. Backends without the
+    int8 entry point (jnp/third-party) get the widen-to-f32 fallback: the
+    dequantized f32 view runs the normal path, numerically the product the
+    int8 kernel approximates to a few ulps.
     """
     gm, gk = p.norm_a.shape
     _, gn = p.norm_b.shape
@@ -947,6 +1041,28 @@ def execute(p: SpammPlan, a: jax.Array, b: jax.Array, *, out_dtype=None):
     assert a.shape == (gm * t, gk * t), (a.shape, (gm * t, gk * t))
     assert b.shape == (gk * t, gn * t), (b.shape, (gk * t, gn * t))
     bk = kops.get_backend(p.backend)
+    dtype = getattr(p, "compute_dtype", "float32")
+    if dtype == "int8":
+        a_q, a_s = kquant.quantize_tiles(a, t, scales=p.a_scale)
+        b_q, b_s = kquant.quantize_tiles(b, t, scales=p.b_scale)
+        if (p.work is not None and p.work.step_i is not None
+                and bk.matmul_worklist_int8 is not None):
+            return bk.matmul_worklist_int8(
+                a_q, b_q, a_s, b_s, p.work, p.tile, p.block_n,
+                out_dtype or jnp.float32)
+        # widen-to-f32 fallback: dequantize and take the normal path
+        a = kquant.dequantize_tiles(a_q, a_s, t)
+        b = kquant.dequantize_tiles(b_q, b_s, t)
+    elif dtype == "bfloat16":
+        if p.work is not None and bk.matmul_worklist is not None:
+            # the worklist kernel is dtype-blind: bf16 operands feed the
+            # MXU's native bf16×bf16→f32 path, accumulator stays f32
+            a = a.astype(jnp.bfloat16)
+            b = b.astype(jnp.bfloat16)
+        else:
+            # widen-to-f32 fallback: f32 math over the bf16-rounded values
+            a = a.astype(jnp.bfloat16).astype(jnp.float32)
+            b = b.astype(jnp.bfloat16).astype(jnp.float32)
     if p.work is not None and bk.matmul_worklist is not None:
         # ragged path: Σnvalid grid steps, dense mask never materialized
         return bk.matmul_worklist(a, b, p.work, p.tile, p.block_n,
@@ -1007,7 +1123,7 @@ class WeightPlanCache:
 
     def weight_side(self, w, *, tile: int, backend: str,
                     use_mxu: bool = False, levels: int = 0,
-                    block_n: int = 1):
+                    block_n: int = 1, dtype: str = "float32"):
         """(padded_weight, weight_norms) for w, cached on identity.
 
         w may be 2-D (K, N) → normmap (gk, gn), or 3-D batched (B, K, N) —
@@ -1016,17 +1132,31 @@ class WeightPlanCache:
         levels > 0 returns a NormPyramid instead of the plain normmap (for
         3-D weights the pyramid levels carry the batch dim). block_n > 1
         pads N to tile·block_n so the super-column grouping always divides
-        the column grid (the padding is part of the cache key)."""
+        the column grid (the padding is part of the cache key). dtype (a
+        compute dtype) computes the norms from the QUANTIZED weight view —
+        what a low-precision execute will multiply — and is part of the
+        cache key; the returned padded weight stays the original f32 (the
+        executor owns the actual cast/quantization)."""
         bk = kops.get_backend(backend)
+        dtype = kquant.canonical_dtype(dtype)
 
         def compute():
             wp = pad_to_tile(jnp.asarray(w), tile, tile * block_n)
-            if wp.ndim == 3:
-                bsz, kp, np_ = wp.shape
-                nw = bk.norms(wp.reshape(bsz * kp, np_), tile,
+            wv = wp
+            if dtype != "float32":
+                if wp.ndim == 3:
+                    bsz, kp, np_ = wp.shape
+                    wv = kquant.quantized_view(
+                        wp.reshape(bsz * kp, np_), dtype, tile
+                    ).reshape(wp.shape)
+                else:
+                    wv = kquant.quantized_view(wp, dtype, tile)
+            if wv.ndim == 3:
+                bsz, kp, np_ = wv.shape
+                nw = bk.norms(wv.reshape(bsz * kp, np_), tile,
                               use_mxu=use_mxu).reshape(bsz, kp // tile, -1)
             else:
-                nw = bk.norms(wp, tile, use_mxu=use_mxu)
+                nw = bk.norms(wv, tile, use_mxu=use_mxu)
             if levels > 0:
                 # batched pooling (pool_norms_ref pools the trailing 2 dims)
                 nw = NormPyramid.from_normmap(nw, levels, tile=tile)
@@ -1035,7 +1165,7 @@ class WeightPlanCache:
         if not self._cacheable(w):
             return compute()
         key = (id(w), w.shape, str(w.dtype), tile, bk.name, use_mxu, levels,
-               block_n)
+               block_n, dtype)
         ent = self._entries.get(key)
         if ent is not None and ent.weight is w:
             self.hits += 1
@@ -1050,33 +1180,45 @@ class WeightPlanCache:
 
     def plan_for(self, x_padded, w, tau=None, *, valid_ratio=None,
                  tile: int = 64, block_n: int = 1, backend: str = "auto",
-                 use_mxu_norm: bool = False, levels: int = 0):
+                 use_mxu_norm: bool = False, levels: int = 0,
+                 compute_dtype: str = "float32"):
         """Full plan for x @ w with the weight side served from the cache.
         x_padded must already be tile-padded. Returns (plan, padded_weight).
         levels > 0 plans hierarchically with the cached weight pyramid.
+        compute_dtype plans for low-precision execution: the cached weight
+        norms come from the quantized weight view and plan() handles the
+        activation view + τ widening (the weight-side b_scale is recomputed
+        by execute — bit-identical, quantization is pure).
         """
+        compute_dtype = kquant.canonical_dtype(compute_dtype)
         wp, nw = self.weight_side(w, tile=tile, backend=backend,
                                   use_mxu=use_mxu_norm, levels=levels,
-                                  block_n=block_n)
+                                  block_n=block_n, dtype=compute_dtype)
         p = plan(x_padded, None, tau, valid_ratio=valid_ratio, norm_b=nw,
                  tile=tile, block_n=block_n, backend=backend,
-                 use_mxu_norm=use_mxu_norm, levels=levels)
+                 use_mxu_norm=use_mxu_norm, levels=levels,
+                 compute_dtype=compute_dtype)
         return p, wp
 
     def frozen_weight(self, w, *, tau, tile: int = 64, block_n: int = 1,
                       levels: int = 0, backend: str = "auto",
-                      use_mxu: bool = False, store=None):
+                      use_mxu: bool = False, store=None,
+                      dtype: str = "float32"):
         """FrozenWeight for `w` at the given gating config, through the
         memory → store → build tiers. Keyed on the weight's CONTENT
         fingerprint (slices of a stacked parameter hash stably, unlike
-        id()), so repeated engine warm-ups and the precompute CLI agree."""
+        id()), so repeated engine warm-ups and the precompute CLI agree.
+        dtype is the compute dtype the artifact is frozen for (quantized
+        norms + widened gate τ + int8 scale tables) and part of the key."""
         from repro.plans import frozen as _frozen  # circular-safe
         from repro.plans import store as _pstore
 
         store = store if store is not None else self.store
         h = _pstore.fingerprint(w)
         resolved = kops.resolve_backend(backend)
-        key = (h, float(tau), tile, block_n, levels, resolved, use_mxu)
+        dtype = kquant.canonical_dtype(dtype)
+        key = (h, float(tau), tile, block_n, levels, resolved, use_mxu,
+               dtype)
         hit = self._frozen.get(key)
         if hit is not None:
             self.frozen_hits += 1
@@ -1085,11 +1227,13 @@ class WeightPlanCache:
         fw = None
         if store is not None:
             fw = store.get(h, tau=tau, tile=tile, block_n=block_n,
-                           levels=levels, backend=resolved, use_mxu=use_mxu)
+                           levels=levels, backend=resolved, use_mxu=use_mxu,
+                           dtype=dtype)
         if fw is None:
             fw = _frozen.FrozenWeight.build(
                 w, tau, tile=tile, block_n=block_n, levels=levels,
-                backend=resolved, use_mxu=use_mxu, weight_hash=h)
+                backend=resolved, use_mxu=use_mxu, weight_hash=h,
+                compute_dtype=dtype)
             if store is not None:
                 store.put(fw)
         self._frozen[key] = fw

@@ -79,6 +79,7 @@ def spamm(
     backend: str = "auto",
     use_mxu_norm: bool = False,
     out_dtype=None,
+    compute_dtype: str = "float32",
 ):
     """C ≈ A @ B with norm-gated tile skipping. Returns (C, SpammInfo).
 
@@ -87,6 +88,11 @@ def spamm(
     One-shot plan+execute; to amortize the gating phase across repeated
     products, build the plan once with `repro.core.plan.plan` and call
     `repro.core.plan.execute` per product.
+
+    `compute_dtype` selects the GEMM operand precision (float32 | bfloat16 |
+    int8); accumulation is always f32 and the gate stays a superset of the
+    f32 gate (norms from the quantized view, τ widened by the analytic
+    quantization bound — repro.kernels.quantize).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -101,6 +107,7 @@ def spamm(
         valid_ratio=valid_ratio,
         tile=tile, block_n=block_n, backend=backend,
         use_mxu_norm=use_mxu_norm,
+        compute_dtype=compute_dtype,
     )
     c = _plan.execute(p, ap, bp, out_dtype=out_dtype)[:m, :n]
     frac = p.valid_fraction

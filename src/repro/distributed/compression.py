@@ -40,3 +40,55 @@ class Int8EF(NamedTuple):
     def wire_bytes_saved(self, grads) -> float:
         total = sum(g.size for g in jax.tree.leaves(grads))
         return total * (4 - 1)  # f32 → int8 payload
+
+
+# ---------------------------------------------------------------------------
+# SpAMM operand-halo compression (pairs with core.distributed.spamm_rowpart)
+# ---------------------------------------------------------------------------
+# spamm_rowpart replicates B to every device; with compute_dtype != f32 each
+# shard's GEMM only ever sees the per-tile-quantized view of B, so the
+# broadcast can carry the quantized payload + scale table instead of f32.
+# These helpers ARE that wire format: compress on the source, move
+# `halo_wire_bytes` bytes, decompress on each shard. The pair is exactly
+# kernels.quantize's per-tile quantization, so a shard decompressing the
+# halo reproduces bit-for-bit the operand view spamm_rowpart's local plans
+# quantize from their full-precision replica (pure function ⇒ broadcast-
+# then-quantize ≡ quantize-then-broadcast).
+
+def compress_tiles(x, tile: int, dtype: str = "int8"):
+    """Tile-quantized wire format of operand halo `x` (tile-padded 2-D).
+
+    Returns (payload, scales): int8 payload + (gm, gn) f32 scale table for
+    dtype="int8"; bf16 payload + None for "bfloat16"; x itself + None for
+    "float32" (identity — callers need no special case)."""
+    from repro.kernels import quantize as kquant  # deferred: cheap import
+
+    dtype = kquant.canonical_dtype(dtype)
+    if dtype == "int8":
+        return kquant.quantize_tiles(x, tile)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16), None
+    return x, None
+
+
+def decompress_tiles(payload, scales, tile: int):
+    """Inverse of `compress_tiles`: the f32 operand view a shard computes
+    with (the quantized view, not the original — that is the point)."""
+    from repro.kernels import quantize as kquant  # deferred: cheap import
+
+    if payload.dtype == jnp.int8:
+        return kquant.dequantize_tiles(payload, scales, tile)
+    return payload.astype(jnp.float32)
+
+
+def halo_wire_bytes(shape, tile: int, dtype: str = "float32") -> float:
+    """Bytes one replica of a (K, N) operand halo moves on the wire in the
+    `compress_tiles` format (payload + int8's scale table)."""
+    from repro.kernels import quantize as kquant  # deferred: cheap import
+
+    dtype = kquant.canonical_dtype(dtype)
+    k, n = shape
+    payload = float(k) * float(n) * kquant.dtype_itemsize(dtype)
+    if dtype == "int8":
+        payload += (k // tile) * (n // tile) * 4.0  # f32 scale table
+    return payload

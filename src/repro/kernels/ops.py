@@ -69,7 +69,16 @@ class Backend:
       (flattened per-(i, j) work-list with padded per-step tables) and the
       grid is Σnvalid steps, not gm·gn·gk. None ⇒ the executor falls back
       to `matmul` with the dense mask/kidx, so third-party backends keep
-      working unchanged.
+      working unchanged. bf16 execution needs NO separate entry point: the
+      executor passes bf16 operands straight into `matmul_worklist`/`matmul`
+      (f32 accumulate is the kernels' contract regardless of input dtype).
+    matmul_worklist_int8(a_q, b_q, a_scale, b_scale,
+                         work, tile, block_n, out_dtype) → (M, N) out_dtype
+      the int8 tensor-core path: per-tile-quantized int8 operands + f32
+      scale tables (kernels/quantize.py), int8×int8→int32 MXU dots
+      dequantized into the f32 accumulator. None ⇒ the executor widens to
+      f32 (dequantizes and takes the normal path), so `jnp`/third-party
+      backends keep working at identical numerics-of-record.
     """
     name: str
     norms: Callable[..., jax.Array]
@@ -77,6 +86,7 @@ class Backend:
     needs_compaction: bool = True
     pyramid_norms: Callable[..., tuple] = None
     matmul_worklist: Callable[..., jax.Array] = None
+    matmul_worklist_int8: Callable[..., jax.Array] = None
 
 
 def _jnp_norms(x, tile, use_mxu=False):
@@ -141,6 +151,19 @@ def _pallas_matmul_worklist(interpret):
     return matmul_worklist
 
 
+def _pallas_matmul_worklist_int8(interpret):
+    def matmul_worklist_int8(a_q, b_q, a_scale, b_scale, work, tile, block_n,
+                             out_dtype):
+        return _spamm_mm.spamm_mm_worklist_int8(
+            a_q, b_q, a_scale, b_scale,
+            work.step_i, work.step_j, work.step_k, work.step_flags,
+            tile=tile, block_n=block_n, out_dtype=out_dtype,
+            interpret=interpret,
+        )
+
+    return matmul_worklist_int8
+
+
 BACKENDS = {
     # jnp leaves pyramid_norms unset: the norms() + pool_norms_ref fallback
     # in pyramid_norms() below IS the jnp implementation (one copy to
@@ -150,10 +173,12 @@ BACKENDS = {
     "jnp": Backend("jnp", _jnp_norms, _jnp_matmul, needs_compaction=False),
     "interpret": Backend("interpret", _pallas_norms(True), _pallas_matmul(True),
                          pyramid_norms=_pallas_pyramid_norms(True),
-                         matmul_worklist=_pallas_matmul_worklist(True)),
+                         matmul_worklist=_pallas_matmul_worklist(True),
+                         matmul_worklist_int8=_pallas_matmul_worklist_int8(True)),
     "pallas": Backend("pallas", _pallas_norms(False), _pallas_matmul(False),
                       pyramid_norms=_pallas_pyramid_norms(False),
-                      matmul_worklist=_pallas_matmul_worklist(False)),
+                      matmul_worklist=_pallas_matmul_worklist(False),
+                      matmul_worklist_int8=_pallas_matmul_worklist_int8(False)),
 }
 
 VALID_BACKENDS = ("auto", *BACKENDS)

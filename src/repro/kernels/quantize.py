@@ -1,0 +1,180 @@
+"""Per-tile quantization + quantization-aware gate widening for the
+mixed-precision worklist kernels (paper Alg. 3 generalized to bf16/int8).
+
+The SpAMM gate decides from *norms of what the kernel will actually
+multiply*. When the kernel consumes low-precision operands, two things must
+stay consistent:
+
+  1. the norm pyramid is computed (in f32, once, at plan/freeze time) from
+     the quantize-dequantized operand view — the exact values the MXU sees —
+     so `valid_fraction`, τ-search and load-balance estimates describe the
+     executed product, not a phantom f32 one;
+  2. the threshold is *widened* (lowered) by the analytic per-tile
+     quantization error bound, so the low-precision gate is provably
+     conservative: it never drops a tile the f32 gate keeps (the superset
+     property pinned by tests/test_spamm_properties.py).
+
+Quantization scheme (int8): symmetric per-(tile × tile_n)-tile scaling,
+    scale = max(amax, tiny) / 127,   q = clip(round(x / scale), -127, 127)
+so dequantized values are `q * scale` with |error| ≤ scale/2 elementwise and
+quantize→dequantize→quantize is idempotent (amax maps to ±127 exactly).
+Scales are f32 and ride along as (grid_m, grid_n) tables — the kernel's
+scalar-prefetch operands and the `FrozenWeight` artifact's `b_scale` child.
+
+Gate-widening math. With Q(x) the dtype's rounded view of a tile x,
+‖Q(x)‖_F ≥ (1 − eps)·‖x‖_F where eps bounds the relative Frobenius error:
+
+  float32:  eps = 0             (identity)
+  bfloat16: eps = 2⁻⁸           (unit roundoff, 1+7 significand bits:
+                                 elementwise |Q(x)−x| ≤ 2⁻⁸·|x|)
+  int8:     eps = √(t·tn)/254   (t·tn tile elements, each off by ≤ scale/2 =
+                                 amax/254, so ‖Q(x)−x‖_F ≤ √(t·tn)·amax/254,
+                                 and amax ≤ ‖x‖_F; capped at 1)
+
+so if the f32 gate keeps (i, j, k): na·nb ≥ τ, then the quantized norms obey
+na_q·nb_q ≥ (1−eps_a)(1−eps_b)·na·nb ≥ τ·(1−eps_a)(1−eps_b) = τ' — gating
+the quantized norms at the widened τ' keeps every f32-surviving tile.
+τ ≤ 0 keeps *everything* at any precision and is left unwidened (the
+multiplicative form would move a negative τ the wrong way).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# canonical dtype names accepted across the pipeline (configs, CLIs, store
+# keys); everything resolves through canonical_dtype() before use
+_DTYPE_ALIASES = {
+    "float32": "float32", "f32": "float32", "fp32": "float32",
+    "bfloat16": "bfloat16", "bf16": "bfloat16",
+    "int8": "int8", "i8": "int8",
+}
+COMPUTE_DTYPES = ("float32", "bfloat16", "int8")
+
+# tiny amax floor so all-zero tiles get a harmless nonzero scale instead of
+# a divide-by-zero (their q is all zeros either way)
+_TINY = 1e-30
+
+
+def canonical_dtype(dtype) -> str:
+    """Resolve a user-facing dtype spec to one of COMPUTE_DTYPES."""
+    if dtype is None:
+        return "float32"
+    name = dtype if isinstance(dtype, str) else jnp.dtype(dtype).name
+    try:
+        return _DTYPE_ALIASES[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"compute dtype {dtype!r} not one of {sorted(set(_DTYPE_ALIASES))}"
+        ) from None
+
+
+def dtype_itemsize(dtype) -> int:
+    """Bytes per element moved by the GEMM inputs at this compute dtype."""
+    return {"float32": 4, "bfloat16": 2, "int8": 1}[canonical_dtype(dtype)]
+
+
+# ---------------------------------------------------------------------------
+# int8 per-tile quantization
+# ---------------------------------------------------------------------------
+
+def tile_absmax(x: jax.Array, tile: int, tile_n: int | None = None) -> jax.Array:
+    """Per-(tile × tile_n)-tile max|x|: (M//tile, N//tile_n) f32."""
+    tile_n = tile if tile_n is None else tile_n
+    m, n = x.shape
+    gm, gn = m // tile, n // tile_n
+    x4 = jnp.abs(x.astype(jnp.float32)).reshape(gm, tile, gn, tile_n)
+    return jnp.max(x4, axis=(1, 3))
+
+
+def quantize_tiles(
+    x: jax.Array,
+    tile: int,
+    tile_n: int | None = None,
+    *,
+    scales: jax.Array | None = None,
+):
+    """Symmetric per-tile int8 quantization of a 2-D operand.
+
+    x: (M, N), M % tile == 0 == N % tile_n. Returns (q, scales) with q (M, N)
+    int8 and scales (M//tile, N//tile_n) f32. Pass precomputed `scales`
+    (e.g. from a `FrozenWeight`) to reuse them; quantization is a pure
+    function of (x, scales), so recomputing gives bit-identical results.
+    """
+    tile_n = tile if tile_n is None else tile_n
+    m, n = x.shape
+    gm, gn = m // tile, n // tile_n
+    if scales is None:
+        scales = jnp.maximum(tile_absmax(x, tile, tile_n), _TINY) / 127.0
+    x4 = x.astype(jnp.float32).reshape(gm, tile, gn, tile_n)
+    q = jnp.clip(
+        jnp.round(x4 / scales[:, None, :, None]), -127.0, 127.0
+    ).astype(jnp.int8)
+    return q.reshape(m, n), scales
+
+
+def dequantize_tiles(
+    q: jax.Array, scales: jax.Array, tile: int, tile_n: int | None = None
+) -> jax.Array:
+    """Inverse of quantize_tiles: (M, N) f32 from int8 codes + tile scales."""
+    tile_n = tile if tile_n is None else tile_n
+    m, n = q.shape
+    gm, gn = m // tile, n // tile_n
+    q4 = q.astype(jnp.float32).reshape(gm, tile, gn, tile_n)
+    return (q4 * scales[:, None, :, None]).reshape(m, n)
+
+
+def quantized_view(
+    x: jax.Array,
+    dtype,
+    tile: int,
+    tile_n: int | None = None,
+    *,
+    scales: jax.Array | None = None,
+) -> jax.Array:
+    """The f32 view of what the kernel will actually multiply at `dtype`:
+    identity for float32, round-trip through bf16 / per-tile int8 otherwise.
+    Norm pyramids for low-precision gating are computed from THIS (in f32),
+    so the gate reasons about the executed values."""
+    dtype = canonical_dtype(dtype)
+    if dtype == "float32":
+        return x
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    q, s = quantize_tiles(x, tile, tile_n, scales=scales)
+    return dequantize_tiles(q, s, tile, tile_n)
+
+
+# ---------------------------------------------------------------------------
+# quantization-aware gate widening
+# ---------------------------------------------------------------------------
+
+def gate_eps(dtype, tile: int, tile_n: int | None = None) -> float:
+    """Relative per-tile Frobenius-norm quantization error bound eps such
+    that ‖Q(x)‖_F ≥ (1 − eps)·‖x‖_F (see module docstring)."""
+    dtype = canonical_dtype(dtype)
+    if dtype == "float32":
+        return 0.0
+    if dtype == "bfloat16":
+        return 2.0 ** -8
+    tile_n = tile if tile_n is None else tile_n
+    # ‖Q(x)−x‖_F ≤ √(t·tn)·scale/2 = √(t·tn)·amax/254 ≤ √(t·tn)·‖x‖_F/254
+    return min(1.0, math.sqrt(tile * tile_n) / 254.0)
+
+
+def widen_tau(tau, dtype, tile: int, tile_n: int | None = None):
+    """τ' = τ·(1−eps_a)(1−eps_b) for τ > 0 (τ ≤ 0 gates nothing out at any
+    precision and is left alone). Gating quantized norms at τ' provably keeps
+    every tile the f32 gate at τ keeps. Both operands are assumed quantized
+    at the same dtype; float32 returns τ unchanged."""
+    e = gate_eps(dtype, tile, tile_n)
+    if e == 0.0:
+        return tau
+    factor = (1.0 - e) ** 2
+    if isinstance(tau, jax.core.Tracer):
+        return jnp.where(tau > 0, tau * factor, tau)
+    t = float(np.asarray(tau))
+    return t * factor if t > 0 else t

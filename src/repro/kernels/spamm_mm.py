@@ -41,6 +41,31 @@ surviving triples (no dense-bitmap sort); traced plans fall back to the
 dense `kidx` tables + `spamm_mm`. Serving callers reuse the plan
 (weight-side artifacts via `repro.core.plan.WeightPlanCache`) across
 repeated products.
+
+Dtype contract (paper Alg. 3's tensor-core path, generalized):
+
+  input dtype × accumulate dtype × flush cast — the accumulator is ALWAYS
+  f32 in VMEM regardless of input dtype, and the FLUSH step casts it to
+  `out_dtype` exactly once per output tile. Three input precisions:
+
+  * f32:  `spamm_mm_worklist` as-is. MXU accumulates in f32.
+  * bf16: the SAME `spamm_mm_worklist` entry point — pass bf16 `a`/`b` and
+    the `jnp.dot(..., preferred_element_type=f32)` body feeds the MXU's
+    native bf16×bf16→f32 path. No kernel change: the flag-bit step-table
+    design is dtype-blind. On inputs exactly representable in bf16 the
+    result is bit-identical to the f32 run (each product of two 8-bit
+    significands is exact in f32, and the ascending-k accumulation order
+    is unchanged); otherwise it differs only by the input rounding, which
+    the quantization-aware gate accounts for (kernels/quantize.py).
+  * int8: `spamm_mm_worklist_int8` — symmetric per-(tile × tile)-tile
+    quantized operands (see kernels/quantize.py: q = clip(round(x/scale)),
+    scale = amax/127) with two extra f32 scalar-prefetch tables `a_scale`
+    (gm, gk) and `b_scale` (gk, gn_fine; PER FINE TILE even when
+    block_n > 1, so the dequantization and the gate's error bound stay at
+    tile granularity). Each step does an int8×int8→int32 MXU dot, then
+    scales into the f32 accumulator: acc += i32 · a_scale[i,k] ·
+    b_scale[k, j·block_n + c] per fine output column group c. The flush
+    cast and zero-aliasing behavior are identical to the f32 kernel.
 """
 from __future__ import annotations
 
@@ -249,3 +274,125 @@ def spamm_mm_worklist(
         name="spamm_mm_worklist",
     )(step_i, step_j, step_k, step_flags,
       jnp.zeros((m, n), out_dtype), a, b)
+
+
+def _spamm_mm_worklist_int8_kernel(
+    si_ref, sj_ref, sk_ref, fl_ref, sa_ref, sb_ref,
+    zero_ref, a_ref, b_ref, o_ref, acc_ref, *, block_n: int,
+):
+    del zero_ref  # only aliased into o_ref so unvisited tiles stay zero
+    s = pl.program_id(0)
+    f = fl_ref[s]
+
+    @pl.when((f & STEP_INIT) != 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((f & STEP_ACC) != 0)
+    def _compute():
+        i, j, kk = si_ref[s], sj_ref[s], sk_ref[s]
+        # int8 × int8 → int32 on the MXU (the tensor-core IMMA shape of
+        # paper Alg. 3), then dequantize into the f32 accumulator
+        prod = jax.lax.dot_general(
+            a_ref[...], b_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32) * sa_ref[i, kk]
+        t = acc_ref.shape[0]
+        if block_n == 1:
+            acc_ref[...] += prod * sb_ref[kk, j]
+        else:
+            # b scales are per FINE tile: static unroll over the block_n
+            # column groups of the (tile, tile·block_n) super-column block
+            sb = jnp.stack(
+                [sb_ref[kk, j * block_n + c] for c in range(block_n)]
+            )  # (block_n,)
+            prod = prod.reshape(t, block_n, t) * sb[None, :, None]
+            acc_ref[...] += prod.reshape(t, block_n * t)
+
+    @pl.when((f & STEP_FLUSH) != 0)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "out_dtype", "interpret", "block_n"),
+)
+def spamm_mm_worklist_int8(
+    a_q: jax.Array,
+    b_q: jax.Array,
+    a_scale: jax.Array,
+    b_scale: jax.Array,
+    step_i: jax.Array,
+    step_j: jax.Array,
+    step_k: jax.Array,
+    step_flags: jax.Array,
+    *,
+    tile: int = 64,
+    block_n: int = 1,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Int8 ragged masked matmul: the work-list kernel at IMMA precision.
+
+    a_q: (M, K) int8, b_q: (K, N) int8 — symmetric per-(tile × tile)-tile
+    quantized (kernels/quantize.py). a_scale: (M//tile, K//tile) f32,
+    b_scale: (K//tile, N//tile) f32 — note b_scale is per FINE tile even
+    when block_n > 1 (the kernel unrolls the block_n column groups), so the
+    gate's per-tile error bound holds at tile granularity. Step tables as in
+    `spamm_mm_worklist`. Accumulation is f32 in VMEM (int32 MXU products ×
+    scales), cast to out_dtype on FLUSH. C ≈ dequant(a_q) @ dequant(b_q)
+    restricted to the work-list: each int32 tile product is EXACT (no f32
+    rounding inside the tile dot, unlike running the f32 kernel on the
+    dequantized operands), so the two differ only by f32 multiply/add
+    rounding — within a few ulps of each other.
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    assert m % tile == 0 and k % tile == 0 and n % (tile * block_n) == 0, (
+        a_q.shape, b_q.shape, tile, block_n)
+    gm, gk, gn = m // tile, k // tile, n // tile
+    assert a_scale.shape == (gm, gk), (a_scale.shape, (gm, gk))
+    assert b_scale.shape == (gk, gn), (b_scale.shape, (gk, gn))
+    s = step_i.shape[0]
+    assert step_j.shape == step_k.shape == step_flags.shape == (s,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec(
+                (tile, tile * block_n),
+                lambda s, si, sj, sk, fl, sa, sb: (si[s], sj[s]),
+            ),
+            pl.BlockSpec(
+                (tile, tile), lambda s, si, sj, sk, fl, sa, sb: (si[s], sk[s])
+            ),
+            pl.BlockSpec(
+                (tile, tile * block_n),
+                lambda s, si, sj, sk, fl, sa, sb: (sk[s], sj[s]),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (tile, tile * block_n),
+            lambda s, si, sj, sk, fl, sa, sb: (si[s], sj[s]),
+        ),
+        scratch_shapes=[pltpu.VMEM((tile, tile * block_n), jnp.float32)],
+    )
+    kernel = functools.partial(_spamm_mm_worklist_int8_kernel, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # index 6 counts the 6 scalar-prefetch tables; the zeros operand
+        # seeds the aliased output buffer (unvisited tiles stay zero)
+        input_output_aliases={6: 0},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="spamm_mm_worklist_int8",
+    )(step_i, step_j, step_k, step_flags, a_scale, b_scale,
+      jnp.zeros((m, n), out_dtype), a_q, b_q)

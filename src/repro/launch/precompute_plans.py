@@ -39,6 +39,11 @@ def main():
     ap.add_argument("--spamm-tile", type=int, default=32)
     ap.add_argument("--spamm-backend", default="auto")
     ap.add_argument("--spamm-levels", type=int, default=0)
+    ap.add_argument("--spamm-dtype", default="float32",
+                    choices=("float32", "bfloat16", "bf16", "int8"),
+                    help="GEMM compute dtype the plans are frozen for "
+                         "(quantized norms + widened gate τ; int8 also "
+                         "stores the per-tile weight scale tables)")
     ap.add_argument("--block-n", type=int, default=1)
     args = ap.parse_args()
 
@@ -53,7 +58,7 @@ def main():
     params = M.init_params(cfg, pcfg, jax.random.key(args.seed))
     scfg = SpammConfig(enable=True, tau=args.tau, tile=args.spamm_tile,
                        backend=args.spamm_backend, levels=args.spamm_levels,
-                       block_n=args.block_n)
+                       block_n=args.block_n, dtype=args.spamm_dtype)
     store = PlanStore(args.plan_store)
     t0 = time.time()
     n = populate(store, params, scfg)

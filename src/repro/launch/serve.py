@@ -38,6 +38,13 @@ def main():
     ap.add_argument("--spamm-levels", type=int, default=0,
                     help="norm-pyramid coarsening steps for hierarchical "
                          "gating (0 = flat); coarse tile = tile · 2^levels")
+    ap.add_argument("--spamm-dtype", default="float32",
+                    choices=("float32", "bfloat16", "bf16", "int8"),
+                    help="GEMM compute dtype for the gated GEMMs (f32 "
+                         "accumulate; gate stays a conservative superset of "
+                         "the f32 gate via the widened τ). Must match the "
+                         "plan store's precompute dtype or every lookup "
+                         "misses")
     ap.add_argument("--plan-store", default=None,
                     help="on-disk PlanStore directory of precomputed frozen "
                          "weight plans (populate offline with "
@@ -79,7 +86,8 @@ def main():
                                 tile=args.spamm_tile,
                                 backend=args.spamm_backend,
                                 block_n=args.spamm_block_n,
-                                levels=args.spamm_levels)
+                                levels=args.spamm_levels,
+                                dtype=args.spamm_dtype)
     reshard_cfg = None
     if args.reshard_every > 0:
         if spamm_cfg is None:
@@ -121,6 +129,13 @@ def main():
               f"decode_valid_fraction={dvf_s} "
               f"decode_gated_gemms={sp['decode_gated_gemms']} "
               f"cache={sp['plan_cache_hits']}h/{sp['plan_cache_misses']}m")
+        gb = sp.get("gemm_bytes_moved")
+        dgb = sp.get("decode_gemm_bytes_moved")
+        if gb is not None or dgb is not None:
+            gb_s = f"{gb/1e6:.3f}MB" if gb is not None else "n/a"
+            dgb_s = f"{dgb/1e6:.3f}MB" if dgb is not None else "n/a"
+            print(f"  spamm dtype={sp.get('compute_dtype', 'float32')}: "
+                  f"prefill_gemm_bytes={gb_s} decode_gemm_bytes={dgb_s}")
         if "plan_store_hits" in sp:
             print(f"  plan_store: {sp['plan_store_hits']}h/"
                   f"{sp['plan_store_misses']}m")

@@ -37,11 +37,14 @@ import numpy as np
 
 from repro.core.plan import NormPyramid, _bucket, pad_to_tile
 from repro.kernels import ops as kops
+from repro.kernels import quantize as kquant
 
 # Bump when the on-disk/for_rows encoding changes incompatibly: PlanStore
 # refuses to load artifacts written under a different version (satellite:
 # clear error, never silent wrong-plan execution).
-PLAN_FORMAT_VERSION = 1
+# v2: compute-dtype keying + int8 b_scale tables + quantization-widened
+#     gate τ — pre-dtype (v1) stores are refused at PlanStore open.
+PLAN_FORMAT_VERSION = 2
 
 
 @jax.tree_util.register_pytree_node_class
@@ -56,22 +59,31 @@ class FrozenWeight:
                (the traced activation gate tests against this table)
       kj_k/kj_j (W,) int32 — weight-admissible (k, j) tile pairs, sorted by
                (j, k) so `for_rows` emits pair-major ascending-k steps
+      b_scale  (gk, gn) f32 per-FINE-tile int8 scales of the padded weight,
+               or None for float32/bfloat16 artifacts — frozen at build time
+               so serving quantizes the weight bit-identically every start
 
     Static metadata (aux): tile, block_n, levels (coarsening steps),
     backend (resolved name), wshape (true K, N), padded (Kp, Np),
-    weight_hash (content fingerprint, "" when unknown), version.
+    weight_hash (content fingerprint, "" when unknown), version, and
+    compute_dtype — the precision this artifact was frozen for: its normmaps
+    describe the QUANTIZED weight view and `for_rows` bakes the
+    quantization-widened gate τ into the FrozenPlan (tau here stays the
+    REQUESTED τ; it is the store-addressing value).
     """
 
-    def __init__(self, tau, levels, nbmax, kj_k, kj_j, *, tile: int,
-                 block_n: int, num_levels: int, backend: str,
+    def __init__(self, tau, levels, nbmax, kj_k, kj_j, b_scale=None, *,
+                 tile: int, block_n: int, num_levels: int, backend: str,
                  wshape: Tuple[int, int], padded: Tuple[int, int],
                  use_mxu: bool = False, weight_hash: str = "",
-                 version: int = PLAN_FORMAT_VERSION):
+                 version: int = PLAN_FORMAT_VERSION,
+                 compute_dtype: str = "float32"):
         self.tau = tau
         self.levels = tuple(levels)
         self.nbmax = nbmax
         self.kj_k = kj_k
         self.kj_j = kj_j
+        self.b_scale = b_scale
         self.tile = tile
         self.block_n = block_n
         self.num_levels = num_levels
@@ -81,25 +93,27 @@ class FrozenWeight:
         self.use_mxu = use_mxu
         self.weight_hash = weight_hash
         self.version = version
+        self.compute_dtype = compute_dtype
         self._rows_cache: dict = {}
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        children = (self.tau, self.levels, self.nbmax, self.kj_k, self.kj_j)
+        children = (self.tau, self.levels, self.nbmax, self.kj_k, self.kj_j,
+                    self.b_scale)
         aux = (self.tile, self.block_n, self.num_levels, self.backend,
                self.wshape, self.padded, self.use_mxu, self.weight_hash,
-               self.version)
+               self.version, self.compute_dtype)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        tau, levels, nbmax, kj_k, kj_j = children
+        tau, levels, nbmax, kj_k, kj_j, b_scale = children
         (tile, block_n, num_levels, backend, wshape, padded, use_mxu, wh,
-         ver) = aux
-        return cls(tau, levels, nbmax, kj_k, kj_j, tile=tile, block_n=block_n,
-                   num_levels=num_levels, backend=backend, wshape=wshape,
-                   padded=padded, use_mxu=use_mxu, weight_hash=wh,
-                   version=ver)
+         ver, dtype) = aux
+        return cls(tau, levels, nbmax, kj_k, kj_j, b_scale, tile=tile,
+                   block_n=block_n, num_levels=num_levels, backend=backend,
+                   wshape=wshape, padded=padded, use_mxu=use_mxu,
+                   weight_hash=wh, version=ver, compute_dtype=dtype)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -132,24 +146,41 @@ class FrozenWeight:
             "levels": self.num_levels,
             "backend": self.backend,
             "use_mxu": self.use_mxu,
+            "dtype": self.compute_dtype,
         }
 
     # -- construction -------------------------------------------------------
     @classmethod
     def build(cls, w, tau, *, tile: int = 64, block_n: int = 1,
               levels: int = 0, backend: str = "auto", use_mxu: bool = False,
-              weight_hash: str = "") -> "FrozenWeight":
+              weight_hash: str = "",
+              compute_dtype: str = "float32") -> "FrozenWeight":
         """Freeze the weight side of `x @ w` gating at threshold `tau`.
 
         Runs the backend's get-norm ONCE (plus `levels` pooling reductions)
         — this is the offline "planning pass" that serving then never pays.
+
+        compute_dtype freezes for low-precision execution: norms come from
+        the quantized weight view (f32 norms OF the quantized values, the
+        "compute the pyramid in f32 once at freeze time" half of
+        quantization-aware gating), int8 stores the per-tile scale table,
+        and `for_rows` widens the gate τ (kernels/quantize.py) so the
+        low-precision gate is conservative w.r.t. the f32 gate at `tau`.
         """
         bk = kops.get_backend(backend)
+        compute_dtype = kquant.canonical_dtype(compute_dtype)
         w = jnp.asarray(w)
         assert w.ndim == 2, w.shape
         k, n = w.shape
         wp = pad_to_tile(w, tile, tile * block_n)
-        base = bk.norms(wp, tile, use_mxu=use_mxu)
+        b_scale = None
+        wv = wp
+        if compute_dtype == "int8":
+            qb, b_scale = kquant.quantize_tiles(wp, tile)
+            wv = kquant.dequantize_tiles(qb, b_scale, tile)
+        elif compute_dtype != "float32":
+            wv = kquant.quantized_view(wp, compute_dtype, tile)
+        base = bk.norms(wv, tile, use_mxu=use_mxu)
         pyr = NormPyramid.from_normmap(base, levels, tile=tile)
         base_np = np.asarray(base, np.float32)
         gk, gnp = base_np.shape
@@ -172,10 +203,12 @@ class FrozenWeight:
             jnp.asarray(nbmax),
             jnp.asarray(kk[order], jnp.int32),
             jnp.asarray(jj[order], jnp.int32),
+            b_scale,
             tile=tile, block_n=block_n, num_levels=levels, backend=bk.name,
             wshape=(int(k), int(n)),
             padded=(int(wp.shape[0]), int(wp.shape[1])),
             use_mxu=use_mxu, weight_hash=weight_hash,
+            compute_dtype=compute_dtype,
         )
 
     # -- shape specialization -----------------------------------------------
@@ -225,16 +258,24 @@ class FrozenWeight:
         ends = np.append(starts[1:], s) - 1
         seg_first = np.repeat(starts, counts).astype(np.int32)
         seg_last = np.repeat(ends, counts).astype(np.int32)
+        # the FrozenPlan's tau is the GATE threshold: for low-precision
+        # artifacts that is the quantization-widened τ' ≤ τ, so the traced
+        # gate over quantized norms keeps a superset of the f32-gated set
+        # (self.tau stays the requested τ — the store-addressing value)
+        gate_tau = kquant.widen_tau(
+            float(np.asarray(self.tau)), self.compute_dtype, self.tile)
         fp = FrozenPlan(
-            self.tau, self.levels[0], self.nbmax,
+            jnp.asarray(gate_tau, jnp.float32), self.levels[0], self.nbmax,
             jnp.asarray(step_i.astype(np.int32)),
             jnp.asarray(step_j.astype(np.int32)),
             jnp.asarray(step_k.astype(np.int32)),
             jnp.asarray(step_real),
             jnp.asarray(seg_first), jnp.asarray(seg_last),
+            self.b_scale,
             tile=self.tile, block_n=self.block_n, num_levels=self.num_levels,
             backend=self.backend, gm=gm, gk=gk, gnb=gnb,
             wshape=self.wshape, version=self.version,
+            compute_dtype=self.compute_dtype,
         )
         self._rows_cache[key] = fp
         return fp
@@ -258,16 +299,25 @@ class FrozenPlan:
                    step's (i, j) segment: what lets the traced activation
                    gate derive INIT/FLUSH flags with pure static-shape
                    cumsum/gather arithmetic
+      b_scale      (gk, gnp) f32 int8 weight scale table, or None — rides
+                   into the SpammPlan so execute quantizes the weight with
+                   the frozen scales (bit-stable across restarts)
+
+    NOTE: `tau` here is the GATE threshold — for low-precision artifacts the
+    quantization-widened τ', not the requested τ (which lives on the
+    FrozenWeight / in the store address).
 
     Static metadata (aux): tile, block_n, num_levels, backend, gm, gk, gnb,
-    wshape, version. Leading batch dims on every child are allowed (stacked
-    per-layer plans riding a lax.scan — see `stack_plans`).
+    wshape, version, compute_dtype. Leading batch dims on every child are
+    allowed (stacked per-layer plans riding a lax.scan — see `stack_plans`).
     """
 
     def __init__(self, tau, norm_b, nbmax, step_i, step_j, step_k, step_real,
-                 seg_first, seg_last, *, tile: int, block_n: int,
-                 num_levels: int, backend: str, gm: int, gk: int, gnb: int,
-                 wshape: Tuple[int, int], version: int = PLAN_FORMAT_VERSION):
+                 seg_first, seg_last, b_scale=None, *, tile: int,
+                 block_n: int, num_levels: int, backend: str, gm: int,
+                 gk: int, gnb: int, wshape: Tuple[int, int],
+                 version: int = PLAN_FORMAT_VERSION,
+                 compute_dtype: str = "float32"):
         self.tau = tau
         self.norm_b = norm_b
         self.nbmax = nbmax
@@ -277,6 +327,7 @@ class FrozenPlan:
         self.step_real = step_real
         self.seg_first = seg_first
         self.seg_last = seg_last
+        self.b_scale = b_scale
         self.tile = tile
         self.block_n = block_n
         self.num_levels = num_levels
@@ -286,21 +337,24 @@ class FrozenPlan:
         self.gnb = gnb
         self.wshape = tuple(wshape)
         self.version = version
+        self.compute_dtype = compute_dtype
 
     def tree_flatten(self):
         children = (self.tau, self.norm_b, self.nbmax, self.step_i,
                     self.step_j, self.step_k, self.step_real, self.seg_first,
-                    self.seg_last)
+                    self.seg_last, self.b_scale)
         aux = (self.tile, self.block_n, self.num_levels, self.backend,
-               self.gm, self.gk, self.gnb, self.wshape, self.version)
+               self.gm, self.gk, self.gnb, self.wshape, self.version,
+               self.compute_dtype)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        tile, block_n, num_levels, backend, gm, gk, gnb, wshape, ver = aux
+        (tile, block_n, num_levels, backend, gm, gk, gnb, wshape, ver,
+         dtype) = aux
         return cls(*children, tile=tile, block_n=block_n,
                    num_levels=num_levels, backend=backend, gm=gm, gk=gk,
-                   gnb=gnb, wshape=wshape, version=ver)
+                   gnb=gnb, wshape=wshape, version=ver, compute_dtype=dtype)
 
     @property
     def num_steps(self) -> int:
@@ -309,11 +363,13 @@ class FrozenPlan:
 
 def freeze_weight(w, tau, *, tile: int = 64, block_n: int = 1,
                   levels: int = 0, backend: str = "auto",
-                  use_mxu: bool = False, weight_hash: str = "") -> FrozenWeight:
+                  use_mxu: bool = False, weight_hash: str = "",
+                  compute_dtype: str = "float32") -> FrozenWeight:
     """Convenience alias for `FrozenWeight.build`."""
     return FrozenWeight.build(w, tau, tile=tile, block_n=block_n,
                               levels=levels, backend=backend, use_mxu=use_mxu,
-                              weight_hash=weight_hash)
+                              weight_hash=weight_hash,
+                              compute_dtype=compute_dtype)
 
 
 def stack_plans(fps) -> FrozenPlan:

@@ -48,15 +48,18 @@ def _freeze_one(w, scfg, *, cache=None, store: Optional[PlanStore] = None,
     """One weight → FrozenWeight, through the cache/store tiers when given."""
     kw = dict(tau=scfg.tau, tile=scfg.tile, block_n=scfg.block_n,
               levels=getattr(scfg, "levels", 0), backend=scfg.backend)
+    dtype = getattr(scfg, "dtype", "float32")
     if cache is not None:
-        return cache.frozen_weight(w, use_mxu=use_mxu, store=store, **kw)
+        return cache.frozen_weight(w, use_mxu=use_mxu, store=store,
+                                   dtype=dtype, **kw)
     h = fingerprint(w)
     if store is not None:
         # may raise PlanStoreError on stale artifacts
-        fw = store.get(h, use_mxu=use_mxu, **kw)
+        fw = store.get(h, use_mxu=use_mxu, dtype=dtype, **kw)
         if fw is not None:
             return fw
-    fw = FrozenWeight.build(w, use_mxu=use_mxu, weight_hash=h, **kw)
+    fw = FrozenWeight.build(w, use_mxu=use_mxu, weight_hash=h,
+                            compute_dtype=dtype, **kw)
     if store is not None:
         store.put(fw)
     return fw

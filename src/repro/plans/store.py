@@ -5,12 +5,16 @@ the checkpoint module's atomicity idiom — a crashed put can never be
 mistaken for a complete artifact).
 
 The key is a content address: sha256 over the weight fingerprint AND the
-full gating config echo (τ, tile, block_n, levels, resolved backend, format
-version). Changing the weight or ANY config field therefore changes the key
-— a stale artifact is a clean miss, never a silent wrong-plan hit. Loads
-additionally re-validate the manifest: a format-version mismatch or a
-backend that is not in the running registry raises `PlanStoreError` instead
-of handing compiled serving a plan the executor cannot honor.
+full gating config echo (τ, tile, block_n, levels, resolved backend,
+compute dtype, format version). Changing the weight or ANY config field
+therefore changes the key — a stale artifact is a clean miss, never a
+silent wrong-plan hit. Loads additionally re-validate the manifest: a
+format-version mismatch or a backend that is not in the running registry
+raises `PlanStoreError` instead of handing compiled serving a plan the
+executor cannot honor. A root-level STORE_FORMAT.json marker guards the
+whole store: opening a root whose artifacts predate the current format
+(e.g. a pre-dtype-keying v1 store, which has no marker) refuses with
+`PlanStoreError` instead of reading as all-misses.
 """
 from __future__ import annotations
 
@@ -24,7 +28,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels import quantize as kquant
 from repro.plans.frozen import FrozenWeight, PLAN_FORMAT_VERSION
+
+# Root-level format marker. Keys embed the format version, so artifacts
+# written under an older format hash to DIFFERENT keys — without the marker
+# a stale (pre-dtype-keying) store would read as all-misses and silently
+# trigger a full re-freeze into the same root. The marker makes staleness an
+# explicit refusal at open time instead.
+_MARKER = "STORE_FORMAT.json"
 
 
 class PlanStoreError(RuntimeError):
@@ -42,7 +54,7 @@ def fingerprint(w) -> str:
     return h.hexdigest()
 
 
-def _config_echo(tau, tile, block_n, levels, backend, use_mxu) -> dict:
+def _config_echo(tau, tile, block_n, levels, backend, use_mxu, dtype) -> dict:
     return {
         # canonicalize through f32: artifacts carry τ as float32, queries
         # often pass the python double — both must address the same key
@@ -54,6 +66,9 @@ def _config_echo(tau, tile, block_n, levels, backend, use_mxu) -> dict:
         # the get-norm variant changes the stored normmaps' rounding, so it
         # is part of the content address like every other gate-shaping field
         "use_mxu": bool(use_mxu),
+        # the compute dtype changes the stored normmaps (quantized view),
+        # the baked gate τ and the scale tables — a first-class key field
+        "dtype": kquant.canonical_dtype(dtype),
     }
 
 
@@ -70,14 +85,46 @@ class PlanStore:
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self._check_format()
         self.hits = 0
         self.misses = 0
+
+    def _check_format(self):
+        """Refuse stores written under an older format at OPEN time.
+
+        Version is part of each key, so v1 artifacts would never be *hit* —
+        they'd read as clean misses and a warm start would silently refreeze
+        everything next to the stale dirs. A store root that already holds
+        artifacts but no (or a mismatched) marker is therefore an error, not
+        a miss; fresh roots get the current marker written."""
+        mpath = os.path.join(self.root, _MARKER)
+        if os.path.isfile(mpath):
+            with open(mpath) as f:
+                fmt = json.load(f).get("format_version")
+            if fmt != PLAN_FORMAT_VERSION:
+                raise PlanStoreError(
+                    f"plan store at {self.root!r} was written with format "
+                    f"version {fmt!r}; this build reads version "
+                    f"{PLAN_FORMAT_VERSION} — re-run precompute_plans into "
+                    "a fresh root")
+            return
+        if self.keys():
+            # artifact dirs but no marker: a pre-dtype-keying (format v1)
+            # store — refuse rather than silently miss on every load
+            raise PlanStoreError(
+                f"plan store at {self.root!r} predates compute-dtype keying "
+                f"(format version < {PLAN_FORMAT_VERSION}: no {_MARKER}) — "
+                "re-run precompute_plans into a fresh root")
+        with open(mpath, "w") as f:
+            json.dump({"format_version": PLAN_FORMAT_VERSION}, f)
 
     # -- addressing ---------------------------------------------------------
     @staticmethod
     def key_for(weight_hash: str, *, tau, tile: int, block_n: int,
-                levels: int, backend: str, use_mxu: bool = False) -> str:
-        echo = _config_echo(tau, tile, block_n, levels, backend, use_mxu)
+                levels: int, backend: str, use_mxu: bool = False,
+                dtype: str = "float32") -> str:
+        echo = _config_echo(tau, tile, block_n, levels, backend, use_mxu,
+                            dtype)
         blob = json.dumps({"weight": weight_hash, "cfg": echo,
                            "version": PLAN_FORMAT_VERSION}, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:32]
@@ -115,6 +162,8 @@ class PlanStore:
             "kj_k": np.asarray(fw.kj_k),
             "kj_j": np.asarray(fw.kj_j),
         }
+        if fw.b_scale is not None:
+            arrays["b_scale"] = np.asarray(fw.b_scale)
         for l, lv in enumerate(fw.levels):
             arrays[f"level_{l}"] = np.asarray(lv)
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
@@ -135,14 +184,15 @@ class PlanStore:
         return key
 
     def get(self, weight_hash: str, *, tau, tile: int, block_n: int,
-            levels: int, backend: str, use_mxu: bool = False
-            ) -> Optional[FrozenWeight]:
+            levels: int, backend: str, use_mxu: bool = False,
+            dtype: str = "float32") -> Optional[FrozenWeight]:
         """Load an artifact, or None on miss. Raises `PlanStoreError` when
         an artifact exists but its manifest does not match the running code
         (format version / backend registry) — never silently executes a
         wrong or unexecutable plan."""
         key = self.key_for(weight_hash, tau=tau, tile=tile, block_n=block_n,
-                           levels=levels, backend=backend, use_mxu=use_mxu)
+                           levels=levels, backend=backend, use_mxu=use_mxu,
+                           dtype=dtype)
         path = self._dir(key)
         mpath = os.path.join(path, "manifest.json")
         if not os.path.isfile(mpath):
@@ -168,12 +218,14 @@ class PlanStore:
             jnp.asarray(data["nbmax"]),
             jnp.asarray(data["kj_k"], jnp.int32),
             jnp.asarray(data["kj_j"], jnp.int32),
+            jnp.asarray(data["b_scale"]) if "b_scale" in data else None,
             tile=int(man["tile"]), block_n=int(man["block_n"]),
             num_levels=int(man["levels"]), backend=man["backend"],
             wshape=tuple(man["wshape"]), padded=tuple(man["padded"]),
             use_mxu=bool(man.get("use_mxu", False)),
             weight_hash=man["weight_hash"],
             version=int(man["format_version"]),
+            compute_dtype=man.get("dtype", "float32"),
         )
         self.hits += 1
         return fw

@@ -193,22 +193,30 @@ class Engine:
         return jax.tree_util.tree_map_with_path(grow, cache)
 
     def _spamm_stats(self, taps, hits0: int, misses0: int,
-                     store0: Optional[tuple], reshard0: Optional[tuple]):
+                     store0: Optional[tuple], reshard0: Optional[tuple],
+                     byte_taps=()):
         """Per-wave gating stats dict from the drained (phase, fraction)
         taps and the plan-cache/plan-store counter DELTAS across this wave
         (every counter in the dict is per-wave: after first population a
         warm wave reports 0/0 store traffic, never stale lifetime totals).
         With re-sharding on, `resharded`/`reshard_probes` are the wave's
         event deltas and `partition_imbalance` the live partition's
-        predicted imbalance at the last probe."""
+        predicted imbalance at the last probe. `byte_taps` (the context's
+        bytes-moved channel, frozen-path GEMMs only) reports SUMS per phase:
+        bandwidth adds up across GEMMs where fractions average."""
         cache = self.spamm_ctx.cache
         pre = [v for ph, v in taps if ph != "decode"]
         dec = [v for ph, v in taps if ph == "decode"]
+        pre_b = [v for ph, v in byte_taps if ph != "decode"]
+        dec_b = [v for ph, v in byte_taps if ph == "decode"]
         stats = {
             "valid_fraction": float(np.mean(pre)) if pre else None,
             "gated_gemms": len(pre),
             "decode_valid_fraction": float(np.mean(dec)) if dec else None,
             "decode_gated_gemms": len(dec),
+            "compute_dtype": getattr(self.spamm_ctx.cfg, "dtype", "float32"),
+            "gemm_bytes_moved": float(np.sum(pre_b)) if pre_b else None,
+            "decode_gemm_bytes_moved": float(np.sum(dec_b)) if dec_b else None,
             "plan_cache_hits": cache.hits - hits0,
             "plan_cache_misses": cache.misses - misses0,
         }
@@ -290,11 +298,12 @@ class Engine:
                 # closes the collect window even on a failed step so the
                 # context's telemetry can't be left collecting forever
                 jax.effects_barrier()
+                byte_taps = self.spamm_ctx.drain_byte_stats()
                 taps = self.spamm_ctx.end_stats()
                 self.spamm_ctx.set_phase("prefill")
         if collect:
             spamm_meta = self._spamm_stats(taps, hits0, misses0, store0,
-                                           reshard0)
+                                           reshard0, byte_taps)
         results = [np.asarray(o, np.int32) for o in outs]
         for r, toks_out in zip(requests, results):
             r.out = {"tokens": toks_out, "spamm": spamm_meta}

@@ -8,12 +8,12 @@ import numpy as np
 from repro.core import spamm as cs
 
 
-def _run(n, tau, lam=0.8, tile=32):
+def _run(n, tau, lam=0.8, tile=32, compute_dtype="float32"):
     a = cs.exponential_decay(n, lam=lam, seed=0)
     b = cs.exponential_decay(n, lam=lam, seed=1)
     dense = a.astype(np.float64) @ b.astype(np.float64)
     c, info = cs.spamm(jnp.asarray(a), jnp.asarray(b), tau, tile=tile,
-                       backend="jnp")
+                       backend="jnp", compute_dtype=compute_dtype)
     err = np.linalg.norm(np.asarray(c, np.float64) - dense)
     return err, np.linalg.norm(dense), float(info.valid_fraction)
 
@@ -46,3 +46,36 @@ def test_error_norm_scaling_with_n():
     e1, _, _ = _run(256, 1e-2)
     e2, _, _ = _run(1024, 1e-2)
     assert e2 < 8 * max(e1, 1e-12)
+
+
+def test_low_precision_error_is_gating_plus_quantization():
+    """Mixed-precision error law: ‖C_dtype − C_dense‖ ≤ ‖C_f32 − C_dense‖ +
+    the quantization term. The quantization term is bounded by the relative
+    per-element error of the format (bf16: 2⁻⁸; int8 per-tile: ≈ 1/127 of
+    the tile max) times the product's own scale — low precision must not
+    change the ERROR REGIME, only add a precision-sized floor."""
+    n, tau = 512, 1e-2
+    e32, normc, _ = _run(n, tau)
+    # first-order bound on ||A@B − Aq@Bq||_F: eps·(||A||·||B|| + ...)
+    a = cs.exponential_decay(n, lam=0.8, seed=0)
+    b = cs.exponential_decay(n, lam=0.8, seed=1)
+    opn = np.linalg.norm(a) * np.linalg.norm(b)
+    for dtype, eps in (("bfloat16", 2.0 ** -8), ("int8", 1.0 / 127.0)):
+        eq, _, _ = _run(n, tau, compute_dtype=dtype)
+        bound = e32 + 3.0 * eps * opn
+        assert eq <= bound, (dtype, eq, e32, bound)
+        # and the quantization floor is real but small relative to C
+        assert eq / normc < 0.02, (dtype, eq / normc)
+
+
+def test_low_precision_error_still_monotone_in_tau():
+    """The τ-sweep slope survives quantization: above the precision floor,
+    error still grows with τ and never shrinks (the widened gate keeps the
+    work a superset, so more τ ⇒ weakly more skipping at every dtype)."""
+    for dtype in ("bfloat16", "int8"):
+        errs = [_run(256, t, compute_dtype=dtype)[0]
+                for t in (1e-3, 1e-2, 1e-1)]
+        # allow the flat region where the quantization floor dominates τ
+        assert errs[-1] >= errs[0] - 1e-9, (dtype, errs)
+        assert np.all(np.diff(np.log10(np.maximum(errs, 1e-14))) >= -0.05), (
+            dtype, errs)

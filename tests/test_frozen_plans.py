@@ -452,3 +452,44 @@ def test_train_loop_exports_spamm_stats(tmp_path):
     res0 = train(cfg, PCFG, tcfg, ctx, global_batch=2, seq_len=32,
                  log_every=0)
     assert res0.spamm_stats == []
+
+
+def test_store_refuses_pre_dtype_legacy_root(tmp_path):
+    """ISSUE 6 regression: a store root populated under the pre-dtype
+    format (version < 2: artifact dirs but no STORE_FORMAT.json marker)
+    must refuse at OPEN time with PlanStoreError — dtype is part of every
+    key now, so the legacy artifacts would otherwise read as clean misses
+    and a warm start would silently refreeze everything."""
+    import json
+    import shutil
+
+    # fabricate a legacy root: one artifact dir, no marker
+    legacy = tmp_path / "legacy"
+    art = legacy / "deadbeefdeadbeef"
+    art.mkdir(parents=True)
+    with open(art / "manifest.json", "w") as f:
+        json.dump({"format_version": PLAN_FORMAT_VERSION - 1}, f)
+    with pytest.raises(PlanStoreError, match="predates compute-dtype"):
+        PlanStore(str(legacy))
+
+    # a marker with the wrong version refuses too
+    vers = tmp_path / "versioned"
+    vers.mkdir()
+    with open(vers / "STORE_FORMAT.json", "w") as f:
+        json.dump({"format_version": PLAN_FORMAT_VERSION - 1}, f)
+    with pytest.raises(PlanStoreError, match="fresh root"):
+        PlanStore(str(vers))
+
+    # fresh roots self-mark and reopen cleanly (crash-leftover .tmp_* dirs
+    # don't count as artifacts)
+    fresh = tmp_path / "fresh"
+    st = PlanStore(str(fresh))
+    assert (fresh / "STORE_FORMAT.json").is_file()
+    (fresh / ".tmp_junk").mkdir()
+    shutil.rmtree(str(fresh / ".tmp_junk"))
+    st2 = PlanStore(str(fresh))
+    b = _decay(64, 64, 30)
+    fw, _ = _mk_fw(b)
+    st2.put(fw)
+    # and a third open of the now-populated, marked root still succeeds
+    assert len(PlanStore(str(fresh))) == 1

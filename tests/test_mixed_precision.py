@@ -1,0 +1,240 @@
+"""Mixed-precision SpAMM — ISSUE 6 tentpole coverage.
+
+The dtype contract across the stack: bf16 execution is bit-identical to
+f32 on bf16-representable inputs (and reproduces the bf16-rounded oracle
+otherwise); the int8 worklist kernel reproduces the f32 kernel run on its
+own dequantized operands to a few ulps; quantization round-trips are
+idempotent and bounded; the frozen-plan runtime carries dtype end to end
+(scale tables persisted, store keyed on dtype, requested-τ vs widened
+gate-τ separation); and the serving engine reports dtype + bytes-moved
+telemetry per wave.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as pl
+from repro.core import spamm as cs
+from repro.kernels import quantize as kq
+from repro.plans import FrozenWeight, PlanStore, fingerprint
+
+
+def _decay(m, n, seed, scale=0.4):
+    rng = np.random.default_rng(seed)
+    d = np.abs(np.arange(m)[:, None] - np.arange(n)[None, :])
+    base = (scale / (d ** 0.5 + 1)).astype(np.float32)
+    return jnp.asarray(base * rng.standard_normal((m, n)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantization primitives
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_bounded_and_idempotent():
+    x = _decay(96, 128, 0)
+    q, s = kq.quantize_tiles(x, 32)
+    assert q.dtype == jnp.int8 and s.shape == (3, 4)
+    deq = kq.dequantize_tiles(q, s, 32)
+    # per-tile bound: |x − deq| ≤ scale/2 elementwise (symmetric rounding)
+    bound = jnp.repeat(jnp.repeat(s, 32, 0), 32, 1) * 0.5 + 1e-7
+    assert bool(jnp.all(jnp.abs(x - deq) <= bound))
+    # idempotent: re-quantizing the dequantized view with the SAME scales
+    # reproduces the codes exactly (what execute() relies on for plan-time
+    # scale reuse)
+    q2, s2 = kq.quantize_tiles(deq, 32, scales=s)
+    assert bool(jnp.all(q2 == q)) and bool(jnp.all(s2 == s))
+
+
+def test_widen_tau_math():
+    e8 = kq.gate_eps("bfloat16", 32)
+    assert e8 == pytest.approx(2.0 ** -8)
+    ei = kq.gate_eps("int8", 32)
+    assert ei == pytest.approx(min(1.0, np.sqrt(32 * 32) / 254.0))
+    assert kq.gate_eps("float32", 32) == 0.0
+    t = kq.widen_tau(1.0, "bfloat16", 32)
+    assert t == pytest.approx((1 - e8) ** 2)
+    assert kq.widen_tau(1.0, "float32", 32) == 1.0
+    # traced τ widens inside jit too
+    tj = jax.jit(lambda x: kq.widen_tau(x, "int8", 32))(jnp.float32(1.0))
+    assert float(tj) == pytest.approx((1 - ei) ** 2, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+def test_bf16_bit_identical_on_representable_inputs():
+    """bf16-representable operands (already rounded) through the bf16 path
+    give the BIT-IDENTICAL result to the f32 path: every a·b product of two
+    bf16 values is exact in the f32 accumulator and the accumulation order
+    is the same kernel's."""
+    a = _decay(128, 128, 1).astype(jnp.bfloat16).astype(jnp.float32)
+    b = _decay(128, 128, 2).astype(jnp.bfloat16).astype(jnp.float32)
+    for backend in ("jnp", "interpret"):
+        p32 = pl.plan(a, b, 0.05, tile=32, backend=backend)
+        pbf = pl.plan(a, b, 0.05, tile=32, backend=backend,
+                      compute_dtype="bfloat16")
+        c32 = pl.execute(p32, a, b)
+        cbf = pl.execute(pbf, a, b)
+        # representable inputs ⇒ same gate (norms identical) ⇒ same work
+        assert bool(jnp.all(p32.mask == pbf.mask)), backend
+        np.testing.assert_array_equal(np.asarray(c32), np.asarray(cbf),
+                                      err_msg=backend)
+
+
+def test_int8_kernel_matches_dequantized_oracle():
+    """The int8 worklist kernel ≈ the f32 kernel on the dequantized
+    operands with the same plan (a few ulps: the int32 tile dots are exact
+    where the f32 oracle rounds)."""
+    a, b = _decay(128, 128, 3), _decay(128, 128, 4)
+    p8 = pl.plan(a, b, 0.02, tile=32, backend="interpret",
+                 compute_dtype="int8")
+    c8 = pl.execute(p8, a, b)
+    adq = kq.quantized_view(a, "int8", 32)
+    bdq = kq.quantized_view(b, "int8", 32)
+    p32 = pl.SpammPlan(p8.tau, p8.norm_a, p8.norm_b, p8.mask, p8.kidx,
+                       p8.nvalid, p8.valid_tiles, p8.work, tile=p8.tile,
+                       block_n=p8.block_n, backend=p8.backend,
+                       levels=p8.levels)
+    oracle = pl.execute(p32, adq, bdq)
+    scale = float(jnp.max(jnp.abs(oracle))) or 1.0
+    assert float(jnp.max(jnp.abs(c8 - oracle))) <= 1e-5 * scale
+
+
+def test_jnp_fallback_matches_worklist_kernels():
+    """Backends without the int8/worklist entry points (jnp) widen to f32 on
+    the quantized views — same numerics-of-record as the kernels within
+    float tolerance, for every dtype."""
+    a, b = _decay(128, 192, 5), _decay(192, 128, 6)
+    for dtype in ("bfloat16", "int8"):
+        cs_j = pl.execute(
+            pl.plan(a, b, 0.05, tile=32, backend="jnp", compute_dtype=dtype),
+            a, b)
+        cs_i = pl.execute(
+            pl.plan(a, b, 0.05, tile=32, backend="interpret",
+                    compute_dtype=dtype),
+            a, b)
+        np.testing.assert_allclose(np.asarray(cs_j), np.asarray(cs_i),
+                                   rtol=1e-5, atol=1e-5, err_msg=dtype)
+
+
+def test_block_n_int8_scales_per_fine_tile():
+    """block_n > 1 super-columns must still apply b's scale PER FINE TILE
+    (the kernel's static unroll), not per super-column."""
+    a, b = _decay(64, 64, 7), _decay(64, 128, 8)
+    for block_n in (1, 2):
+        p = pl.plan(a, b, 0.02, tile=32, block_n=block_n,
+                    backend="interpret", compute_dtype="int8")
+        c = pl.execute(p, a, b)
+        adq = kq.quantized_view(a, "int8", 32)
+        bdq = kq.quantized_view(b, "int8", 32)
+        ref = adq @ bdq
+        # τ small enough that everything executes → compare to full product
+        assert float(p.valid_fraction) == 1.0
+        np.testing.assert_allclose(np.asarray(c), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bytes-moved accounting
+# ---------------------------------------------------------------------------
+
+def test_bytes_moved_ratio():
+    a, b = _decay(256, 256, 9), _decay(256, 256, 10)
+    by = {}
+    for dtype in ("float32", "bfloat16", "int8"):
+        p = pl.plan(a, b, 0.05, tile=32, backend="jnp", compute_dtype=dtype)
+        by[dtype] = float(p.bytes_moved())
+    # same work-list (representability aside the gates here coincide or are
+    # supersets); operand bytes shrink 2× / 4× while flush writes stay f32
+    assert by["float32"] / by["bfloat16"] >= 1.5
+    assert by["float32"] / by["int8"] >= 1.5
+    assert by["bfloat16"] > by["int8"]
+
+
+# ---------------------------------------------------------------------------
+# frozen-plan runtime carries dtype
+# ---------------------------------------------------------------------------
+
+def test_frozen_weight_carries_dtype_and_widens_gate_tau():
+    w = _decay(128, 128, 11)
+    fw = FrozenWeight.build(w, tau=0.05, tile=32, backend="interpret",
+                            compute_dtype="int8")
+    assert fw.compute_dtype == "int8"
+    assert fw.b_scale is not None and fw.b_scale.shape == (4, 4)
+    # FrozenWeight keeps the REQUESTED τ (store addressing)…
+    assert float(np.asarray(fw.tau)) == pytest.approx(0.05)
+    fp = fw.for_rows(2)
+    # …and for_rows bakes the WIDENED gate τ into the runtime plan
+    e = kq.gate_eps("int8", 32)
+    assert float(np.asarray(fp.tau)) == pytest.approx(0.05 * (1 - e) ** 2,
+                                                      rel=1e-5)
+    x = _decay(64, 128, 12)
+    p = pl.plan(x, None, None, tile=32, backend="interpret", frozen_weight=fp)
+    c = pl.execute(p, x, w)
+    # parity vs the unfrozen int8 path at the same config
+    p_live = pl.plan(x, w, 0.05, tile=32, backend="interpret",
+                     compute_dtype="int8")
+    c_live = pl.execute(p_live, x, w)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_live),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_store_keys_on_dtype_and_persists_scales(tmp_path):
+    w = _decay(96, 96, 13)
+    st = PlanStore(str(tmp_path))
+    h = fingerprint(w)
+    cfg = dict(tau=0.05, tile=32, block_n=1, levels=0, backend="jnp")
+    for dtype in ("float32", "int8"):
+        fw = FrozenWeight.build(w, weight_hash=h, compute_dtype=dtype, **cfg)
+        st.put(fw)
+    got8 = st.get(h, dtype="int8", **cfg)
+    got32 = st.get(h, dtype="float32", **cfg)
+    assert got8.compute_dtype == "int8" and got8.b_scale is not None
+    assert got32.compute_dtype == "float32" and got32.b_scale is None
+    np.testing.assert_array_equal(
+        np.asarray(got8.b_scale),
+        np.asarray(FrozenWeight.build(w, compute_dtype="int8",
+                                      **cfg).b_scale))
+    # bf16 was never put: clean miss, not a wrong-dtype hit
+    assert st.get(h, dtype="bfloat16", **cfg) is None
+
+
+# ---------------------------------------------------------------------------
+# engine telemetry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_engine_reports_dtype_and_bytes(dtype):
+    from repro.configs import ParallelConfig, SpammConfig, get_config
+    from repro.launch.mesh import make_ctx, make_host_mesh
+    from repro.models import model as M
+    from repro.serving.engine import Engine, Request
+
+    pcfg = ParallelConfig(
+        compute_dtype="float32", param_dtype="float32", remat="none",
+        attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=32,
+        decode_seq_shard=False,
+    )
+    cfg = get_config("musicgen-large").reduced()
+    ctx = make_ctx(make_host_mesh())
+    params = M.init_params(cfg, pcfg, jax.random.key(0))
+    sc = SpammConfig(enable=True, tau=1e-3, tile=16, backend="jnp",
+                     dtype=dtype)
+    eng = Engine(cfg, pcfg, ctx, params, max_len=48, spamm_cfg=sc)
+    reqs = [Request(prompt=list(range(1, 17)), max_new_tokens=3)]
+    eng.generate(reqs)
+    sp = reqs[0].out["spamm"]
+    assert sp["compute_dtype"] == dtype
+    assert sp["gemm_bytes_moved"] is not None and sp["gemm_bytes_moved"] > 0
+    assert (sp["decode_gemm_bytes_moved"] is not None
+            and sp["decode_gemm_bytes_moved"] > 0)
+    # tokens must match the f32 engine's at this tiny τ (quantization noise
+    # is far below the greedy-argmax margin on a reduced random-init model)
+    sc32 = SpammConfig(enable=True, tau=1e-3, tile=16, backend="jnp")
+    eng32 = Engine(cfg, pcfg, ctx, params, max_len=48, spamm_cfg=sc32)
+    reqs32 = [Request(prompt=list(range(1, 17)), max_new_tokens=3)]
+    eng32.generate(reqs32)
+    b32 = reqs32[0].out["spamm"]["gemm_bytes_moved"]
+    assert b32 / sp["gemm_bytes_moved"] >= 1.5

@@ -154,3 +154,65 @@ def test_effective_flops_equals_valid_fraction():
     frac = float(info.valid_fraction)
     assert 0.0 < frac < 1.0  # non-trivial case
     assert float(info.effective_flops) == pytest.approx(frac * 2 * n**3)
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision gating: the widened-τ quantized gate is a SUPERSET
+# ---------------------------------------------------------------------------
+
+def _banded(n, m, seed, width=12):
+    rng = np.random.default_rng(seed)
+    d = np.abs(np.arange(n)[:, None] - np.arange(m)[None, :])
+    return np.where(d <= width, rng.standard_normal((n, m)), 0.0).astype(
+        np.float32
+    )
+
+
+def _skewed(n, m, seed):
+    # tile magnitudes spanning ~6 orders of magnitude: the adversarial case
+    # for per-tile int8 scales (tiny tiles quantize to mostly zeros)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    return x * np.float32(10.0) ** rng.integers(-4, 2, size=(n, m))
+
+
+_GENS = {"random": _mat, "banded": _banded, "skewed": _skewed}
+
+
+@pytest.mark.parametrize("kind", sorted(_GENS))
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_quantized_gate_is_superset_of_f32_gate(kind, dtype):
+    """kernels.quantize guarantee: with norms from the quantized view and τ
+    widened by the analytic bound, every tile pair the f32 gate keeps stays
+    kept — low precision may only ADD work, never silently drop it."""
+    from repro.core import plan as cplan
+
+    n, tile = 128, 32
+    for seed in range(5):
+        for tau in (1e-3, 0.05, 0.5):
+            a, b = _GENS[kind](n, n, seed), _GENS[kind](n, n, seed + 100)
+            p32 = cplan.plan(jnp.asarray(a), jnp.asarray(b), tau, tile=tile,
+                             backend="jnp")
+            pq = cplan.plan(jnp.asarray(a), jnp.asarray(b), tau, tile=tile,
+                            backend="jnp", compute_dtype=dtype)
+            kept32 = np.asarray(p32.mask)
+            keptq = np.asarray(pq.mask)
+            dropped = kept32 & ~keptq
+            assert not dropped.any(), (
+                f"{dtype}/{kind}/seed{seed}/tau{tau}: quantized gate "
+                f"dropped {int(dropped.sum())} f32-kept tile pairs")
+
+
+def test_quantized_gate_tau_nonpositive_unchanged():
+    """τ ≤ 0 keeps everything in f32; widening must not flip that (the
+    widened τ' = τ·(1-e)² would move a negative τ TOWARD zero — the
+    implementation leaves τ ≤ 0 alone instead)."""
+    from repro.core import plan as cplan
+    from repro.kernels.quantize import widen_tau
+
+    assert widen_tau(0.0, "int8", 32) == 0.0
+    assert widen_tau(-1.0, "bfloat16", 32) == -1.0
+    a, b = _mat(64, 64, 0), _mat(64, 64, 1)
+    pq = cplan.plan(jnp.asarray(a), jnp.asarray(b), 0.0, tile=32,
+                    backend="jnp", compute_dtype="int8")
+    assert np.asarray(pq.mask).all()
