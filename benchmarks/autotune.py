@@ -1,0 +1,166 @@
+"""Roofline autotuner benchmark + calibration driver (core.cost).
+
+Tunes block_n × pyramid levels × worklist bucket floor per weight on two
+matrix families at the mixed_precision.py shapes and asserts the tuned
+pick is never predicted slower than the hardcoded defaults
+(block_n=1, levels=0, bucket=16):
+
+  * banded  — exponential_decay (the paper's locality structure; the gate
+    prunes, so blocking/bucketing choices genuinely trade off);
+  * random  — dense iid Gaussian (nothing prunes; the tuner should spend
+    its budget on wider block_n, not pyramid levels).
+
+Modes:
+
+  PYTHONPATH=src python -m benchmarks.autotune --quick
+      predicted-time tuning only (deterministic, host-side — what CI runs)
+  PYTHONPATH=src python -m benchmarks.autotune --calibrate cost_profile.json
+      measure this machine's coefficients (bytes/s, flops/s, per-step
+      overhead) from real kernel wall-clock and persist the profile JSON
+  PYTHONPATH=src python -m benchmarks.autotune --quick --measure \
+      [--profile cost_profile.json]
+      additionally wall-clock the tuned vs default configs through the real
+      plan/execute pipeline and assert tuned ≤ default × slack
+
+The machine-readable report lands in BENCH_autotune.json
+(`benchmarks.report.write_bench_json`; schema v2, environment-stamped;
+diffed against benchmarks/references/ by `benchmarks.perf_gate`).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import header, row, timeit
+from benchmarks.report import write_bench_json
+from repro.core import cost
+from repro.core import plan as cplan
+from repro.core.spamm import exponential_decay
+
+# interpret exercises the real Pallas kernel bodies on CPU (same choice as
+# mixed_precision.py); wall-clock numbers are interpret-backend numbers and
+# the report's env stamp says so
+BACKEND = "interpret"
+DEFAULTS = (1, 0, 16)          # block_n, levels, bucket — the hardcoded pipeline
+MEASURE_SLACK = 1.35           # measured tuned ≤ measured default × this
+
+FAMILIES = ("banded", "random")
+DTYPES = ("float32", "int8")
+
+
+def _family(kind: str, n: int, lam: float, seed: int) -> np.ndarray:
+    if kind == "banded":
+        return np.asarray(exponential_decay(n, lam=lam, seed=seed),
+                          np.float32)
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, n)) / np.sqrt(n)).astype(np.float32)
+
+
+def _measure_us(a, b, tau, *, tile, dtype, block_n, levels, bucket) -> float:
+    """Median wall-clock of one plan's execute at a concrete config,
+    through the SAME plan/execute pipeline serving uses."""
+    p = cplan.plan(a, b, tau, tile=tile, block_n=block_n, levels=levels,
+                   backend=BACKEND, compute_dtype=dtype, bucket_min=bucket)
+    return timeit(lambda: cplan.execute(p, a, b))
+
+
+def _cell(family: str, n: int, tile: int, tau: float, lam: float,
+          dtype: str, profile: cost.CostProfile, measure: bool) -> dict:
+    b = _family(family, n, lam, seed=1)
+    tp = cost.tune_weight(b, tau, tile=tile, dtype=dtype, backend=BACKEND,
+                          profile=profile, defaults=DEFAULTS)
+    # by construction (defaults always in the search space, strict-< to
+    # replace) — but it is the acceptance criterion, so assert it
+    assert tp.predicted_us <= tp.default_predicted_us, (
+        f"tuned config predicted SLOWER than defaults: {tp}")
+    speedup = tp.default_predicted_us / max(tp.predicted_us, 1e-9)
+    cell = {
+        "family": family, "n": n, "tile": tile, "tau": tau, "lam": lam,
+        "dtype": dtype, "backend": BACKEND,
+        "tuned": tp.as_manifest(),
+        "predicted_us": tp.predicted_us,
+        "default_predicted_us": tp.default_predicted_us,
+        "predicted_speedup_vs_default": speedup,
+    }
+    row(f"autotune/{family}/n{n}t{tile}/tau{tau}/{dtype}", tp.predicted_us,
+        f"block_n={tp.block_n};levels={tp.levels};bucket={tp.bucket};"
+        f"default_us={tp.default_predicted_us:.1f};pred={speedup:.2f}x")
+    if measure:
+        a = jnp.asarray(_family(family, n, lam, seed=0))
+        bj = jnp.asarray(b)
+        t_def = _measure_us(a, bj, tau, tile=tile, dtype=dtype,
+                            block_n=DEFAULTS[0], levels=DEFAULTS[1],
+                            bucket=DEFAULTS[2])
+        t_tun = _measure_us(a, bj, tau, tile=tile, dtype=dtype,
+                            block_n=tp.block_n, levels=tp.levels,
+                            bucket=tp.bucket)
+        assert t_tun <= t_def * MEASURE_SLACK, (
+            f"tuned config measured slower than defaults beyond slack: "
+            f"{t_tun:.1f}us vs {t_def:.1f}us × {MEASURE_SLACK} "
+            f"({family} n={n} tile={tile} τ={tau} {dtype})")
+        cell["measured_default_us"] = t_def
+        cell["measured_tuned_us"] = t_tun
+        row(f"autotune/{family}/n{n}t{tile}/tau{tau}/{dtype}/measured",
+            t_tun, f"default_us={t_def:.1f};"
+                   f"measured={t_def / max(t_tun, 1e-9):.2f}x")
+    return cell
+
+
+def run(quick: bool = False, *, measure: bool = False,
+        profile_path: str | None = None):
+    profile = cost.CostProfile.load_or_default(profile_path)
+    shapes = ([(256, 32, 0.05, 0.8)] if quick
+              else [(512, 32, 0.05, 0.8), (1024, 64, 0.02, 0.9)])
+    cells = [
+        _cell(family, n, tile, tau, lam, dtype, profile, measure)
+        for n, tile, tau, lam in shapes
+        for family in FAMILIES
+        for dtype in DTYPES
+    ]
+    payload = {
+        "cells": cells,
+        "profile_key_used": cells[0]["tuned"]["profile_key"],
+        "measured": measure,
+    }
+    path = write_bench_json("autotune", payload, backend=BACKEND)
+    print(f"# wrote {path}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias of --quick (the CI fast lane's spelling)")
+    ap.add_argument("--measure", action="store_true",
+                    help="also wall-clock tuned vs default configs through "
+                         "the real plan/execute pipeline and gate at "
+                         f"{MEASURE_SLACK}× slack")
+    ap.add_argument("--profile", default=None,
+                    help="calibrated cost-profile JSON (from --calibrate); "
+                         "default: nominal per-backend coefficients")
+    ap.add_argument("--calibrate", default=None, metavar="PATH",
+                    help="measure this machine's coefficients and write the "
+                         "profile JSON to PATH, then exit (pass it back via "
+                         "--profile / --tune-profile)")
+    args = ap.parse_args()
+    if args.calibrate:
+        coeffs = cost.calibrate(BACKEND, tile=32)
+        prof = cost.CostProfile()
+        prof.put(BACKEND, coeffs)
+        path = prof.save(args.calibrate)
+        print(f"calibrated {cost.profile_key(BACKEND)}: "
+              f"bw={coeffs.bytes_per_s:.3e}B/s "
+              f"flops={coeffs.flops_per_s:.3e}/s "
+              f"step={coeffs.step_overhead_s:.3e}s "
+              f"base={coeffs.base_overhead_s:.3e}s "
+              f"gate={coeffs.gate_ops_per_s:.3e}/s -> {path}")
+        return
+    header()
+    run(quick=args.quick or args.smoke, measure=args.measure,
+        profile_path=args.profile)
+
+
+if __name__ == "__main__":
+    main()

@@ -107,5 +107,6 @@ def run(quick: bool = False):
     # variant) on CPU; the jnp fallback is covered by the unit tests
     out = [_cell(n, tile, tau, lam, backend="interpret")
            for n, tile, tau, lam in cells]
-    path = write_bench_json("mixed_precision", {"cells": out})
+    path = write_bench_json("mixed_precision", {"cells": out},
+                            backend="interpret")
     print(f"# wrote {path}", flush=True)

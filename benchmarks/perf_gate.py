@@ -1,0 +1,287 @@
+"""Perf-trajectory gate: diff fresh BENCH_*.json against committed
+reference bounds and FAIL on regression.
+
+  PYTHONPATH=src python -m benchmarks.perf_gate \
+      [--ref-dir benchmarks/references] [--fresh-dir .] [--selftest]
+
+The references under benchmarks/references/ are committed (the one
+.gitignore exception to the BENCH_*.json rule) and act as the perf
+trajectory's ratchet: CI regenerates the fresh files each run and this
+gate compares row by row. Comparison rules, by metric key:
+
+  * wall-clock (``*_us``, ``us_per_execute``) — lower-better within a
+    generous 2.0 relative tolerance (3× the reference): shared CI runners
+    are noisy, so only gross regressions trip;
+  * deterministic plan/model outputs (``*bytes_moved``, ``predicted_us``,
+    ``valid_fraction``, …) — 1% band BOTH directions: any drift, including
+    an improvement, demands a conscious reference update (see
+    benchmarks/README.md);
+  * tuner decisions and config ints (``block_n``/``levels``/``bucket``) —
+    exact;
+  * accuracy (``max_err*``) and ratios (``bytes_ratio_vs_f32``) — may only
+    improve, within 50% / 5% bands.
+
+Rows are matched on their identity keys (family/n/tile/tau/lam/dtype/
+backend). A row pair whose measuring ENVIRONMENT differs (backend or
+device kind — the v2 env stamp from `benchmarks.report`) is REFUSED, not
+silently compared: wall-clock from a different machine class is not a
+trajectory point. Hostname differences are provenance only (CI runners
+are a fleet). ``--selftest`` builds synthetic pairs in a temp dir and
+asserts the gate passes clean data, fails an injected slowdown, and
+refuses an environment mismatch.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import tempfile
+
+from benchmarks.report import BENCH_SCHEMA_VERSION
+
+# cell fields that name a row rather than measure it
+IDENTITY_KEYS = ("family", "n", "tile", "tau", "lam", "dtype", "backend",
+                 "seed")
+# integer decisions/configs compared exactly (a tuner flip IS a trajectory
+# event — update the reference deliberately)
+EXACT_KEYS = ("block_n", "levels", "bucket", "gated_gemms")
+# analytic model/plan outputs: deterministic given the code, so ANY drift
+# (either direction) means the model changed — 1% band absorbs fp noise
+DETERMINISTIC_KEYS = ("predicted_us", "default_predicted_us",
+                      "predicted_speedup_vs_default", "valid_fraction")
+
+WALL_CLOCK_REL_TOL = 2.0     # fresh ≤ ref × (1 + 2.0)
+DETERMINISTIC_REL_TOL = 0.01
+RATIO_REL_TOL = 0.05         # higher-better: fresh ≥ ref × (1 − 0.05)
+ERR_REL_TOL = 0.5            # lower-better accuracy floor
+
+_MISSING = object()
+
+
+class GateResult:
+    def __init__(self):
+        self.problems: list = []    # regressions / structural failures
+        self.refusals: list = []    # environment mismatches
+        self.checked = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems and not self.refusals
+
+
+def _identity(cell: dict) -> str:
+    return json.dumps({k: cell[k] for k in IDENTITY_KEYS if k in cell},
+                      sort_keys=True)
+
+
+def _check_metric(key: str, ref, fresh, path: str, res: GateResult):
+    res.checked += 1
+    if key in EXACT_KEYS:
+        if fresh != ref:
+            res.problems.append(
+                f"{path}.{key}: decision changed {ref!r} -> {fresh!r} "
+                f"(exact-match key; update the reference deliberately)")
+        return
+    ref = float(ref)
+    fresh = float(fresh)
+    scale = max(abs(ref), 1e-12)
+    if key in DETERMINISTIC_KEYS or key.endswith("bytes_moved"):
+        if abs(fresh - ref) > DETERMINISTIC_REL_TOL * scale:
+            res.problems.append(
+                f"{path}.{key}: deterministic output drifted "
+                f"{ref:g} -> {fresh:g} (>{DETERMINISTIC_REL_TOL:.0%}; "
+                f"model/plan changed — regenerate references if intended)")
+    elif key.endswith("ratio_vs_f32") or key.endswith("speedup"):
+        if fresh < ref * (1.0 - RATIO_REL_TOL):
+            res.problems.append(
+                f"{path}.{key}: ratio regressed {ref:g} -> {fresh:g} "
+                f"(>{RATIO_REL_TOL:.0%} below reference)")
+    elif key.startswith("max_err") or key.endswith("_err"):
+        if fresh > ref * (1.0 + ERR_REL_TOL) + 1e-12:
+            res.problems.append(
+                f"{path}.{key}: accuracy regressed {ref:g} -> {fresh:g}")
+    elif key.endswith("_us") or key.startswith("us_per"):
+        if fresh > ref * (1.0 + WALL_CLOCK_REL_TOL):
+            res.problems.append(
+                f"{path}.{key}: wall-clock regressed {ref:.1f}us -> "
+                f"{fresh:.1f}us (tolerance {WALL_CLOCK_REL_TOL:.0%} over "
+                f"reference)")
+    # other numerics (lam/tau echoes, counts we have no rule for): no gate
+
+
+def _walk(ref: dict, fresh: dict, path: str, res: GateResult):
+    for key, rv in sorted(ref.items()):
+        if key == "env" or key in IDENTITY_KEYS:
+            continue
+        fv = fresh.get(key, _MISSING)
+        if fv is _MISSING:
+            res.problems.append(f"{path}.{key}: present in reference, "
+                                f"missing in fresh run")
+        elif isinstance(rv, dict) and isinstance(fv, dict):
+            _walk(rv, fv, f"{path}.{key}", res)
+        elif isinstance(rv, bool):
+            continue
+        elif isinstance(rv, (int, float)) and isinstance(fv, (int, float)):
+            _check_metric(key, rv, fv, path, res)
+        elif key == "profile_key" and rv != fv:
+            res.problems.append(f"{path}.profile_key: coefficients source "
+                                f"changed {rv!r} -> {fv!r}")
+
+
+def _env_mismatch(ref_env: dict, fresh_env: dict):
+    """The non-comparable axes: backend + device kind. Hostname is
+    provenance, not a gate."""
+    bad = [ax for ax in ("backend", "device_kind")
+           if ref_env.get(ax) != fresh_env.get(ax)]
+    return bad
+
+
+def compare_docs(ref_doc: dict, fresh_doc: dict, name: str) -> GateResult:
+    res = GateResult()
+    for doc, which in ((ref_doc, "reference"), (fresh_doc, "fresh")):
+        if doc.get("bench_schema_version") != BENCH_SCHEMA_VERSION:
+            res.problems.append(
+                f"{name} [{which}]: bench_schema_version "
+                f"{doc.get('bench_schema_version')!r} != "
+                f"{BENCH_SCHEMA_VERSION} (pre-env-stamp file; regenerate)")
+    if res.problems:
+        return res
+    ref_cells = ref_doc.get("data", {}).get("cells", [])
+    fresh_by_id = {_identity(c): c
+                   for c in fresh_doc.get("data", {}).get("cells", [])}
+    for rc in ref_cells:
+        ident = _identity(rc)
+        path = f"{name}{ident}"
+        fc = fresh_by_id.get(ident)
+        if fc is None:
+            res.problems.append(f"{path}: reference row has no fresh "
+                                f"counterpart (coverage shrank)")
+            continue
+        bad = _env_mismatch(rc.get("env", {}), fc.get("env", {}))
+        if bad:
+            res.refusals.append(
+                f"{path}: REFUSING to compare — environment differs on "
+                + ", ".join(f"{ax} ({rc['env'].get(ax)!r} vs "
+                            f"{fc['env'].get(ax)!r})" for ax in bad)
+                + "; regenerate benchmarks/references/ on the new "
+                  "environment")
+            continue
+        _walk(rc, fc, path, res)
+    return res
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate(ref_dir: str, fresh_dir: str) -> int:
+    refs = sorted(glob.glob(os.path.join(ref_dir, "BENCH_*.json")))
+    if not refs:
+        print(f"perf_gate: no references under {ref_dir} — nothing gated")
+        return 1
+    failures = 0
+    for ref_path in refs:
+        name = os.path.basename(ref_path)
+        fresh_path = os.path.join(fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            print(f"FAIL {name}: fresh file missing (run the benchmark "
+                  f"first: python -m benchmarks.run --smoke)")
+            failures += 1
+            continue
+        res = compare_docs(_load(ref_path), _load(fresh_path), name)
+        for msg in res.refusals:
+            print(f"REFUSED {msg}")
+        for msg in res.problems:
+            print(f"FAIL {msg}")
+        if res.ok:
+            print(f"OK   {name}: {res.checked} metrics within bounds "
+                  f"(env {_load(fresh_path)['env']['backend']}/"
+                  f"{_load(fresh_path)['env']['device_kind']})")
+        else:
+            failures += 1
+    return 1 if failures else 0
+
+
+# ---------------------------------------------------------------------------
+# selftest: the gate must demonstrably fail on an injected slowdown
+# ---------------------------------------------------------------------------
+
+def _synthetic_doc(us: float = 100.0, bytes_moved: float = 1.0e6,
+                   device_kind: str = "cpu") -> dict:
+    env = {"backend": "interpret", "device_kind": device_kind,
+           "hostname": "selftest-host", "jax": "0"}
+    cell = {"family": "banded", "n": 256, "tile": 32, "tau": 0.05,
+            "dtype": "int8", "backend": "interpret", "env": dict(env),
+            "us_per_execute": us, "gemm_bytes_moved": bytes_moved,
+            "bytes_ratio_vs_f32": 2.0, "block_n": 1}
+    return {"bench_schema_version": BENCH_SCHEMA_VERSION,
+            "name": "selftest", "env": env, "data": {"cells": [cell]}}
+
+
+def selftest() -> int:
+    ref = _synthetic_doc()
+
+    clean = compare_docs(ref, _synthetic_doc(), "selftest")
+    assert clean.ok and clean.checked >= 3, clean.problems
+
+    improved = compare_docs(ref, _synthetic_doc(us=40.0), "selftest")
+    assert improved.ok, ("faster wall-clock must pass", improved.problems)
+
+    slow = compare_docs(
+        ref, _synthetic_doc(us=100.0 * (1 + WALL_CLOCK_REL_TOL) * 1.05),
+        "selftest")
+    assert not slow.ok and any("wall-clock regressed" in p
+                               for p in slow.problems), slow.problems
+
+    drift = compare_docs(ref, _synthetic_doc(bytes_moved=1.05e6), "selftest")
+    assert not drift.ok and any("deterministic" in p
+                                for p in drift.problems), drift.problems
+
+    moved = compare_docs(ref, _synthetic_doc(device_kind="TPU v5e"),
+                         "selftest")
+    assert not moved.ok and moved.refusals and not moved.problems, (
+        moved.problems, moved.refusals)
+
+    v1 = dict(_synthetic_doc())
+    v1.pop("bench_schema_version")
+    legacy = compare_docs(v1, _synthetic_doc(), "selftest")
+    assert not legacy.ok and any("bench_schema_version" in p
+                                 for p in legacy.problems), legacy.problems
+
+    # end-to-end through the file-level driver, in a temp tree
+    with tempfile.TemporaryDirectory() as td:
+        rd, fd = os.path.join(td, "ref"), os.path.join(td, "fresh")
+        os.makedirs(rd)
+        os.makedirs(fd)
+        with open(os.path.join(rd, "BENCH_selftest.json"), "w") as f:
+            json.dump(ref, f)
+        with open(os.path.join(fd, "BENCH_selftest.json"), "w") as f:
+            json.dump(_synthetic_doc(us=1e6), f)
+        assert gate(rd, fd) == 1, "driver must exit nonzero on regression"
+        with open(os.path.join(fd, "BENCH_selftest.json"), "w") as f:
+            json.dump(_synthetic_doc(), f)
+        assert gate(rd, fd) == 0, "driver must exit zero on clean data"
+    print("perf_gate selftest: PASS (clean passes, slowdown + drift + "
+          "schema fail, env mismatch refused)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref-dir", default="benchmarks/references",
+                    help="committed reference BENCH_*.json directory")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory of freshly generated BENCH_*.json")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the gate itself fails on an injected "
+                         "slowdown and refuses environment mismatches")
+    args = ap.parse_args()
+    sys.exit(selftest() if args.selftest
+             else gate(args.ref_dir, args.fresh_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,10 +8,41 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import socket
 
 from repro.configs import SHAPES, cells
 
 HW = "197 TFLOP/s bf16 · 819 GB/s HBM · 50 GB/s/link ICI (v5e)"
+
+# BENCH_*.json layout version. v2 wraps the payload in
+# {"bench_schema_version", "name", "env", "data"} and stamps every row in
+# data["cells"] with the environment it was measured in (backend, device
+# kind, hostname) so the perf-trajectory gate (benchmarks.perf_gate) can
+# refuse to compare numbers from different machines/backends. v1 files
+# (bare payload, no env) predate the gate and are rejected by it.
+BENCH_SCHEMA_VERSION = 2
+
+
+def bench_env(backend: str | None = None) -> dict:
+    """The environment stamp for one benchmark run: where these numbers
+    came from. `backend` is the kernel backend the benchmark exercised
+    (interpret/pallas/jnp) — wall-clock from different backends or device
+    kinds is not comparable and the perf gate refuses to diff it;
+    `hostname` is provenance only (CI runners are a fleet)."""
+    from repro.core.cost import device_kind
+
+    try:
+        import jax
+
+        jver = jax.__version__
+    except Exception:
+        jver = "none"
+    return {
+        "backend": backend or "unspecified",
+        "device_kind": device_kind(),
+        "hostname": socket.gethostname(),
+        "jax": jver,
+    }
 
 
 def load(d, mesh, arch, shape):
@@ -111,15 +142,35 @@ def roofline_table(d, mesh):
     return "\n".join(rows)
 
 
-def write_bench_json(name: str, payload: dict, out_dir: str = ".") -> str:
-    """Write one benchmark's machine-readable report as BENCH_<name>.json.
+def write_bench_json(name: str, payload: dict, out_dir: str = ".", *,
+                     backend: str | None = None) -> str:
+    """Write one benchmark's machine-readable report as BENCH_<name>.json
+    (schema v2: versioned, environment-stamped).
 
     These files are deliberately .gitignore'd: they are machine-local
-    measurements, and the durable trajectory is the CI artifact upload of
-    the same files (see .github/workflows/ci.yml). Returns the path."""
+    measurements, and the durable trajectory is the CI artifact upload plus
+    the committed reference bounds under benchmarks/references/ that
+    `benchmarks.perf_gate` diffs fresh runs against. Every row of
+    payload["cells"] is stamped with the measuring environment; a row that
+    already carries a "backend" key keeps it (a file may mix backends — the
+    gate compares per row). Returns the path."""
+    env = bench_env(backend)
+    if isinstance(payload.get("cells"), list):
+        for cell in payload["cells"]:
+            if isinstance(cell, dict):
+                stamp = dict(env)
+                if "backend" in cell:
+                    stamp["backend"] = cell["backend"]
+                cell.setdefault("env", stamp)
+    doc = {
+        "bench_schema_version": BENCH_SCHEMA_VERSION,
+        "name": name,
+        "env": env,
+        "data": payload,
+    }
     fn = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(fn, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
+        json.dump(doc, f, indent=1, sort_keys=True)
     return fn
 
 

@@ -37,6 +37,15 @@ class SpammConfig:
                                         # (per-expert weight plans; grads flow
                                         # through the gated product, so keep
                                         # False for bwd="dense" training)
+    autotune: bool = False              # roofline-autotune block_n/levels/
+                                        # bucket per weight at freeze time
+                                        # (core.cost); block_n/levels above
+                                        # become the tuner's defaults (always
+                                        # in its search space)
+    tune_profile: Optional[str] = None  # path to a calibrated cost-profile
+                                        # JSON (benchmarks/autotune.py
+                                        # --calibrate); None = nominal
+                                        # per-backend coefficients
 
     @property
     def coarse_tile(self) -> int:

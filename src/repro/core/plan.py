@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cost as kcost
 from repro.kernels import ops as kops
 from repro.kernels import quantize as kquant
 from repro.kernels import ref as kref
@@ -229,15 +230,14 @@ class SpammWork(NamedTuple):
         return self.klist.shape[0]
 
 
-def _bucket(n: int, minimum: int = 16) -> int:
-    """Pad the step count to a power-of-two bucket so the jitted ragged
-    kernel compiles once per bucket, not once per distinct Σnvalid."""
-    return max(minimum, 1 << max(n - 1, 0).bit_length())
+# the ONE bucket function lives in core.cost (the autotuner searches over
+# its `minimum`); this alias keeps the historical import path working
+_bucket = kcost.bucket
 
 
 def compact_from_triples(ii, jj, kk, *, gm: int, gn: int, gk: int,
                          block_n: int = 1, steps: bool = True,
-                         assume_sorted: bool = False):
+                         assume_sorted: bool = False, bucket_min: int = 16):
     """kidx/nvalid straight from surviving (i, j, k) triples — §3.3
     map_offset compaction WITHOUT materializing or sorting the dense
     (gm, gn, gk) bitmap.
@@ -262,6 +262,10 @@ def compact_from_triples(ii, jj, kk, *, gm: int, gn: int, gk: int,
     already arrive in ascending fused-key, i.e. (i, j, k) row-major, order
     and without duplicates — the flat gate's chunked nonzero scan is one
     (making the flat eager path O(V)); the hierarchical descent is not.
+
+    bucket_min is the power-of-two bucket floor of the per-step tables
+    (`core.cost.bucket(v, bucket_min)`): the autotuner raises it per weight
+    to cut jit recompiles when successive calls straddle bucket boundaries.
     """
     assert gn % block_n == 0, (gn, block_n)
     gnb = gn // block_n
@@ -288,7 +292,7 @@ def compact_from_triples(ii, jj, kk, *, gm: int, gn: int, gk: int,
     nvalid = np.zeros((gm, gnb), np.int32)
     step_i = step_j = step_k = step_flags = None
     if steps:
-        s = _bucket(v)
+        s = _bucket(v, bucket_min)
         step_i = np.zeros(s, np.int32)
         step_j = np.zeros(s, np.int32)
         step_k = np.zeros(s, np.int32)
@@ -483,9 +487,10 @@ class SpammPlan:
         f32 (tile, tile·block_n) output flush per active output pair. The
         mixed-precision bandwidth lever in one number (ROADMAP: cut decode
         GEMM bytes ~2× on the same work-list); int8 scale tables are a few
-        f32 scalars per step and are not counted."""
-        isize = kquant.dtype_itemsize(self.compute_dtype)
-        t2 = float(self.tile * self.tile)
+        f32 scalars per step and are not counted. Delegates to
+        `core.cost.gemm_bytes` — the cost model's GEMM-byte term IS this
+        formula (pinned by tests/test_cost_model.py), so the autotuner
+        prices exactly what the telemetry reports."""
         nvalid = self.nvalid
         if nvalid is not None:
             pairs = jnp.sum(nvalid > 0, dtype=jnp.int32)
@@ -493,10 +498,9 @@ class SpammPlan:
             pairs = jnp.sum(jnp.any(self.mask, axis=-1), dtype=jnp.int32)
         # float accumulation: byte counts overflow int32 well before any
         # interesting grid does
-        gemm_in = self.valid_tiles.astype(jnp.float32) * (
-            t2 * (1 + self.block_n) * isize)
-        flush_out = pairs.astype(jnp.float32) * (t2 * self.block_n * 4)
-        return gemm_in + flush_out
+        return kcost.gemm_bytes(
+            self.valid_tiles.astype(jnp.float32), pairs.astype(jnp.float32),
+            self.tile, self.block_n, self.compute_dtype)
 
     def info(self) -> dict:
         """The info dict `kernels.ops.spamm_matmul` has always returned.
@@ -782,13 +786,16 @@ def _plan_frozen(a, fp, *, norm_a=None, use_mxu_norm: bool = False
         # weight-side tables were frozen from the quantized weight, and
         # fp.tau is already the widened gate threshold)
         if dtype == "int8":
-            qa, a_scale = kquant.quantize_tiles(a, tile)
-            a_view = kquant.dequantize_tiles(qa, a_scale, tile)
-        elif dtype != "float32":
-            a_view = kquant.quantized_view(a, dtype, tile)
+            # fused absmax/scale + get-norm: one read of the activation
+            # yields the quantized-view norms AND the per-tile scales, so
+            # execute() quantizes from plan-carried scales instead of a
+            # separate per-call absmax pass
+            norm_a, a_scale = kops.int8_norms_and_scales(
+                a, tile, backend=bk.name, use_mxu=use_mxu_norm)
         else:
-            a_view = a
-        norm_a = bk.norms(a_view, tile, use_mxu=use_mxu_norm)
+            a_view = (kquant.quantized_view(a, dtype, tile)
+                      if dtype != "float32" else a)
+            norm_a = bk.norms(a_view, tile, use_mxu=use_mxu_norm)
     gm, gk = norm_a.shape
     if (gm, gk) != (fp.gm, fp.gk):
         raise ValueError(
@@ -830,6 +837,7 @@ def plan(
     levels: int = 0,
     frozen_weight=None,
     compute_dtype: str = "float32",
+    bucket_min: int = 16,
 ) -> SpammPlan:
     """Build the gating phase for (M, K) @ (K, N), dims divisible by tile
     (and N by tile·block_n) — pad upstream (see `pad_to_tile` /
@@ -867,6 +875,11 @@ def plan(
     spec; no widening on top). Callers who pass precomputed norm_a/norm_b
     at a low dtype are responsible for having computed them from the
     quantized view (`WeightPlanCache.weight_side(dtype=...)` does).
+
+    bucket_min floors the work-list step tables' power-of-two bucket
+    (`core.cost.bucket`) — autotuned per weight (`TunedParams.bucket`) so a
+    serving stream whose Σnvalid hovers around a bucket boundary stops
+    re-jitting; 16 is the historical default.
     """
     if frozen_weight is not None:
         if tau is not None or valid_ratio is not None:
@@ -881,20 +894,27 @@ def plan(
     compute_dtype = kquant.canonical_dtype(compute_dtype)
     a_scale = b_scale = None
     if compute_dtype != "float32":
-        # gate on what the kernel will multiply: quantize-dequantize the
-        # operands (f32 view) before any norm computation; int8 keeps the
-        # per-tile scales on the plan so execute() reuses them
-        if a is not None:
-            if compute_dtype == "int8":
-                qa, a_scale = kquant.quantize_tiles(a, tile)
-                a = kquant.dequantize_tiles(qa, a_scale, tile)
-            else:
+        # gate on what the kernel will multiply. int8: the fused
+        # absmax/scale + get-norm kernel turns each operand matrix into
+        # (quantized-view norms, per-tile scales) in ONE read — the plan
+        # keeps the scales so execute() skips its absmax pass; the matrix
+        # slot is cleared because the norms below ARE its only use (the
+        # hierarchical path pools pyramids from the fine normmap).
+        # bf16: the quantize-dequantized f32 view replaces the operand
+        # before any norm computation, as before.
+        if compute_dtype == "int8":
+            if a is not None and norm_a is None:
+                norm_a, a_scale = kops.int8_norms_and_scales(
+                    a, tile, backend=bk.name, use_mxu=use_mxu_norm)
+                a = None
+            if b is not None and norm_b is None:
+                norm_b, b_scale = kops.int8_norms_and_scales(
+                    b, tile, backend=bk.name, use_mxu=use_mxu_norm)
+                b = None
+        else:
+            if a is not None:
                 a = kquant.quantized_view(a, compute_dtype, tile)
-        if b is not None:
-            if compute_dtype == "int8":
-                qb, b_scale = kquant.quantize_tiles(b, tile)
-                b = kquant.dequantize_tiles(qb, b_scale, tile)
-            else:
+            if b is not None:
                 b = kquant.quantized_view(b, compute_dtype, tile)
         if tau is not None:
             tau = kquant.widen_tau(tau, compute_dtype, tile)
@@ -984,10 +1004,11 @@ def plan(
             # fused-key) order with grouping already applied — skip the sort
             work_np, nvalid_np = compact_from_triples(
                 *triples, gm=gm, gn=gnb, gk=gk, block_n=1, steps=steps,
-                assume_sorted=True)
+                assume_sorted=True, bucket_min=bucket_min)
         else:
             work_np, nvalid_np = compact_from_triples(
-                *triples, gm=gm, gn=gn, gk=gk, block_n=block_n, steps=steps)
+                *triples, gm=gm, gn=gn, gk=gk, block_n=block_n, steps=steps,
+                bucket_min=bucket_min)
         valid_tiles = jnp.int32(int(work_np.klist.size))
         nvalid = jnp.asarray(nvalid_np)
         # dense kidx only for dense-grid kernels with no ragged entry point
@@ -1142,21 +1163,23 @@ class WeightPlanCache:
 
         def compute():
             wp = pad_to_tile(jnp.asarray(w), tile, tile * block_n)
-            wv = wp
-            if dtype != "float32":
-                if wp.ndim == 3:
-                    bsz, kp, np_ = wp.shape
-                    wv = kquant.quantized_view(
-                        wp.reshape(bsz * kp, np_), dtype, tile
-                    ).reshape(wp.shape)
-                else:
-                    wv = kquant.quantized_view(wp, dtype, tile)
-            if wv.ndim == 3:
-                bsz, kp, np_ = wv.shape
-                nw = bk.norms(wv.reshape(bsz * kp, np_), tile,
-                              use_mxu=use_mxu).reshape(bsz, kp // tile, -1)
+            # 3-D (per-expert MoE) weights norm through one reshaped 2-D
+            # pass — row tiles never cross slices after padding
+            w2 = (wp.reshape(wp.shape[0] * wp.shape[1], wp.shape[2])
+                  if wp.ndim == 3 else wp)
+            if dtype == "int8":
+                # fused absmax/scale + get-norm: quantized-view norms from
+                # one read (the scales are dropped here — execute recomputes
+                # them bit-identically; the cache stays dtype-agnostic)
+                nw, _ = kops.int8_norms_and_scales(
+                    w2, tile, backend=bk.name, use_mxu=use_mxu)
+            elif dtype != "float32":
+                nw = bk.norms(kquant.quantized_view(w2, dtype, tile), tile,
+                              use_mxu=use_mxu)
             else:
-                nw = bk.norms(wv, tile, use_mxu=use_mxu)
+                nw = bk.norms(w2, tile, use_mxu=use_mxu)
+            if wp.ndim == 3:
+                nw = nw.reshape(wp.shape[0], wp.shape[1] // tile, -1)
             if levels > 0:
                 # batched pooling (pool_norms_ref pools the trailing 2 dims)
                 nw = NormPyramid.from_normmap(nw, levels, tile=tile)
@@ -1203,13 +1226,18 @@ class WeightPlanCache:
     def frozen_weight(self, w, *, tau, tile: int = 64, block_n: int = 1,
                       levels: int = 0, backend: str = "auto",
                       use_mxu: bool = False, store=None,
-                      dtype: str = "float32"):
+                      dtype: str = "float32", tuned=None):
         """FrozenWeight for `w` at the given gating config, through the
         memory → store → build tiers. Keyed on the weight's CONTENT
         fingerprint (slices of a stacked parameter hash stably, unlike
         id()), so repeated engine warm-ups and the precompute CLI agree.
         dtype is the compute dtype the artifact is frozen for (quantized
-        norms + widened gate τ + int8 scale tables) and part of the key."""
+        norms + widened gate τ + int8 scale tables) and part of the key.
+        tuned (a `core.cost.TunedParams`) rides the built artifact as
+        provenance + bucket floor; it is NOT part of the cache/store key —
+        callers passing tuned params pass the tuned block_n/levels here too
+        (that's what addresses the artifact). A store hit that predates the
+        field gets `tuned` re-attached so the bucket floor still applies."""
         from repro.plans import frozen as _frozen  # circular-safe
         from repro.plans import store as _pstore
 
@@ -1229,11 +1257,13 @@ class WeightPlanCache:
             fw = store.get(h, tau=tau, tile=tile, block_n=block_n,
                            levels=levels, backend=resolved, use_mxu=use_mxu,
                            dtype=dtype)
+            if fw is not None and fw.tuned is None and tuned is not None:
+                fw.tuned = tuned
         if fw is None:
             fw = _frozen.FrozenWeight.build(
                 w, tau, tile=tile, block_n=block_n, levels=levels,
                 backend=resolved, use_mxu=use_mxu, weight_hash=h,
-                compute_dtype=dtype)
+                compute_dtype=dtype, tuned=tuned)
             if store is not None:
                 store.put(fw)
         self._frozen[key] = fw

@@ -25,12 +25,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import CompilerParams as _CompilerParams
+from repro.kernels import quantize as _quant
 
 
-def _getnorm_kernel(x_ref, o_ref, *, use_mxu: bool):
-    j = pl.program_id(1)
-    x = x_ref[...].astype(jnp.float32)
-    sq = x * x
+def _tile_sumsq(sq, *, use_mxu: bool):
+    """Reduce one resident (t, t) f32 tile of squares to a scalar — the
+    body shared by the plain and fused-quantizing get-norm kernels (one
+    reduction implementation ⇒ the fused norms are bit-identical to the
+    unfused quantize→dequantize→norms composition)."""
     if use_mxu:
         # Paper Eq. 3–4 on the MXU: row-sum then total via dot against ones.
         t = sq.shape[0]
@@ -41,10 +43,36 @@ def _getnorm_kernel(x_ref, o_ref, *, use_mxu: bool):
         total = jax.lax.dot_general(
             ones_col, rows, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )  # (1, 1)
-        s = total[0, 0]
-    else:
-        s = jnp.sum(sq)
+        return total[0, 0]
+    return jnp.sum(sq)
+
+
+def _getnorm_kernel(x_ref, o_ref, *, use_mxu: bool):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)
+    s = _tile_sumsq(x * x, use_mxu=use_mxu)
     o_ref[0, j] = jnp.sqrt(s)
+
+
+def _getnorm_quant_kernel(x_ref, o_ref, s_ref, *, use_mxu: bool):
+    """Fused int8 absmax/scale + get-norm: ONE read of the resident tile
+    yields both the per-tile quantization scale and the Frobenius norm OF
+    the quantized view (what the int8 kernel will actually multiply).
+
+    Bit-identity with the unfused `quantize_tiles` → `dequantize_tiles` →
+    `tile_norms` composition: amax/round/clip are order-independent
+    elementwise f32 ops, the int8 codes are integers in [-127, 127] (exactly
+    representable in f32, so skipping the int8 round-trip changes nothing),
+    and the final reduction is the same `_tile_sumsq` body.
+    """
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)
+    scale = (jnp.maximum(jnp.max(jnp.abs(x)), _quant._TINY)
+             * jnp.float32(_quant._INV127))
+    dq = jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale
+    s = _tile_sumsq(dq * dq, use_mxu=use_mxu)
+    o_ref[0, j] = jnp.sqrt(s)
+    s_ref[0, j] = scale
 
 
 def _pool_kernel(n_ref, o_ref):
@@ -143,4 +171,50 @@ def tile_norms(
         ),
         interpret=interpret,
         name="spamm_getnorm",
+    )(x)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "use_mxu", "interpret")
+)
+def tile_norms_quant(
+    x: jax.Array,
+    tile: int = 64,
+    *,
+    use_mxu: bool = False,
+    interpret: bool = False,
+):
+    """Fused int8-quantization get-norm: per-tile Frobenius norms of the
+    int8 quantized VIEW of x plus the per-tile scales, from one read.
+
+    x: (M, K) with M % tile == 0 == K % tile. Returns (norms, scales), both
+    (M//tile, K//tile) f32. `norms` is bit-identical to
+    `tile_norms(dequantize_tiles(*quantize_tiles(x, tile)), tile)` and
+    `scales` to `quantize_tiles(x, tile)[1]` — this kernel just collapses
+    the three passes (absmax read, quantize/dequantize write+read, norm
+    read) into one, which is how `execute()`-bound int8 plans get their
+    activation scales without a separate per-call pass.
+    """
+    m, k = x.shape
+    if m % tile or k % tile:
+        raise ValueError(f"shape {x.shape} not divisible by tile {tile}")
+    gm, gk = m // tile, k // tile
+    kernel = functools.partial(_getnorm_quant_kernel, use_mxu=use_mxu)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gk),
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((1, gk), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, gk), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gm, gk), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gk), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="spamm_getnorm_quant",
     )(x)

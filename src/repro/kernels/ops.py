@@ -79,6 +79,11 @@ class Backend:
       dequantized into the f32 accumulator. None ⇒ the executor widens to
       f32 (dequantizes and takes the normal path), so `jnp`/third-party
       backends keep working at identical numerics-of-record.
+    norms_quant(x, tile, use_mxu) → (norms, scales), both (M//tile, K//tile)
+      f32 — the fused int8 absmax/scale + get-norm kernel: norms of the
+      QUANTIZED view plus the per-tile quantization scales from one read.
+      None ⇒ `int8_norms_and_scales` composes the unfused
+      quantize→dequantize→norms path (bit-identical results either way).
     """
     name: str
     norms: Callable[..., jax.Array]
@@ -87,6 +92,7 @@ class Backend:
     pyramid_norms: Callable[..., tuple] = None
     matmul_worklist: Callable[..., jax.Array] = None
     matmul_worklist_int8: Callable[..., jax.Array] = None
+    norms_quant: Callable[..., tuple] = None
 
 
 def _jnp_norms(x, tile, use_mxu=False):
@@ -151,6 +157,14 @@ def _pallas_matmul_worklist(interpret):
     return matmul_worklist
 
 
+def _pallas_norms_quant(interpret):
+    def norms_quant(x, tile, use_mxu=False):
+        return _getnorm.tile_norms_quant(
+            x, tile, use_mxu=use_mxu, interpret=interpret)
+
+    return norms_quant
+
+
 def _pallas_matmul_worklist_int8(interpret):
     def matmul_worklist_int8(a_q, b_q, a_scale, b_scale, work, tile, block_n,
                              out_dtype):
@@ -174,11 +188,13 @@ BACKENDS = {
     "interpret": Backend("interpret", _pallas_norms(True), _pallas_matmul(True),
                          pyramid_norms=_pallas_pyramid_norms(True),
                          matmul_worklist=_pallas_matmul_worklist(True),
-                         matmul_worklist_int8=_pallas_matmul_worklist_int8(True)),
+                         matmul_worklist_int8=_pallas_matmul_worklist_int8(True),
+                         norms_quant=_pallas_norms_quant(True)),
     "pallas": Backend("pallas", _pallas_norms(False), _pallas_matmul(False),
                       pyramid_norms=_pallas_pyramid_norms(False),
                       matmul_worklist=_pallas_matmul_worklist(False),
-                      matmul_worklist_int8=_pallas_matmul_worklist_int8(False)),
+                      matmul_worklist_int8=_pallas_matmul_worklist_int8(False),
+                      norms_quant=_pallas_norms_quant(False)),
 }
 
 VALID_BACKENDS = ("auto", *BACKENDS)
@@ -234,6 +250,27 @@ def pyramid_norms(
     for _ in range(levels):
         maps.append(_ref.pool_norms_ref(maps[-1]))
     return tuple(maps)
+
+
+def int8_norms_and_scales(
+    x: jax.Array, tile: int = 64, *, backend: str = "auto",
+    use_mxu: bool = False
+):
+    """(norms, scales) of the int8-quantized view of x — THE entry point
+    every int8 planner goes through. Backends with the fused kernel
+    (`norms_quant`) pay ONE read of x; others compose the unfused
+    quantize → dequantize → norms path. Results are bit-identical either
+    way (the int8 codes are exactly representable in f32 and both paths
+    share the reduction body), which is what keeps frozen ≡ eager parity
+    independent of which backend planned."""
+    bk = get_backend(backend)
+    if bk.norms_quant is not None:
+        return bk.norms_quant(x, tile, use_mxu=use_mxu)
+    from repro.kernels import quantize as _quant  # local: keep import light
+
+    q, s = _quant.quantize_tiles(x, tile)
+    dq = _quant.dequantize_tiles(q, s, tile)
+    return bk.norms(dq, tile, use_mxu=use_mxu), s
 
 
 def spamm_compact(mask: jax.Array):

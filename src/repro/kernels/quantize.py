@@ -58,6 +58,13 @@ COMPUTE_DTYPES = ("float32", "bfloat16", "int8")
 # a divide-by-zero (their q is all zeros either way)
 _TINY = 1e-30
 
+# scale = max(amax, tiny) · (1/127) as a multiply by THIS f32 constant, not
+# a division by 127: XLA lowers a constant division differently inside a
+# compiled (Pallas) kernel body than in eager mode (reciprocal fast-math,
+# 1 ulp apart), and the fused getnorm+absmax kernel must produce scales
+# bit-identical to this host-side function
+_INV127 = float(np.float32(1.0) / np.float32(127.0))
+
 
 def canonical_dtype(dtype) -> str:
     """Resolve a user-facing dtype spec to one of COMPUTE_DTYPES."""
@@ -108,7 +115,8 @@ def quantize_tiles(
     m, n = x.shape
     gm, gn = m // tile, n // tile_n
     if scales is None:
-        scales = jnp.maximum(tile_absmax(x, tile, tile_n), _TINY) / 127.0
+        scales = (jnp.maximum(tile_absmax(x, tile, tile_n), _TINY)
+                  * jnp.float32(_INV127))
     x4 = x.astype(jnp.float32).reshape(gm, tile, gn, tile_n)
     q = jnp.clip(
         jnp.round(x4 / scales[:, None, :, None]), -127.0, 127.0

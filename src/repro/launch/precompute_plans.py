@@ -45,6 +45,15 @@ def main():
                          "(quantized norms + widened gate τ; int8 also "
                          "stores the per-tile weight scale tables)")
     ap.add_argument("--block-n", type=int, default=1)
+    ap.add_argument("--autotune", action="store_true",
+                    help="roofline-autotune block_n/levels/bucket per weight "
+                         "(core.cost) instead of freezing at the flags above "
+                         "— the flags become the tuner's defaults, always in "
+                         "its search space")
+    ap.add_argument("--tune-profile", default=None,
+                    help="calibrated cost-profile JSON (benchmarks/autotune "
+                         "--calibrate); default: nominal per-backend "
+                         "coefficients")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,14 +67,16 @@ def main():
     params = M.init_params(cfg, pcfg, jax.random.key(args.seed))
     scfg = SpammConfig(enable=True, tau=args.tau, tile=args.spamm_tile,
                        backend=args.spamm_backend, levels=args.spamm_levels,
-                       block_n=args.block_n, dtype=args.spamm_dtype)
+                       block_n=args.block_n, dtype=args.spamm_dtype,
+                       autotune=args.autotune, tune_profile=args.tune_profile)
     store = PlanStore(args.plan_store)
     t0 = time.time()
     n = populate(store, params, scfg)
     dt = time.time() - t0
+    tuned_note = " (autotuned block_n/levels/bucket)" if args.autotune else ""
     print(f"precomputed {n} weight plans into {args.plan_store} "
           f"({store.hits} already present, {store.misses} built) "
-          f"in {dt:.2f}s — {len(store)} artifacts total")
+          f"in {dt:.2f}s — {len(store)} artifacts total{tuned_note}")
 
 
 if __name__ == "__main__":

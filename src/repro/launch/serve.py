@@ -45,6 +45,15 @@ def main():
                          "the f32 gate via the widened τ). Must match the "
                          "plan store's precompute dtype or every lookup "
                          "misses")
+    ap.add_argument("--spamm-autotune", action="store_true",
+                    help="roofline-autotune block_n/levels/bucket per weight "
+                         "at freeze time (core.cost); --spamm-block-n/"
+                         "--spamm-levels become the tuner's defaults. Must "
+                         "match the plan store's precompute setting or "
+                         "lookups miss (tuned params address the artifacts)")
+    ap.add_argument("--spamm-tune-profile", default=None,
+                    help="calibrated cost-profile JSON for --spamm-autotune "
+                         "(benchmarks/autotune --calibrate)")
     ap.add_argument("--plan-store", default=None,
                     help="on-disk PlanStore directory of precomputed frozen "
                          "weight plans (populate offline with "
@@ -87,7 +96,9 @@ def main():
                                 backend=args.spamm_backend,
                                 block_n=args.spamm_block_n,
                                 levels=args.spamm_levels,
-                                dtype=args.spamm_dtype)
+                                dtype=args.spamm_dtype,
+                                autotune=args.spamm_autotune,
+                                tune_profile=args.spamm_tune_profile)
     reshard_cfg = None
     if args.reshard_every > 0:
         if spamm_cfg is None:

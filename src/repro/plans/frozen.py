@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost import TunedParams
 from repro.core.plan import NormPyramid, _bucket, pad_to_tile
 from repro.kernels import ops as kops
 from repro.kernels import quantize as kquant
@@ -65,11 +66,17 @@ class FrozenWeight:
 
     Static metadata (aux): tile, block_n, levels (coarsening steps),
     backend (resolved name), wshape (true K, N), padded (Kp, Np),
-    weight_hash (content fingerprint, "" when unknown), version, and
+    weight_hash (content fingerprint, "" when unknown), version,
     compute_dtype — the precision this artifact was frozen for: its normmaps
     describe the QUANTIZED weight view and `for_rows` bakes the
     quantization-widened gate τ into the FrozenPlan (tau here stays the
-    REQUESTED τ; it is the store-addressing value).
+    REQUESTED τ; it is the store-addressing value) — and `tuned`, the
+    `core.cost.TunedParams` record when this artifact's blocking parameters
+    came from the roofline autotuner (None for hand-configured artifacts).
+    tuned is provenance + the work-list bucket floor `for_rows` pads to; it
+    is NOT an addressing field — the tuned block_n/levels already address
+    the artifact through the ordinary config echo, and legacy stores
+    without the field load as tuned=None.
     """
 
     def __init__(self, tau, levels, nbmax, kj_k, kj_j, b_scale=None, *,
@@ -77,7 +84,8 @@ class FrozenWeight:
                  wshape: Tuple[int, int], padded: Tuple[int, int],
                  use_mxu: bool = False, weight_hash: str = "",
                  version: int = PLAN_FORMAT_VERSION,
-                 compute_dtype: str = "float32"):
+                 compute_dtype: str = "float32",
+                 tuned: TunedParams | None = None):
         self.tau = tau
         self.levels = tuple(levels)
         self.nbmax = nbmax
@@ -94,6 +102,7 @@ class FrozenWeight:
         self.weight_hash = weight_hash
         self.version = version
         self.compute_dtype = compute_dtype
+        self.tuned = tuned
         self._rows_cache: dict = {}
 
     # -- pytree protocol ----------------------------------------------------
@@ -102,18 +111,19 @@ class FrozenWeight:
                     self.b_scale)
         aux = (self.tile, self.block_n, self.num_levels, self.backend,
                self.wshape, self.padded, self.use_mxu, self.weight_hash,
-               self.version, self.compute_dtype)
+               self.version, self.compute_dtype, self.tuned)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         tau, levels, nbmax, kj_k, kj_j, b_scale = children
         (tile, block_n, num_levels, backend, wshape, padded, use_mxu, wh,
-         ver, dtype) = aux
+         ver, dtype, tuned) = aux
         return cls(tau, levels, nbmax, kj_k, kj_j, b_scale, tile=tile,
                    block_n=block_n, num_levels=num_levels, backend=backend,
                    wshape=wshape, padded=padded, use_mxu=use_mxu,
-                   weight_hash=wh, version=ver, compute_dtype=dtype)
+                   weight_hash=wh, version=ver, compute_dtype=dtype,
+                   tuned=tuned)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -135,6 +145,12 @@ class FrozenWeight:
         """Number of weight-admissible (k, j) pairs (W)."""
         return int(self.kj_k.shape[0])
 
+    @property
+    def bucket_floor(self) -> int:
+        """The work-list bucket floor `for_rows` pads to — the autotuned
+        value when this artifact carries one, else the historical 16."""
+        return self.tuned.bucket if self.tuned is not None else 16
+
     def config_key(self) -> dict:
         """The config echo that (with the weight hash) addresses this
         artifact in a PlanStore — EVERY field that changes the computed
@@ -154,7 +170,8 @@ class FrozenWeight:
     def build(cls, w, tau, *, tile: int = 64, block_n: int = 1,
               levels: int = 0, backend: str = "auto", use_mxu: bool = False,
               weight_hash: str = "",
-              compute_dtype: str = "float32") -> "FrozenWeight":
+              compute_dtype: str = "float32",
+              tuned: TunedParams | None = None) -> "FrozenWeight":
         """Freeze the weight side of `x @ w` gating at threshold `tau`.
 
         Runs the backend's get-norm ONCE (plus `levels` pooling reductions)
@@ -174,13 +191,15 @@ class FrozenWeight:
         k, n = w.shape
         wp = pad_to_tile(w, tile, tile * block_n)
         b_scale = None
-        wv = wp
         if compute_dtype == "int8":
-            qb, b_scale = kquant.quantize_tiles(wp, tile)
-            wv = kquant.dequantize_tiles(qb, b_scale, tile)
-        elif compute_dtype != "float32":
-            wv = kquant.quantized_view(wp, compute_dtype, tile)
-        base = bk.norms(wv, tile, use_mxu=use_mxu)
+            # fused absmax/scale + get-norm: quantized-view norms AND the
+            # persisted b_scale table from one read of the padded weight
+            base, b_scale = kops.int8_norms_and_scales(
+                wp, tile, backend=bk.name, use_mxu=use_mxu)
+        else:
+            wv = (kquant.quantized_view(wp, compute_dtype, tile)
+                  if compute_dtype != "float32" else wp)
+            base = bk.norms(wv, tile, use_mxu=use_mxu)
         pyr = NormPyramid.from_normmap(base, levels, tile=tile)
         base_np = np.asarray(base, np.float32)
         gk, gnp = base_np.shape
@@ -208,7 +227,7 @@ class FrozenWeight:
             wshape=(int(k), int(n)),
             padded=(int(wp.shape[0]), int(wp.shape[1])),
             use_mxu=use_mxu, weight_hash=weight_hash,
-            compute_dtype=compute_dtype,
+            compute_dtype=compute_dtype, tuned=tuned,
         )
 
     # -- shape specialization -----------------------------------------------
@@ -217,15 +236,16 @@ class FrozenWeight:
 
         Emits the step tables pair-major ((i, j) runs contiguous, k
         ascending within a run) exactly like `compact_from_triples`, padded
-        to a power-of-two bucket of at least `min_steps` (pass a common
-        bucket when plans of several weights must stack into one scan
-        input). Padding steps repeat the last real triple with the `real`
-        bit clear, so the traced gate can never activate them. Cached per
-        (gm, bucket)."""
+        to a power-of-two bucket of at least max(`min_steps`,
+        `bucket_floor`) — the floor is the autotuned per-weight bucket when
+        present; pass a common `min_steps` when plans of several weights
+        must stack into one scan input. Padding steps repeat the last real
+        triple with the `real` bit clear, so the traced gate can never
+        activate them. Cached per (gm, bucket)."""
         gk, gnb = self.grid
         w = self.num_kj
         s_real = gm * w
-        s = _bucket(max(s_real, min_steps))
+        s = _bucket(max(s_real, min_steps), self.bucket_floor)
         key = (gm, s)
         hit = self._rows_cache.get(key)
         if hit is not None:
@@ -364,12 +384,13 @@ class FrozenPlan:
 def freeze_weight(w, tau, *, tile: int = 64, block_n: int = 1,
                   levels: int = 0, backend: str = "auto",
                   use_mxu: bool = False, weight_hash: str = "",
-                  compute_dtype: str = "float32") -> FrozenWeight:
+                  compute_dtype: str = "float32",
+                  tuned: TunedParams | None = None) -> FrozenWeight:
     """Convenience alias for `FrozenWeight.build`."""
     return FrozenWeight.build(w, tau, tile=tile, block_n=block_n,
                               levels=levels, backend=backend, use_mxu=use_mxu,
                               weight_hash=weight_hash,
-                              compute_dtype=compute_dtype)
+                              compute_dtype=compute_dtype, tuned=tuned)
 
 
 def stack_plans(fps) -> FrozenPlan:

@@ -43,15 +43,46 @@ def iter_gated_weights(params, _prefix=()):
             yield path, sub
 
 
+def tune_for(w, scfg, *, profile=None, use_mxu: bool = False):
+    """Autotune one weight's blocking parameters against the roofline cost
+    model: argmin of predicted frozen-call time over block_n × levels ×
+    bucket floor, with the config's own (block_n, levels, 16) always in the
+    search space (the tuned pick is never predicted slower). `profile` is a
+    loaded `core.cost.CostProfile`; None loads `scfg.tune_profile` (or the
+    nominal per-backend coefficients)."""
+    from repro.core import cost  # deferred: precompute imports stay light
+
+    if profile is None:
+        profile = cost.CostProfile.load_or_default(
+            getattr(scfg, "tune_profile", None))
+    return cost.tune_weight(
+        w, scfg.tau, tile=scfg.tile,
+        dtype=getattr(scfg, "dtype", "float32"), backend=scfg.backend,
+        profile=profile,
+        defaults=(scfg.block_n, getattr(scfg, "levels", 0), 16),
+        use_mxu=use_mxu)
+
+
 def _freeze_one(w, scfg, *, cache=None, store: Optional[PlanStore] = None,
-                use_mxu: bool = False) -> FrozenWeight:
-    """One weight → FrozenWeight, through the cache/store tiers when given."""
-    kw = dict(tau=scfg.tau, tile=scfg.tile, block_n=scfg.block_n,
-              levels=getattr(scfg, "levels", 0), backend=scfg.backend)
+                use_mxu: bool = False, tuned=None,
+                profile=None) -> FrozenWeight:
+    """One weight → FrozenWeight, through the cache/store tiers when given.
+
+    With `scfg.autotune` the artifact is frozen at the TUNED block_n/levels
+    (which address it in the store) and carries the `TunedParams` record;
+    pass `tuned` explicitly to reuse one tuning across stacked layer slices
+    (stacked plans must share static metadata — see `stack_plans`)."""
+    if tuned is None and getattr(scfg, "autotune", False):
+        tuned = tune_for(w, scfg, profile=profile, use_mxu=use_mxu)
+    block_n = tuned.block_n if tuned is not None else scfg.block_n
+    levels = (tuned.levels if tuned is not None
+              else getattr(scfg, "levels", 0))
+    kw = dict(tau=scfg.tau, tile=scfg.tile, block_n=block_n, levels=levels,
+              backend=scfg.backend)
     dtype = getattr(scfg, "dtype", "float32")
     if cache is not None:
         return cache.frozen_weight(w, use_mxu=use_mxu, store=store,
-                                   dtype=dtype, **kw)
+                                   dtype=dtype, tuned=tuned, **kw)
     h = fingerprint(w)
     if store is not None:
         # may raise PlanStoreError on stale artifacts
@@ -59,7 +90,7 @@ def _freeze_one(w, scfg, *, cache=None, store: Optional[PlanStore] = None,
         if fw is not None:
             return fw
     fw = FrozenWeight.build(w, use_mxu=use_mxu, weight_hash=h,
-                            compute_dtype=dtype, **kw)
+                            compute_dtype=dtype, tuned=tuned, **kw)
     if store is not None:
         store.put(fw)
     return fw
@@ -74,21 +105,35 @@ def freeze_tree(params, scfg, *, cache=None, store: Optional[PlanStore] = None,
     per-layer `FrozenWeight`s (stacked weight); `count` is the number of
     distinct weight matrices frozen. `cache` (a `WeightPlanCache`) is the
     in-memory tier; `store` the persistent one — with a warm store this
-    whole walk is load-only, no get-norm pass."""
+    whole walk is load-only, no get-norm pass.
+
+    With `scfg.autotune`, each 2-D weight is tuned individually; a stacked
+    leaf is tuned ONCE (from its first slice) and every layer slice is
+    frozen at that shared config — stacked per-layer plans must agree on
+    block_n/levels/bucket to ride one lax.scan (`stack_plans`)."""
+    autotune = getattr(scfg, "autotune", False)
+    profile = None
+    if autotune:
+        from repro.core import cost  # deferred: precompute imports stay light
+
+        profile = cost.CostProfile.load_or_default(
+            getattr(scfg, "tune_profile", None))
     count = 0
     tree: dict = {}
     for path, leaf in iter_gated_weights(params):
         if leaf.ndim == 2:
             fz = _freeze_one(leaf, scfg, cache=cache, store=store,
-                             use_mxu=use_mxu)
+                             use_mxu=use_mxu, profile=profile)
             count += 1
         else:
             # stacked (L, K, N): freeze per layer slice (flattening extra
             # leading dims first keeps hybrid group stacks uniform)
             flat = np.asarray(leaf).reshape(-1, *leaf.shape[-2:])
+            tuned = (tune_for(flat[0], scfg, profile=profile,
+                              use_mxu=use_mxu) if autotune else None)
             fz = [
                 _freeze_one(flat[l], scfg, cache=cache, store=store,
-                            use_mxu=use_mxu)
+                            use_mxu=use_mxu, tuned=tuned)
                 for l in range(flat.shape[0])
             ]
             count += flat.shape[0]

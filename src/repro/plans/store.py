@@ -27,6 +27,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost import TunedParams
 from repro.kernels import ops as kops
 from repro.kernels import quantize as kquant
 from repro.plans.frozen import FrozenWeight, PLAN_FORMAT_VERSION
@@ -176,6 +177,12 @@ class PlanStore:
             "padded": list(fw.padded),
             "arrays": sorted(arrays),
         }
+        if fw.tuned is not None:
+            # additive payload, deliberately NOT part of the key and NOT a
+            # format bump: tuned block_n/levels already address the artifact
+            # through the config echo; this records provenance + the bucket
+            # floor, and legacy manifests without it load as tuned=None
+            manifest["tuned"] = fw.tuned.as_manifest()
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1, sort_keys=True)
         if os.path.exists(final):
@@ -226,6 +233,7 @@ class PlanStore:
             weight_hash=man["weight_hash"],
             version=int(man["format_version"]),
             compute_dtype=man.get("dtype", "float32"),
+            tuned=TunedParams.from_manifest(man.get("tuned")),
         )
         self.hits += 1
         return fw

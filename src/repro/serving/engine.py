@@ -165,8 +165,13 @@ class Engine:
                 return {k: specialize(v) for k, v in node.items()}
             if isinstance(node, list):
                 # per-layer plans must share one step bucket to stack into a
-                # scan input; padding steps carry a clear `real` bit
-                bucket = max(_bucket(gm * fw.num_kj) for fw in node)
+                # scan input; padding steps carry a clear `real` bit. Each
+                # weight's autotuned bucket floor participates in the max, so
+                # the common bucket honors every layer's tuned floor (the
+                # result is a power of two ≥ each floor, hence stable under
+                # every layer's own for_rows flooring).
+                bucket = max(_bucket(gm * fw.num_kj, fw.bucket_floor)
+                             for fw in node)
                 return stack_plans(
                     [fw.for_rows(gm, min_steps=bucket) for fw in node])
             return node.for_rows(gm)
