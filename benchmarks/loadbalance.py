@@ -13,10 +13,12 @@ equal-work imbalance must be strictly lower than contiguous AND cyclic.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, timeit
+from benchmarks.report import write_bench_json
 from repro.core import spamm as cs, schedule
 from repro.kernels import ref
 
@@ -36,6 +38,32 @@ def _aliased_banded(n: int, stride_rows: int, seed: int = 1) -> np.ndarray:
         a[r:r + TILE] = 0.05 * rng.standard_normal((TILE, n)).astype(
             np.float32)
     return a
+
+
+def _strip_times(a: np.ndarray, b: np.ndarray, tau: float, offsets,
+                 repeat: int = 5, backend: str = "interpret") -> np.ndarray:
+    """Median wall-clock µs of each strip's work-list EXECUTE on its own
+    rows — the per-shard step time a lockstep shard_map mesh waits on (the
+    slowest strip gates the step; `schedule.strip_tables` hands these exact
+    strips to the distributed bodies and the pod-sharded engine). Planning
+    happens once per strip outside the timer, mirroring the frozen-plan
+    serving path where shards execute precomputed step tables. The default
+    backend is the interpreted Pallas kernel: its cost is per-STEP
+    dominated like a real accelerator's, where the jnp fallback's scatter
+    overhead scales with rows and would mask the work imbalance."""
+    from repro.core import plan as planner
+
+    gm = a.shape[0] // TILE
+    at = a.reshape(gm, TILE, a.shape[1])
+    jb = jnp.asarray(b)
+    exec_jit = jax.jit(planner.execute)
+    ts = []
+    for d in range(len(offsets) - 1):
+        loc = jnp.asarray(np.ascontiguousarray(
+            at[offsets[d]:offsets[d + 1]]).reshape(-1, a.shape[1]))
+        p = planner.plan(loc, jb, tau, tile=TILE, backend=backend)
+        ts.append(timeit(exec_jit, p, loc, jb, warmup=1, repeat=repeat))
+    return np.asarray(ts, np.float64)
 
 
 def _strip_exec_parity(a: np.ndarray, tau: float, offsets) -> None:
@@ -90,6 +118,7 @@ def run(quick: bool = False):
     # the structure both uniform schedules lose on. Parity-asserting: the
     # strict win below and the strip-execution identity are the CI gate.
     tau = 0.02
+    cells = []
     aa = _aliased_banded(N, 4)
     bb = (0.05 * np.random.default_rng(2).standard_normal((N, N))).astype(
         np.float32)
@@ -112,6 +141,52 @@ def run(quick: bool = False):
             f"imbalance_equal_work={imb_e:.3f};"
             f"improvement_vs_best_uniform={min(imb_c, imb_s)/imb_e:.2f}x",
         )
+        cells.append({
+            "name": f"aliased_predicted_ndev{ndev}", "n": N, "tile": TILE,
+            "tau": tau, "ndev": ndev, "imbalance_contiguous": imb_c,
+            "imbalance_cyclic": imb_s, "imbalance_equal_work": float(imb_e),
+        })
+
+    # MEASURED per-shard step time (the ROADMAP leftover): wall-clock each
+    # strip's plan+execute under the equal-work cut vs the uniform
+    # contiguous cut on the same aliased grid. A lockstep mesh waits on the
+    # slowest shard, so max/mean of the measured strip times IS the step-
+    # time imbalance; equal_work must be no worse than contiguous (small
+    # slack for host-timing noise — the predicted assert above is strict).
+    n_m = 512 if not quick else 256
+    ndev_m = 4
+    am = _aliased_banded(n_m, 4)
+    bm = (0.05 * np.random.default_rng(3).standard_normal(
+        (n_m, n_m))).astype(np.float32)
+    vm = schedule.v_matrix(ref.tile_norms_ref(jnp.asarray(am), TILE),
+                           ref.tile_norms_ref(jnp.asarray(bm), TILE), tau)
+    gm_m = n_m // TILE
+    offs_e = schedule.equal_work_partition(vm, ndev_m)
+    offs_c = np.rint(np.arange(ndev_m + 1) * gm_m / ndev_m).astype(np.int64)
+    t_e = _strip_times(am, bm, tau, offs_e)
+    t_c = _strip_times(am, bm, tau, offs_c)
+    imb_me = float(t_e.max() / t_e.mean())
+    imb_mc = float(t_c.max() / t_c.mean())
+    assert imb_me <= imb_mc * 1.10, (imb_me, imb_mc, t_e, t_c)
+    row(
+        f"loadbalance/measured-step-time-ndev={ndev_m}",
+        float(t_e.max()),
+        f"measured_imbalance_equal_work={imb_me:.3f};"
+        f"measured_imbalance_contiguous={imb_mc:.3f};"
+        f"slowest_strip_contiguous_us={t_c.max():.1f}",
+    )
+    cells.append({
+        "name": f"aliased_measured_ndev{ndev_m}", "n": n_m, "tile": TILE,
+        "tau": tau, "ndev": ndev_m,
+        "strip_us_equal_work": [float(t) for t in t_e],
+        "strip_us_contiguous": [float(t) for t in t_c],
+        "measured_imbalance_equal_work": imb_me,
+        "measured_imbalance_contiguous": imb_mc,
+    })
+    path = write_bench_json("loadbalance", {"cells": cells},
+                            backend="interpret")
+    print(f"# wrote {path}", flush=True)
+
     # strip execution ≡ flat spamm (small grid; ragged 3-device count)
     n_par = 256
     a_par = _aliased_banded(n_par, 4)

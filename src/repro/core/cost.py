@@ -35,7 +35,7 @@ import json
 import os
 import socket
 import time
-from typing import NamedTuple, Optional, Sequence
+from typing import Mapping, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -379,6 +379,7 @@ def tune(
     coeffs: CostCoeffs,
     profile_key_used: str = "<nominal>",
     gm: int = DEFAULT_TUNE_GM,
+    gm_hist: Optional[Mapping[int, float]] = None,
     norm_a: Optional[np.ndarray] = None,
     mode: str = "frozen",
     defaults: tuple = (1, 0, 16),
@@ -392,25 +393,38 @@ def tune(
     (quantized view for low dtypes). tau: the GATE threshold (already
     widened for low dtypes). norm_a: a representative activation normmap;
     None prices with the all-ones activation (gate reduces to nb ≥ τ —
-    deterministic, weight-structure-driven). The defaults triple is always
-    in the search space, so `predicted_us ≤ default_predicted_us` by
-    construction; ties keep the earliest candidate, and candidates are
-    enumerated defaults-first then ascending, making the tuner a pure
-    function of (norms, τ, coefficients).
+    deterministic, weight-structure-driven). gm_hist: an observed serving
+    row-grid histogram {gm: weight} (`Engine.gm_histogram`) — candidates
+    are then scored by the WEIGHTED SUM of predicted times over the grids
+    a deployment actually runs instead of the single synthetic `gm`
+    (an explicit `norm_a` carries its own grid and takes precedence). The
+    defaults triple is always in the search space, so `predicted_us ≤
+    default_predicted_us` by construction; ties keep the earliest
+    candidate, and candidates are enumerated defaults-first then
+    ascending, making the tuner a pure function of (norms, τ, grid
+    weights, coefficients).
     """
     nb = np.asarray(norm_b, np.float64)
     gk = nb.shape[0]
-    if norm_a is None:
-        na = np.ones((gm, gk), np.float64)
-    else:
+    if norm_a is not None:
         na = np.asarray(norm_a, np.float64)
-        gm = na.shape[0]
+        grids = [(na, 1.0)]
+    elif gm_hist:
+        grids = [(np.ones((int(g), gk), np.float64), float(w))
+                 for g, w in sorted(gm_hist.items()) if w > 0 and g > 0]
+        if not grids:
+            raise ValueError(f"gm_hist has no usable entries: {gm_hist!r}")
+    else:
+        grids = [(np.ones((gm, gk), np.float64), 1.0)]
 
     def predicted(bn: int, lv: int, bk_min: int) -> float:
-        c = predict_counts(na, nb, float(tau), tile=tile, block_n=bn,
-                           dtype=dtype, levels=lv, bucket_min=bk_min,
-                           mode=mode)
-        return predict_time_s(c, coeffs)
+        t = 0.0
+        for na_g, w in grids:
+            c = predict_counts(na_g, nb, float(tau), tile=tile, block_n=bn,
+                               dtype=dtype, levels=lv, bucket_min=bk_min,
+                               mode=mode)
+            t += w * predict_time_s(c, coeffs)
+        return t
 
     d_bn, d_lv, d_bk = defaults
     cands = [(int(d_bn), int(d_lv), int(d_bk))]
@@ -442,6 +456,7 @@ def tune_weight(
     backend: str = "auto",
     profile: Optional[CostProfile] = None,
     gm: int = DEFAULT_TUNE_GM,
+    gm_hist: Optional[Mapping[int, float]] = None,
     norm_a: Optional[np.ndarray] = None,
     mode: str = "frozen",
     defaults: tuple = (1, 0, 16),
@@ -451,7 +466,9 @@ def tune_weight(
     normmap of the QUANTIZED view (what a low-precision kernel multiplies)
     through the backend's get-norm (the fused int8 getnorm+absmax kernel
     when registered), widens τ by the analytic quantization bound, and
-    prices with the profile's coefficients for the resolved backend."""
+    prices with the profile's coefficients for the resolved backend.
+    `gm_hist` (e.g. `Engine.gm_histogram`) prices over the observed
+    serving row grids instead of the synthetic `gm`."""
     from repro.core.plan import pad_to_tile  # circular-safe at call time
     from repro.kernels import ops as kops
 
@@ -473,7 +490,8 @@ def tune_weight(
     tau_gate = float(np.asarray(kquant.widen_tau(float(tau), dtype, tile)))
     return tune(np.asarray(nb), tau_gate, tile=tile, dtype=dtype,
                 coeffs=coeffs, profile_key_used=profile.key_used(bk.name),
-                gm=gm, norm_a=norm_a, mode=mode, defaults=defaults)
+                gm=gm, gm_hist=gm_hist, norm_a=norm_a, mode=mode,
+                defaults=defaults)
 
 
 # ---------------------------------------------------------------------------

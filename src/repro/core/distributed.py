@@ -130,36 +130,11 @@ def _resolve_schedule(a, b, tau, num_devices, *, tile, backend,
 
 
 def _strip_tables(offsets, gm: int, num_devices: int):
-    """Gather/scatter tables realizing a variable-width row partition on a
-    uniform shard_map grid: every device's strip is right-padded to the
-    widest strip by CLAMPING to its own last row (pad rows recompute a row
-    already owned — gating is row-independent, so real rows are untouched
-    and pads are simply dropped on the way back).
-
-    Returns (perm, keep): perm[(d * wmax + s)] = fine tile-row device d
-    computes in slot s; keep marks the non-pad slots. Because strips are
-    contiguous and ascending, keep-masked slots in (device, slot) order
-    enumerate rows 0..gm-1 exactly once, in order.
-
-    Validates the table explicitly (frozen offsets may come from a stale
-    controller cut for a different grid or device count; a malformed table
-    would otherwise shard strips across the wrong devices silently).
-    """
-    offs = np.asarray(offsets, np.int64)
-    if offs.shape != (num_devices + 1,):
-        raise ValueError(
-            f"offset table has {offs.shape[0] - 1} strips for "
-            f"{num_devices} devices — re-cut it for this mesh")
-    if offs[0] != 0 or offs[-1] != gm or np.any(np.diff(offs) < 1):
-        raise ValueError(
-            f"malformed offset table {offs} for row grid {gm}: must rise "
-            f"monotonically from 0 to gm with non-empty strips")
-    widths = np.diff(offs)
-    wmax = int(widths.max())
-    slots = np.arange(wmax)[None, :]
-    idx = np.minimum(offs[:-1, None] + slots, offs[1:, None] - 1)
-    keep = (slots < widths[:, None]).reshape(-1)
-    return idx.reshape(-1), keep
+    """Clamp-pad gather tables of a variable-width row partition — now the
+    shared `schedule.strip_tables` (the serving engine shards its compiled
+    steps from the SAME construction, so a pod's `spamm_rowpart` cut and the
+    engine's can never disagree). Kept as an alias at the historical name."""
+    return _schedule.strip_tables(offsets, gm, num_devices)
 
 
 def _equal_work_offsets(a, b, tau, num_devices, *, tile, backend,

@@ -206,6 +206,92 @@ def partition_imbalance(v, offsets, *, level: int = 0,
     return float(loads.max() / max(loads.mean(), 1e-9))
 
 
+def strip_tables(offsets, gm: int, num_devices: int, *,
+                 width: Optional[int] = None):
+    """Gather/scatter tables realizing a variable-width row partition on a
+    uniform shard grid: every device's strip is right-padded to a common
+    width by CLAMPING to its own last row (pad slots recompute a row already
+    owned — gating is row-independent, so real rows are untouched and pads
+    are simply dropped on the way back).
+
+    Returns (perm, keep): perm[(d * w + s)] = fine row device d computes in
+    slot s; keep marks the non-pad slots. Because strips are contiguous and
+    ascending, keep-masked slots in (device, slot) order enumerate rows
+    0..gm-1 exactly once, in order.
+
+    `width` fixes the padded strip width (≥ the widest strip): the serving
+    engine pins it per wave so every re-cut of the SAME grid produces
+    identically-shaped tables — the static-shape half of recompile-free
+    re-sharding. None uses the widest strip (what `spamm_rowpart` pads to).
+
+    This is THE strip construction: `distributed.spamm_rowpart` and the
+    sharded engine both build their shards from it, so a pod's row partition
+    and the engine's cut can never disagree. Validates the table explicitly
+    (frozen offsets may come from a stale controller cut for a different
+    grid or device count; a malformed table would otherwise shard strips
+    across the wrong devices silently).
+    """
+    offs = np.asarray(offsets, np.int64)
+    if offs.shape != (num_devices + 1,):
+        raise ValueError(
+            f"offset table has {offs.shape[0] - 1} strips for "
+            f"{num_devices} devices — re-cut it for this mesh")
+    if offs[0] != 0 or offs[-1] != gm or np.any(np.diff(offs) < 1):
+        raise ValueError(
+            f"malformed offset table {offs} for row grid {gm}: must rise "
+            f"monotonically from 0 to gm with non-empty strips")
+    widths = np.diff(offs)
+    wmax = int(widths.max())
+    if width is not None:
+        if width < wmax:
+            raise ValueError(
+                f"fixed strip width {width} < widest strip {wmax}: clamp "
+                f"the cut (rescale_offsets max_width=) before building "
+                f"tables")
+        wmax = int(width)
+    slots = np.arange(wmax)[None, :]
+    idx = np.minimum(offs[:-1, None] + slots, offs[1:, None] - 1)
+    keep = (slots < widths[:, None]).reshape(-1)
+    return idx.reshape(-1), keep
+
+
+def rescale_offsets(offsets, fine_rows: int, *,
+                    max_width: Optional[int] = None) -> np.ndarray:
+    """Re-express an offset table cut on one row grid as a cut of another:
+    each boundary keeps its FRACTIONAL position (rounded to the new grid),
+    then is clamped monotone with non-empty strips, and optionally so no
+    strip exceeds `max_width` rows.
+
+    The serving engine cuts at coarser granularity than the probe (request
+    groups vs probe token rows) and pins a static strip width per wave; this
+    is the one mapping between the controller's grid and an executor's.
+    Requires num_strips ≤ fine_rows ≤ num_strips · max_width."""
+    offs = np.asarray(offsets, np.int64)
+    parts = offs.shape[0] - 1
+    src = int(offs[-1])
+    if parts < 1 or src < 1 or offs[0] != 0 or np.any(np.diff(offs) < 1):
+        raise ValueError(f"malformed offset table {offs}")
+    if fine_rows < parts:
+        raise ValueError(
+            f"cannot cut {fine_rows} rows into {parts} non-empty strips")
+    if max_width is not None and fine_rows > parts * max_width:
+        raise ValueError(
+            f"{fine_rows} rows cannot fit {parts} strips of ≤ {max_width}")
+    out = np.rint(offs.astype(np.float64) * (fine_rows / src)).astype(np.int64)
+    out[0], out[-1] = 0, fine_rows
+    for d in range(1, parts):                    # ≥ 1 row per strip, forward
+        out[d] = max(out[d], out[d - 1] + 1)
+    for d in range(parts - 1, 0, -1):            # … and backward
+        out[d] = min(out[d], out[d + 1] - 1)
+    if max_width is not None:
+        for d in range(parts - 1, 0, -1):        # strip d ≤ max_width
+            out[d] = max(out[d], out[d + 1] - max_width)
+        for d in range(1, parts):
+            out[d] = min(out[d], out[d - 1] + max_width)
+    assert out[0] == 0 and out[-1] == fine_rows and np.all(np.diff(out) >= 1)
+    return out
+
+
 def device_loads(v: jax.Array, num_devices: int, schedule: str, *,
                  level: int = 0, fine_rows: int = None,
                  offsets=None) -> np.ndarray:
@@ -382,6 +468,15 @@ class ReshardController:
         """Predicted imbalance of the live partition at the last probe."""
         return self.history[-1]["live_imbalance"] if self.history else None
 
+    @property
+    def live_loads(self) -> Optional[np.ndarray]:
+        """Per-strip predicted work of the live partition at the last probe
+        (what the serve readout and the train loop's telemetry print as the
+        per-shard load profile)."""
+        if not self.history:
+            return None
+        return np.asarray(self.history[-1]["loads"], np.float64)
+
     def due(self, step: int) -> bool:
         return self.cfg.every > 0 and step % self.cfg.every == 0
 
@@ -418,12 +513,15 @@ class ReshardController:
             if event:
                 self.offsets = fresh
                 self.resharded += 1
+        loads = partition_loads(v, self.offsets, level=lv,
+                                fine_rows=fine_rows)
         self.history.append({
             "step": step,
             "grid": int(fresh[-1]),
             "live_imbalance": live_imb,
             "fresh_imbalance": fresh_imb,
             "resharded": event,
+            "loads": [float(x) for x in loads],
         })
         return self.offsets
 

@@ -77,6 +77,17 @@ def main():
     ap.add_argument("--reshard-level", type=int, default=0,
                     help="norm-pyramid level of the re-sharding probe "
                          "estimate (coarser = cheaper)")
+    ap.add_argument("--spamm-mesh-devices", type=int, default=0,
+                    help="pod-sharded serving: run the compiled steps under "
+                         "shard_map over a 1-D mesh of this many devices, "
+                         "the batch rows cut by the live equal-work offsets "
+                         "(needs --spamm-tau + frozen plans; batch and "
+                         "prompt length must be multiples of --spamm-tile)")
+    ap.add_argument("--spamm-shard-width", type=int, default=0,
+                    help="static per-shard width in request GROUPS (of "
+                         "--spamm-tile requests each); 0 = 2·ceil(groups/"
+                         "devices). Caps how far the equal-work cut can "
+                         "skew without a recompile")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,7 +123,9 @@ def main():
     eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len,
                  spamm_cfg=spamm_cfg, plan_store=args.plan_store,
                  freeze_plans=not args.no_freeze_plans,
-                 reshard_cfg=reshard_cfg)
+                 reshard_cfg=reshard_cfg,
+                 mesh_devices=args.spamm_mesh_devices,
+                 shard_max_width=args.spamm_shard_width or None)
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -155,8 +168,32 @@ def main():
             imb_s = f"{imb:.3f}" if imb is not None else "n/a"
             print(f"  reshard: events={sp['resharded']} "
                   f"probes={sp['reshard_probes']} "
-                  f"partition_imbalance={imb_s} "
-                  f"offsets={eng.partition_offsets}")
+                  f"partition_imbalance={imb_s}")
+            offs = eng.partition_offsets
+            if offs is None:
+                print("  partition: unsharded (no live cut yet)")
+            else:
+                offs = np.asarray(offs)
+                rows = np.diff(offs)
+                loads = eng._resharder.live_loads
+                for d in range(rows.shape[0]):
+                    ld = f"{loads[d]:.3f}" if loads is not None else "n/a"
+                    print(f"    strip {d}: rows [{offs[d]}, {offs[d + 1]}) "
+                          f"({int(rows[d])} rows) predicted_load={ld}")
+        else:
+            print("  partition: unsharded (no reshard controller attached)")
+        lay = eng.shard_layout
+        if lay is not None:
+            # lockstep mesh: the measured per-step wall-clock is the
+            # slowest shard's; the per-shard layout shows where the rows sat
+            steps = 1 + max(len(o) - 1 for o in outs)
+            o = lay["offsets"]
+            print(f"  pod-sharded over {args.spamm_mesh_devices} devices: "
+                  f"{dt / steps * 1e3:.1f} ms/step (lockstep), "
+                  f"slot_width={lay['slot_width']} reqs/shard")
+            for d, n in enumerate(lay["real"]):
+                print(f"    shard {d}: reqs [{o[d]}, {o[d + 1]}) "
+                      f"({n} live, {lay['slot_width'] - n} pad slots)")
 
 
 if __name__ == "__main__":

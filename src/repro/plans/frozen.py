@@ -29,7 +29,7 @@ bit-identical to the eager `plan()+execute()` pipeline.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -242,20 +242,85 @@ class FrozenWeight:
         must stack into one scan input. Padding steps repeat the last real
         triple with the `real` bit clear, so the traced gate can never
         activate them. Cached per (gm, bucket)."""
+        return self._specialize(gm, gm, min_steps)
+
+    def slice_rows(self, lo: int, hi: int, *, gm: Optional[int] = None,
+                   min_steps: int = 0) -> "FrozenPlan":
+        """The per-shard plan of row-tile strip [lo, hi) on a LOCAL grid of
+        `gm` tiles (≥ the strip width; default = the width) — what a
+        shard_map'd step consumes when a variable-width row partition
+        assigns this weight's activation rows [lo·tile, hi·tile) to one
+        device, clamp-padded so every shard shares one static shape.
+
+        The step tables enumerate all weight-admissible (k, j) pairs per
+        LOCAL row tile 0..hi-lo (a shard's rows are renumbered from 0; the
+        weight-side pair list is activation-row-agnostic, so the strip's
+        real content depends only on its width — (lo, hi) names the strip
+        and validates the cut). Local tiles ≥ hi-lo are clamp padding: no
+        step targets them (`real` is clear beyond the strip's steps), so
+        pad rows do ZERO gated work — the per-shard work difference IS the
+        load-balance mechanism. Pass a common `min_steps` bucket (computed
+        at the PADDED width) so per-shard plans of one weight stack; built
+        host-side at re-shard time, never in-trace."""
+        if not 0 <= lo <= hi:
+            raise ValueError(f"bad row strip [{lo}, {hi})")
+        width = hi - lo
+        gm = width if gm is None else gm
+        if gm < width:
+            raise ValueError(
+                f"local grid {gm} smaller than strip width {width}")
+        return self._specialize(width, gm, min_steps)
+
+    def shard_by_offsets(self, offsets, *, width: Optional[int] = None,
+                         min_steps: int = 0) -> "FrozenPlan":
+        """Stack per-shard `slice_rows` plans of a variable-width partition
+        (`offsets` as cut by `schedule.equal_work_partition` / rescaled by
+        `schedule.rescale_offsets`, in this weight's row-tile units) into
+        ONE FrozenPlan whose children carry a leading shard dim — the
+        pytree a shard_map'd step takes with every leaf sharded on dim 0.
+
+        `width` fixes the common local grid (≥ the widest strip; default =
+        the widest strip): the engine pins it per wave so every re-cut
+        yields identical shapes (recompile-free swap). All shards share one
+        step bucket computed at the padded width, so their static metadata
+        is identical by construction."""
+        offs = np.asarray(offsets, np.int64)
+        if offs.ndim != 1 or offs.shape[0] < 2 or offs[0] != 0 \
+                or np.any(np.diff(offs) < 1):
+            raise ValueError(f"malformed offset table {offs}")
+        wmax = int(np.diff(offs).max())
+        if width is not None:
+            if width < wmax:
+                raise ValueError(
+                    f"fixed width {width} < widest strip {wmax}")
+            wmax = int(width)
+        bucket = _bucket(max(wmax * self.num_kj, min_steps),
+                         self.bucket_floor)
+        shards = [
+            self.slice_rows(int(offs[d]), int(offs[d + 1]), gm=wmax,
+                            min_steps=bucket)
+            for d in range(offs.shape[0] - 1)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+    def _specialize(self, width: int, gm: int, min_steps: int) -> "FrozenPlan":
+        """Shared body of `for_rows` (width == gm) and `slice_rows` (width ≤
+        gm: real steps cover local tiles [0, width), tiles beyond are
+        untargeted clamp padding)."""
         gk, gnb = self.grid
         w = self.num_kj
-        s_real = gm * w
+        s_real = width * w
         s = _bucket(max(s_real, min_steps), self.bucket_floor)
-        key = (gm, s)
+        key = (width, gm, s)
         hit = self._rows_cache.get(key)
         if hit is not None:
             return hit
         kj_k = np.asarray(self.kj_k, np.int32)
         kj_j = np.asarray(self.kj_j, np.int32)
         if s_real:
-            step_i = np.repeat(np.arange(gm, dtype=np.int32), w)
-            step_j = np.tile(kj_j, gm)
-            step_k = np.tile(kj_k, gm)
+            step_i = np.repeat(np.arange(width, dtype=np.int32), w)
+            step_j = np.tile(kj_j, width)
+            step_k = np.tile(kj_k, width)
             pad = s - s_real
             if pad:
                 step_i = np.concatenate([step_i, np.full(pad, step_i[-1])])

@@ -50,12 +50,41 @@ class Engine:
     the only executed path, bit-identical to the eager plan/execute
     pipeline. `WeightPlanCache` is the in-memory tier above the store (it
     memoizes the frozen artifacts by weight fingerprint) and still serves
-    the eager plan/execute path (benchmarks/plan_cache.py). MoE expert FFNs
-    keep the traced prefill gate (their buffers live inside shard_map) and
-    stay dense in decode.
+    the eager plan/execute path (benchmarks/plan_cache.py).
 
     `freeze_plans=False` opts back into the legacy in-trace gating for A/B
     comparisons (benchmarks/frozen_prefill.py measures the gap).
+
+    Pod-sharded execution (`mesh_devices=N > 1`): the compiled steps run
+    under `shard_map` over a 1-D "rows" mesh of the first N devices —
+    params REPLICATED (`P()`), activation rows, decode caches, and frozen
+    plans SHARDED on the leading dim (`P("rows")`). The live equal-work
+    offsets drive placement: the wave's requests are cut into contiguous
+    per-device groups (`schedule.rescale_offsets` maps the controller's
+    probe-grid cut onto the request-group grid; `schedule.strip_tables` —
+    the same construction `distributed.spamm_rowpart` shards with — builds
+    the clamp-padded slot tables), and each shard's step tables come from
+    `FrozenWeight.slice_rows`/`shard_by_offsets`, sliced ON HOST at
+    (re-)shard time and passed as per-shard jit inputs, never in-trace.
+    Every shard pads to one static width (`shard_max_width` groups, default
+    2·ceil(G/N)), and strips beyond a shard's real width carry a clear
+    `real` bit — pad rows do zero gated work, which is exactly how unequal
+    predicted work becomes equal wall-clock. A `ReshardController` re-cut
+    between decode steps swaps the live sharding WITHOUT recompiling: the
+    engine keeps a per-offsets-table cache of sharded `FrozenPlan` pytrees
+    (same static shapes, new table contents), re-gathers the stacked decode
+    cache host-side along the slot permutation, and the jit cache hits
+    (`Engine.trace_counts` proves it). Bit-parity contract: shard cuts fall
+    on request-group boundaries of `tile` requests (gating is per row tile,
+    so a cut inside a tile would change tile membership and the gate), and
+    prompts must satisfy plen % tile == 0 — under those alignment rules the
+    sharded engine's tokens are bit-identical to the single-device engine's.
+    The body runs with a mesh-free `NetCtx` (ctx.shard no-ops inside the
+    shard), so MoE archs — whose expert FFNs open their OWN shard_map over
+    the outer mesh — are rejected at construction; per-expert frozen plans
+    are the ROADMAP item that lifts this. Multi-host serving rides the same
+    contract (the mesh becomes multi-host; the host-side slicing is
+    device-count-agnostic) and is the remaining slice.
 
     Drift-triggered re-sharding (`reshard_cfg`, a `schedule.ReshardConfig`):
     the engine owns a `schedule.ReshardController` holding the equal-work
@@ -77,7 +106,9 @@ class Engine:
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
                  params, *, max_len: int = 512, spamm_cfg=None,
                  plan_store=None, freeze_plans: Optional[bool] = None,
-                 reshard_cfg: Optional[_schedule.ReshardConfig] = None):
+                 reshard_cfg: Optional[_schedule.ReshardConfig] = None,
+                 mesh_devices: int = 0,
+                 shard_max_width: Optional[int] = None):
         self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
         self.params = params
         self.max_len = max_len
@@ -94,17 +125,108 @@ class Engine:
             self.spamm_ctx.cache.store = plan_store
         self._fw_tree = None     # path-tree of FrozenWeight (lists per layer)
         self._fp_cache: dict = {}  # row-tile grid gm → FrozenPlan pytree
+        self._sfp_cache: dict = {}  # (tpg, width, offsets) → sharded pytree
+        self._gm_hist: dict = {}   # observed row-tile grid gm → step count
         self._resharder = None
         self._steps = 0          # engine steps (prefill + decode), all waves
+        self._shard = None       # live wave's sharding tables (sharded mode)
+        self.trace_counts = {"prefill": 0, "decode": 0}  # (re)compile guard
+        self._ndev = int(mesh_devices) if mesh_devices else 0
+        self._sharded = self._ndev > 1
+        self._shard_width = shard_max_width
+        if self._sharded:
+            if not self._freeze:
+                raise ValueError(
+                    "mesh_devices > 1 needs frozen plans (per-shard step "
+                    "tables ARE the sharding mechanism) — enable spamm_cfg "
+                    "and keep freeze_plans on")
+            if cfg.moe is not None:
+                raise ValueError(
+                    "pod-sharded serving cannot take MoE archs yet: expert "
+                    "FFNs open their own shard_map over the outer mesh "
+                    "(per-expert frozen plans are the ROADMAP item)")
+            devs = jax.devices()
+            if len(devs) < self._ndev:
+                raise ValueError(
+                    f"mesh_devices={self._ndev} but only {len(devs)} "
+                    f"devices visible")
+            from repro.launch.mesh import mesh_from_devices
+
+            self._spamm_mesh = mesh_from_devices(
+                np.array(devs[:self._ndev]), ("rows",))
         if reshard_cfg is not None and enabled and reshard_cfg.every > 0:
-            reshard_cfg = _schedule.resolve_reshard_devices(
-                reshard_cfg, ctx.mesh, ctx.batch_axes)
+            if self._sharded and reshard_cfg.num_devices == 0:
+                reshard_cfg = dataclasses.replace(
+                    reshard_cfg, num_devices=self._ndev)
+            else:
+                reshard_cfg = _schedule.resolve_reshard_devices(
+                    reshard_cfg, ctx.mesh, ctx.batch_axes)
+            if self._sharded and reshard_cfg.num_devices != self._ndev:
+                raise ValueError(
+                    f"reshard_cfg cuts {reshard_cfg.num_devices} strips but "
+                    f"the engine shards over {self._ndev} devices — they "
+                    f"must match (the cut IS the placement)")
             self._resharder = _schedule.ReshardController(reshard_cfg)
-        self._prefill = jax.jit(
-            M.make_prefill_step(cfg, pcfg, ctx, spamm_cfg=self.spamm_ctx))
-        self._decode = jax.jit(M.make_decode_step(
-            cfg, pcfg, ctx,
-            spamm_cfg=self.spamm_ctx if self._freeze else None))
+        self._build_steps()
+
+    def _counted(self, fn, key: str):
+        """Wrap a step body so Python re-execution (= a fresh jit trace)
+        bumps `trace_counts[key]` — the recompile-free re-shard guard."""
+        def wrapped(*args):
+            self.trace_counts[key] += 1
+            return fn(*args)
+
+        return wrapped
+
+    def _build_steps(self):
+        cfg, pcfg = self.cfg, self.pcfg
+        if not self._sharded:
+            self._prefill = jax.jit(self._counted(
+                M.make_prefill_step(cfg, pcfg, self.ctx,
+                                    spamm_cfg=self.spamm_ctx), "prefill"))
+            self._decode = jax.jit(self._counted(M.make_decode_step(
+                cfg, pcfg, self.ctx,
+                spamm_cfg=self.spamm_ctx if self._freeze else None),
+                "decode"))
+            return
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        # the body computes one shard locally: a mesh-free ctx makes every
+        # ctx.shard a no-op (no nested sharding constraints), and the frozen
+        # plans / caches arrive with a leading shard dim that the body peels
+        body_ctx = NetCtx(mesh=None, batch_axes=(),
+                          model_axis=self.ctx.model_axis)
+        inner_pre = M.make_prefill_step(cfg, pcfg, body_ctx,
+                                        spamm_cfg=self.spamm_ctx)
+        inner_dec = M.make_decode_step(cfg, pcfg, body_ctx,
+                                       spamm_cfg=self.spamm_ctx)
+
+        def unstack(tree):
+            return jax.tree.map(lambda t: t[0], tree)
+
+        def restack(tree):
+            return jax.tree.map(lambda t: t[None], tree)
+
+        def pre_body(params, batch, frozen):
+            cache, logits = inner_pre(params, batch, unstack(frozen))
+            return restack(cache), logits
+
+        def dec_body(params, inp, cache, pos, frozen):
+            logits, cache = inner_dec(params, inp, unstack(cache), pos,
+                                      unstack(frozen))
+            return logits, restack(cache)
+
+        mesh = self._spamm_mesh
+        self._prefill = jax.jit(shard_map(
+            self._counted(pre_body, "prefill"), mesh=mesh,
+            in_specs=(P(), P("rows"), P("rows")),
+            out_specs=(P("rows"), P("rows"))))
+        self._decode = jax.jit(shard_map(
+            self._counted(dec_body, "decode"), mesh=mesh,
+            in_specs=(P(), P("rows"), P("rows"), P(), P("rows")),
+            out_specs=(P("rows"), P("rows"))))
 
     # -- drift-triggered re-sharding (control plane) -------------------------
     @property
@@ -113,16 +235,34 @@ class Engine:
         what a pod deployment passes to `distributed.spamm_rowpart`."""
         return self._resharder.offsets if self._resharder else None
 
-    def _maybe_reshard(self, requests, outs):
+    @property
+    def shard_layout(self):
+        """Live wave layout in REQUEST units — None when unsharded or
+        before the first wave. `offsets` cuts the batch into per-shard
+        request ranges; `slot_width` is the padded per-shard slot count
+        every shard allocates; `real` the per-shard live request counts."""
+        if not self._sharded or self._shard is None:
+            return None
+        tile = self.spamm_ctx.cfg.tile
+        offs = self._shard["offs_g"] * tile
+        return {"offsets": offs,
+                "slot_width": int(self._shard["wmax_g"]) * tile,
+                "real": [int(r) for r in np.diff(offs)]}
+
+    def _maybe_reshard(self, requests, outs, cache=None, cur=None):
         """Advance the engine step counter; at the configured cadence,
         re-probe the coarse work estimate from the live tokens (prompts +
         generated so far) and let the controller re-cut on drift
         (`model.reshard_probe` is the shared probe body). Never touches the
-        computed values."""
+        computed values. In pod-sharded mode a re-cut additionally swaps
+        the live wave's tables and re-gathers `cache`/`cur` host-side along
+        the slot permutation — same static shapes and shardings, so the
+        jitted steps' cache entries survive (`trace_counts` proves it).
+        Returns the (possibly re-gathered) `(cache, cur)`."""
         step, self._steps = self._steps, self._steps + 1
         rs = self._resharder
         if rs is None or not rs.due(step):
-            return
+            return cache, cur
         win = rs.cfg.probe_window
         # per-request most-recent window keeps probe cost constant as
         # generation grows (the estimate tracks the live distribution; the
@@ -136,6 +276,19 @@ class Engine:
         toks = np.concatenate([recent(r, o)
                                for r, o in zip(requests, outs)])
         M.reshard_probe(rs, self.spamm_ctx, self.params, step, tokens=toks)
+        if self._sharded and self._shard is not None:
+            src = self._refresh_shard()
+            if src is not None:
+                if cache is not None:
+                    cache = self._permute_cache(cache, src)
+                if cur is not None:
+                    from jax.sharding import NamedSharding
+                    from jax.sharding import PartitionSpec as P
+
+                    cur = jax.device_put(
+                        jnp.take(cur, jnp.asarray(src), axis=0),
+                        NamedSharding(self._spamm_mesh, P("rows")))
+        return cache, cur
 
     # -- frozen-plan assembly ------------------------------------------------
     def _frozen_for(self, rows: int) -> dict:
@@ -151,12 +304,7 @@ class Engine:
         hit = self._fp_cache.get(gm)
         if hit is not None:
             return hit
-        if self._fw_tree is None:
-            from repro.plans.precompute import freeze_tree
-
-            self._fw_tree, _ = freeze_tree(
-                self.params, scfg, cache=self.spamm_ctx.cache,
-                store=self.plan_store)
+        self._ensure_fw_tree()
 
         from repro.plans.frozen import stack_plans
 
@@ -179,6 +327,171 @@ class Engine:
         tree = specialize(self._fw_tree)
         self._fp_cache[gm] = tree
         return tree
+
+    def _ensure_fw_tree(self):
+        """Freeze the weight-side gating artifacts once (warm-started from
+        the plan store when present) — shared by the single-device and
+        pod-sharded assembly paths."""
+        if self._fw_tree is None:
+            from repro.plans.precompute import freeze_tree
+
+            self._fw_tree, _ = freeze_tree(
+                self.params, self.spamm_ctx.cfg, cache=self.spamm_ctx.cache,
+                store=self.plan_store)
+
+    def _note_gm(self, gm: int, n: int = 1):
+        self._gm_hist[int(gm)] = self._gm_hist.get(int(gm), 0) + int(n)
+
+    @property
+    def gm_histogram(self) -> dict:
+        """Observed serving row-grid histogram {gm row tiles: executed gated
+        step count}. Feed it to `core.cost.tune_weight(gm_hist=...)` so the
+        tuner prices the grids this engine actually runs instead of the
+        synthetic `DEFAULT_TUNE_GM`."""
+        return dict(self._gm_hist)
+
+    # -- pod-sharded wave layout ---------------------------------------------
+    def _group_offsets(self, G: int, wmax_g: int) -> np.ndarray:
+        """The live cut re-expressed on the wave's request-group grid and
+        clamped to the static shard width (uniform until the first probe)."""
+        rs = self._resharder
+        src = (np.asarray(rs.offsets, np.int64)
+               if rs is not None and rs.offsets is not None
+               else np.arange(self._ndev + 1, dtype=np.int64))
+        return _schedule.rescale_offsets(src, G, max_width=wmax_g)
+
+    def _shard_tables(self, offs_g: np.ndarray, wmax_g: int, G: int) -> dict:
+        """Request-level gather tables for one cut: `perm` lists, per padded
+        slot in (device, slot) order, the request that fills it (pad slots
+        clamp-replicate their strip's last group, so every slot carries live
+        data and no garbage feeds the tile gates); `keep` marks real slots;
+        `real_slots[r]` is the unique kept slot holding request r."""
+        tile = self.spamm_ctx.cfg.tile
+        perm_g, keep_g = _schedule.strip_tables(
+            offs_g, G, self._ndev, width=wmax_g)
+        perm = (perm_g[:, None] * tile + np.arange(tile)).reshape(-1)
+        keep = np.repeat(keep_g, tile)
+        slots = np.nonzero(keep)[0]
+        real = np.empty(G * tile, np.int64)
+        real[perm[slots]] = slots
+        return {"G": int(G), "wmax_g": int(wmax_g),
+                "offs_g": np.asarray(offs_g, np.int64),
+                "perm": perm, "keep": keep, "real_slots": real}
+
+    def _begin_wave(self, b: int, plen: int):
+        """Lay a wave out on the mesh: cut the request groups by the live
+        offsets and pin the static per-shard width for the whole wave, so a
+        mid-wave re-cut can never change a shape."""
+        tile = self.spamm_ctx.cfg.tile
+        ndev = self._ndev
+        if b % tile:
+            raise ValueError(
+                f"pod-sharded serving needs batch % tile == 0 (got b={b}, "
+                f"tile={tile}): gating is per row tile, and a shard cut "
+                f"inside a tile would change tile membership and the gate")
+        if plen % tile:
+            raise ValueError(
+                f"pod-sharded serving needs prompt length % tile == 0 (got "
+                f"plen={plen}, tile={tile}) so prefill row tiles never "
+                f"straddle a request boundary")
+        G = b // tile
+        if G < ndev:
+            raise ValueError(
+                f"{G} request group(s) of tile={tile} requests cannot fill "
+                f"{ndev} shards — grow the batch to at least tile*ndev="
+                f"{tile * ndev}")
+        ceil_g = -(-G // ndev)
+        cap = int(self._shard_width) if self._shard_width else 2 * ceil_g
+        wmax_g = max(ceil_g, min(G, cap))
+        self._shard = self._shard_tables(
+            self._group_offsets(G, wmax_g), wmax_g, G)
+
+    def _refresh_shard(self):
+        """Re-cut the live wave from the controller's current offsets.
+        Returns the old→new global-slot gather, or None when the cut (at
+        request-group granularity) did not move."""
+        sh = self._shard
+        offs_g = self._group_offsets(sh["G"], sh["wmax_g"])
+        if np.array_equal(offs_g, sh["offs_g"]):
+            return None
+        new = self._shard_tables(offs_g, sh["wmax_g"], sh["G"])
+        src = sh["real_slots"][new["perm"]]
+        self._shard = new
+        return src
+
+    def _sharded_frozen_for(self, tpg: int) -> dict:
+        """Per-shard FrozenPlan pytree for the live cut, stacked on a
+        leading mesh dim — `tpg` is row tiles per request group (plen for
+        prefill, 1 for decode). Sliced ON HOST from the frozen weight-side
+        tables and cached per (tpg, width, offsets): a re-cut back to a
+        seen cut is a dict hit, a fresh cut costs only numpy slicing, and
+        either way the jitted steps never see a new shape."""
+        sh = self._shard
+        key = (tpg, sh["wmax_g"], tuple(int(x) for x in sh["offs_g"]))
+        hit = self._sfp_cache.get(key)
+        if hit is not None:
+            return hit
+        self._ensure_fw_tree()
+
+        from repro.plans.frozen import stack_plans
+
+        offs = sh["offs_g"] * tpg      # the cut, on this step's row-tile grid
+        W = sh["wmax_g"] * tpg         # padded per-shard row-tile width
+        ndev = self._ndev
+
+        def specialize(node):
+            if isinstance(node, dict):
+                return {k: specialize(v) for k, v in node.items()}
+            if isinstance(node, list):
+                # same cross-layer common-bucket rule as `_frozen_for`, but
+                # computed at the PADDED width so every shard — and every
+                # future cut at this width — lands on one step count
+                bucket = max(_bucket(W * fw.num_kj, fw.bucket_floor)
+                             for fw in node)
+                shards = [stack_plans([fw.slice_rows(
+                    int(offs[d]), int(offs[d + 1]), gm=W, min_steps=bucket)
+                    for fw in node]) for d in range(ndev)]
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+            return node.shard_by_offsets(offs, width=W)
+
+        tree = specialize(self._fw_tree)
+        self._sfp_cache[key] = tree
+        return tree
+
+    def _permute_cache(self, cache, src):
+        """Host-side re-gather of the stacked decode cache along the
+        old→new slot map `src` (a re-cut is rare; the jitted steps never
+        see this op). Leaves come back committed to the mesh with the same
+        P("rows") layout the steps emit, so the swap cannot perturb the jit
+        cache key."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        ndev = self._ndev
+        rows = NamedSharding(self._spamm_mesh, P("rows"))
+        idx = jnp.asarray(src)
+
+        def fix(path, t):
+            keys = [getattr(k, "key", None) for k in path]
+            name = keys[-1] if keys else None
+            # batch-axis-from-the-end suffix rule (model.cache_pspecs):
+            # counting from the end survives the leading mesh-stack dim
+            if name in ("k", "v", "state"):
+                ba = t.ndim - 4
+            elif name == "h":
+                ba = t.ndim - 2
+            elif name == "conv":
+                ba = t.ndim - 3
+            else:
+                return t
+            u = jnp.moveaxis(t, ba, 1)
+            per = u.shape[1]
+            u = u.reshape((ndev * per,) + u.shape[2:])
+            u = jnp.take(u, idx, axis=0)
+            u = u.reshape((ndev, per) + u.shape[1:])
+            return jax.device_put(jnp.moveaxis(u, 1, ba), rows)
+
+        return jax.tree_util.tree_map_with_path(fix, cache)
 
     def _pad_cache(self, cache, cur_len: int):
         """Grow linear KV caches from cur_len to max_len slots."""
@@ -208,7 +521,11 @@ class Engine:
         event deltas and `partition_imbalance` the live partition's
         predicted imbalance at the last probe. `byte_taps` (the context's
         bytes-moved channel, frozen-path GEMMs only) reports SUMS per phase:
-        bandwidth adds up across GEMMs where fractions average."""
+        bandwidth adds up across GEMMs where fractions average. In
+        pod-sharded mode the taps fire PER SHARD (io_callback runs on every
+        mesh device), so `gated_gemms` counts scale by mesh size and the
+        fractions average over shards — pad tiles included, which is the
+        honest number: pad steps are part of each shard's bucket."""
         cache = self.spamm_ctx.cache
         pre = [v for ph, v in taps if ph != "decode"]
         dec = [v for ph, v in taps if ph == "decode"]
@@ -262,8 +579,14 @@ class Engine:
                 reshard0 = (self._resharder.resharded, self._resharder.probes)
         # frozen-plan assembly counts into this wave's store deltas (it is
         # where first population / warm-start loading happens)
-        frozen_pre = self._frozen_for(b * plen)
-        frozen_dec = self._frozen_for(b) if self._freeze else {}
+        if self._sharded:
+            self._begin_wave(b, plen)
+            frozen_pre = self._sharded_frozen_for(plen)
+            frozen_dec = self._sharded_frozen_for(1)
+        else:
+            frozen_pre = self._frozen_for(b * plen)
+            frozen_dec = self._frozen_for(b) if self._freeze else {}
+        tile = self.spamm_ctx.cfg.tile if collect else 0
         if collect:
             self.spamm_ctx.begin_stats()
         try:
@@ -271,8 +594,22 @@ class Engine:
                 self.spamm_ctx.set_phase("prefill")
             outs = [[] for _ in range(b)]
             self._maybe_reshard(requests, outs)
+            if self._sharded:
+                # the step-0 probe above may have laid down the first cut;
+                # re-read the wave tables (dict hits unless the cut moved)
+                # and put the batch in padded (device, slot) order
+                frozen_pre = self._sharded_frozen_for(plen)
+                frozen_dec = self._sharded_frozen_for(1)
+                toks_in = toks[self._shard["perm"]]
+            else:
+                toks_in = toks
             cache, logits = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)}, frozen_pre)
+                self.params, {"tokens": jnp.asarray(toks_in)}, frozen_pre)
+            if collect:
+                if self._sharded:
+                    self._note_gm(self._shard["wmax_g"] * plen, self._ndev)
+                else:
+                    self._note_gm(-(-(b * plen) // tile))
             cache = self._pad_cache(cache, plen)
             done = np.zeros(b, bool)
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -281,19 +618,31 @@ class Engine:
             if collect:
                 self.spamm_ctx.set_phase("decode")
             for t in range(budget):
+                vis = np.asarray(cur)
+                if self._sharded:
+                    # pad slots mirror their strip's last real group; the
+                    # kept-slot table reads each request exactly once
+                    vis = vis[self._shard["real_slots"]]
                 for i, r in enumerate(requests):
                     if not done[i]:
-                        outs[i].append(int(cur[i]))
-                        if (r.eos_id is not None and int(cur[i]) == r.eos_id) or \
+                        outs[i].append(int(vis[i]))
+                        if (r.eos_id is not None and int(vis[i]) == r.eos_id) or \
                            len(outs[i]) >= r.max_new_tokens:
                             done[i] = True
                 if done.all() or pos >= self.max_len - 1:
                     break
-                self._maybe_reshard(requests, outs)
+                cache, cur = self._maybe_reshard(requests, outs, cache, cur)
+                if self._sharded:
+                    frozen_dec = self._sharded_frozen_for(1)
                 logits, cache = self._decode(
                     self.params, cur[:, None], cache, jnp.int32(pos),
                     frozen_dec
                 )
+                if collect:
+                    if self._sharded:
+                        self._note_gm(self._shard["wmax_g"], self._ndev)
+                    else:
+                        self._note_gm(-(-b // tile))
                 cur = jnp.argmax(logits, -1).astype(jnp.int32)
                 pos += 1
         finally:

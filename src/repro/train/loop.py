@@ -145,6 +145,14 @@ def train(
             if resharder is not None:
                 sp["imbalance"] = resharder.live_imbalance
                 sp["resharded"] = resharder.resharded
+                # same readout the sharded serving engine places by: the
+                # live cut and its per-strip predicted loads
+                offs = resharder.offsets
+                loads = resharder.live_loads
+                sp["offsets"] = (None if offs is None
+                                 else [int(o) for o in np.asarray(offs)])
+                sp["loads"] = (None if loads is None
+                               else [float(x) for x in loads])
             spamm_stats.append(sp)
         dt = time.time() - t0
         durations.append(dt)
