@@ -143,7 +143,7 @@ def roofline_table(d, mesh):
 
 
 def write_bench_json(name: str, payload: dict, out_dir: str = ".", *,
-                     backend: str | None = None) -> str:
+                     backend: str | None = None, metrics=None) -> str:
     """Write one benchmark's machine-readable report as BENCH_<name>.json
     (schema v2: versioned, environment-stamped).
 
@@ -153,7 +153,13 @@ def write_bench_json(name: str, payload: dict, out_dir: str = ".", *,
     `benchmarks.perf_gate` diffs fresh runs against. Every row of
     payload["cells"] is stamped with the measuring environment; a row that
     already carries a "backend" key keeps it (a file may mix backends — the
-    gate compares per row). Returns the path."""
+    gate compares per row).
+
+    `metrics` optionally attaches an observability snapshot to the document
+    (a `repro.obs.MetricsRegistry` — its `.snapshot()` is taken — or an
+    already-snapshotted dict). It rides under the top-level "metrics" key,
+    OUTSIDE "data", so the perf gate's cell diffing never sees it. Returns
+    the path."""
     env = bench_env(backend)
     if isinstance(payload.get("cells"), list):
         for cell in payload["cells"]:
@@ -168,6 +174,9 @@ def write_bench_json(name: str, payload: dict, out_dir: str = ".", *,
         "env": env,
         "data": payload,
     }
+    if metrics is not None:
+        doc["metrics"] = (metrics.snapshot()
+                          if hasattr(metrics, "snapshot") else metrics)
     fn = os.path.join(out_dir, f"BENCH_{name}.json")
     with open(fn, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)

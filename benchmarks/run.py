@@ -29,6 +29,7 @@ MODULES = {
     "frozen_prefill": "frozen_prefill",
     "mixed_precision": "mixed_precision",
     "autotune": "autotune",
+    "obs_overhead": "obs_overhead",
     "roofline": "roofline",
 }
 

@@ -335,6 +335,86 @@ def predict_time_s(counts: KernelCounts, coeffs: CostCoeffs) -> float:
             + counts.gate_ops / coeffs.gate_ops_per_s)
 
 
+def predict_plan_time_s(plan, coeffs: CostCoeffs):
+    """Predicted wall-clock of ONE executed work-list call, computed from a
+    (possibly traced) `SpammPlan`'s own fields — the in-trace twin of
+    `predict_counts` (frozen mode) → `predict_time_s`.
+
+    Pure jnp-compatible arithmetic: `valid_tiles`/`bytes_moved()` may be
+    tracers, so the prediction embeds into the compiled step right next to
+    the gate and prices the work-list that EXECUTION actually ran (not a
+    planning-time estimate). The cost-residual telemetry taps this value per
+    gated GEMM and pairs the per-phase sum with measured wall-clock — the
+    feedback loop that surfaces a stale `CostProfile`."""
+    gm, gk = plan.norm_a.shape
+    if plan.work is not None and plan.work.step_i is not None:
+        # frozen/work-list plans: the grid length is the static step-table
+        # shape; one traced gate product-compare per grid step
+        steps_grid = float(plan.work.step_i.shape[0])
+    else:
+        # dense-bitmap plans have no static grid; approximate with the
+        # (possibly traced) surviving-step count
+        steps_grid = plan.valid_tiles * 1.0
+    gate_ops = steps_grid
+    norm_bytes = float(gm * plan.tile) * (gk * plan.tile) * 4.0
+    lv_bytes, lvl = 0.0, (gm, gk)
+    for _ in range(plan.levels):
+        lv_bytes += lvl[0] * lvl[1] * 4.0
+        lvl = ((lvl[0] + 1) // 2, (lvl[1] + 1) // 2)
+    flops = gemm_flops(plan.valid_tiles * 1.0, plan.tile, plan.block_n)
+    return (coeffs.base_overhead_s
+            + steps_grid * coeffs.step_overhead_s
+            + (plan.bytes_moved() + norm_bytes + lv_bytes) / coeffs.bytes_per_s
+            + flops / coeffs.flops_per_s
+            + gate_ops / coeffs.gate_ops_per_s)
+
+
+def predict_plan_static(plan, coeffs: CostCoeffs):
+    """Split `predict_plan_time_s` into its STATIC part, evaluated on host
+    at trace time — the zero-graph-cost path the telemetry taps use.
+
+    Every term of the per-call prediction except the executed-work terms is
+    a pure function of static plan metadata (normmap shapes, step-table
+    length, levels, coefficients): base + step overheads, norm/pyramid
+    bytes, gate ops. The two traced quantities — GEMM bytes and valid
+    tiles — already ride the telemetry callback as operands (bytes
+    directly; valid tiles as valid_fraction × the static total_tiles), so
+    the HOST side of the callback can finish the prediction with
+    `finish_plan_time_s` and the armed graph stays IDENTICAL to the
+    unarmed one (benchmarks/obs_overhead.py holds that line).
+
+    Returns `(const_s, total_tiles, tile, block_n)` host floats, or None
+    for plans without static step tables (no frozen work-list — the
+    in-trace `predict_plan_time_s` still covers those if a caller wants
+    the traced prediction)."""
+    if plan.work is None or plan.work.step_i is None:
+        return None
+    gm, gk = plan.norm_a.shape
+    steps_grid = float(plan.work.step_i.shape[0])
+    norm_bytes = float(gm * plan.tile) * (gk * plan.tile) * 4.0
+    lv_bytes, lvl = 0.0, (gm, gk)
+    for _ in range(plan.levels):
+        lv_bytes += lvl[0] * lvl[1] * 4.0
+        lvl = ((lvl[0] + 1) // 2, (lvl[1] + 1) // 2)
+    gmm, gnb, gkk = plan.grid
+    const_s = (coeffs.base_overhead_s
+               + steps_grid * coeffs.step_overhead_s
+               + (norm_bytes + lv_bytes) / coeffs.bytes_per_s
+               + steps_grid / coeffs.gate_ops_per_s)
+    return (const_s, float(gmm * gnb * gkk), plan.tile, plan.block_n)
+
+
+def finish_plan_time_s(static, valid_fraction: float, gemm_bytes: float,
+                       coeffs: CostCoeffs) -> float:
+    """Host-side completion of `predict_plan_static`: add the executed-work
+    terms from the callback's concrete operands. By construction equal to
+    `predict_plan_time_s` on the same plan (tests pin the identity)."""
+    const_s, total_tiles, tile, block_n = static
+    flops = gemm_flops(valid_fraction * total_tiles, tile, block_n)
+    return (const_s + gemm_bytes / coeffs.bytes_per_s
+            + flops / coeffs.flops_per_s)
+
+
 # ---------------------------------------------------------------------------
 # the autotuner
 # ---------------------------------------------------------------------------

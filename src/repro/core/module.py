@@ -21,13 +21,29 @@ WeightPlanCache) instead of raw (tau, tile, backend, block_n) tuples — see
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import cost as _cost
 from repro.core import plan as _plan
 from repro.core.plan import WeightPlanCache, pad_to_tile
+
+
+class Tap(NamedTuple):
+    """One labeled telemetry event from a gated GEMM.
+
+    `phase` and `site` are captured at TRACE time (static strings baked into
+    the callback partial); `layer` rides as a traced int32 operand so it
+    survives `lax.scan`-over-layers — the scan body feeds the per-iteration
+    layer index in, and the host sees the concrete value per execution.
+    `layer` is -1 when no layer label was in scope (eager callers, MoE
+    shard_map interiors)."""
+    phase: str
+    site: Optional[str]
+    layer: int
+    value: float
 
 
 class SpammContext:
@@ -41,21 +57,38 @@ class SpammContext:
     GEMM taps its plan's valid_fraction through `jax.experimental.io_callback`
     — an effectful host callback, so it survives jit AND lax.scan-over-layers
     (the values materialize at *execution* time, per compiled call, not at
-    trace time). The serving engine brackets each request wave with
-    begin/end and attaches the drained stats to the request metadata.
+    trace time). Events are LABELED `Tap(phase, site, layer, value)` records:
+    phase and site are static strings captured at trace time, the layer index
+    is a traced operand fed by the layer stack (`set_layer`). The serving
+    engine brackets each request wave with begin/end and attaches the drained
+    stats — per-wave aggregates plus a per-layer/per-site breakdown — to the
+    request metadata.
+
+    Cost telemetry (optional): with `enable_cost_taps(coeffs)`, the frozen
+    path additionally records a per-executed-GEMM time prediction on the
+    SAME callback as the fraction/bytes, feeding the predicted-vs-measured
+    residual channel. The prediction's static terms are evaluated at trace
+    time (`cost.predict_plan_static`, host floats baked into the callback
+    partial) and finished host-side from the concrete fraction/bytes
+    operands (`cost.finish_plan_time_s`) — armed and unarmed contexts trace
+    IDENTICAL graphs, so arming costs nothing on the device timeline.
     """
 
-    __slots__ = ("cfg", "cache", "_taps", "_byte_taps", "_collect", "_phase",
-                 "_trace_buffer")
+    __slots__ = ("cfg", "cache", "_taps", "_byte_taps", "_cost_taps",
+                 "_collect", "_phase", "_layer", "_trace_buffer",
+                 "cost_coeffs")
 
     def __init__(self, cfg: Any, cache: Optional[WeightPlanCache] = None):
         self.cfg = cfg
         self.cache = cache if cache is not None else WeightPlanCache()
         self._taps: list = []
         self._byte_taps: list = []
+        self._cost_taps: list = []
         self._collect = False
         self._phase = "prefill"
+        self._layer = None
         self._trace_buffer: Optional[list] = None
+        self.cost_coeffs = None
 
     def __repr__(self):
         return f"SpammContext({self.cfg!r}, cache={len(self.cache)} entries)"
@@ -70,6 +103,7 @@ class SpammContext:
         the first trace of the step that should report them)."""
         self._taps = []
         self._byte_taps = []
+        self._cost_taps = []
         self._collect = True
 
     def set_phase(self, phase: str):
@@ -80,16 +114,63 @@ class SpammContext:
         engine tell prefill from decode gating fractions apart."""
         self._phase = phase
 
-    def _record(self, phase, f):
+    def set_layer(self, layer):
+        """Tag subsequent taps with a layer index. Unlike the phase, the
+        layer may be a TRACED int32 (the `lax.scan` body feeds each
+        iteration's index in via the scan xs) — it rides the callback as an
+        operand, so every execution reports the concrete per-layer value.
+        Reset to None after the stack to avoid leaking a scan tracer into
+        unrelated taps."""
+        self._layer = layer
+
+    def swap_layer(self, layer):
+        """Set the layer label and return the previous one — bracketing for
+        regions whose taps must NOT close over an outer-trace layer tracer
+        (MoE blocks tap inside shard_map; an outer scan's index tracer must
+        not be captured there)."""
+        prev, self._layer = self._layer, layer
+        return prev
+
+    def _layer_arg(self):
+        layer = self._layer if self._layer is not None else -1
+        return jnp.asarray(layer, jnp.int32)
+
+    def enable_cost_taps(self, coeffs):
+        """Arm the cost-prediction channel: `coeffs` is a `cost.CostCoeffs`
+        (host floats, resolved once per engine from the tune profile). Must
+        be set BEFORE the first trace of the instrumented step — the
+        prediction arithmetic embeds into the compiled graph."""
+        self.cost_coeffs = coeffs
+
+    def _record(self, phase, site, f, layer):
         # host side of the tap; re-check _collect at RUN time — once a
         # callback is embedded in a compiled function it fires on every
         # execution, including ones outside a begin/end window
         if self._collect:
-            self._taps.append((phase, float(f)))
+            self._taps.append(Tap(phase, site, int(layer), float(f)))
 
-    def _record_bytes(self, phase, nb):
+    def _record_bytes(self, phase, site, nb, layer):
         if self._collect:
-            self._byte_taps.append((phase, float(nb)))
+            self._byte_taps.append(Tap(phase, site, int(layer), float(nb)))
+
+    def _record_gemm(self, phase, site, f, nb, layer):
+        if self._collect:
+            layer = int(layer)
+            self._taps.append(Tap(phase, site, layer, float(f)))
+            self._byte_taps.append(Tap(phase, site, layer, float(nb)))
+
+    def _record_gemm_cost(self, phase, site, cost_static, f, nb, layer):
+        if self._collect:
+            layer, f, nb = int(layer), float(f), float(nb)
+            self._taps.append(Tap(phase, site, layer, f))
+            self._byte_taps.append(Tap(phase, site, layer, nb))
+            if self.cost_coeffs is not None:
+                # finish the prediction host-side from the concrete operands
+                # (the static terms were baked into this partial at trace
+                # time) — the armed graph carries zero extra ops
+                pred = _cost.finish_plan_time_s(cost_static, f, nb,
+                                                self.cost_coeffs)
+                self._cost_taps.append(Tap(phase, site, layer, pred))
 
     # -- trace-time buffering (the grad-safe path) --------------------------
     # io_callback effects are DROPPED inside a custom_vjp fwd rule under
@@ -115,9 +196,10 @@ class SpammContext:
     def resume_trace_buffer(self, buf):
         self._trace_buffer = buf
 
-    def tap(self, valid_fraction):
+    def tap(self, valid_fraction, site: Optional[str] = None):
         """Record one gated GEMM's valid fraction, tagged with the current
-        phase (no-op unless collecting or a trace buffer is open).
+        phase/site/layer labels (no-op unless collecting or a trace buffer
+        is open).
 
         The callback embeds into whatever computation is being traced, so a
         jitted prefill reports fractions on every execution."""
@@ -129,11 +211,12 @@ class SpammContext:
         from jax.experimental import io_callback  # deferred: cheap import
 
         io_callback(
-            functools.partial(self._record, self._phase), None,
-            jnp.asarray(valid_fraction, jnp.float32), ordered=False,
+            functools.partial(self._record, self._phase, site), None,
+            jnp.asarray(valid_fraction, jnp.float32), self._layer_arg(),
+            ordered=False,
         )
 
-    def tap_bytes(self, nbytes):
+    def tap_bytes(self, nbytes, site: Optional[str] = None):
         """Record one gated GEMM's bytes-moved estimate (plan.bytes_moved()),
         tagged with the current phase. Separate channel from tap(): the
         fraction taps feed the gating-quality stats, the byte taps feed the
@@ -145,22 +228,63 @@ class SpammContext:
         from jax.experimental import io_callback  # deferred: cheap import
 
         io_callback(
-            functools.partial(self._record_bytes, self._phase), None,
-            jnp.asarray(nbytes, jnp.float32), ordered=False,
+            functools.partial(self._record_bytes, self._phase, site), None,
+            jnp.asarray(nbytes, jnp.float32), self._layer_arg(),
+            ordered=False,
         )
 
+    def tap_gemm(self, valid_fraction, nbytes, cost_static=None,
+                 site: Optional[str] = None):
+        """Record one gated GEMM's fraction + bytes (+ optionally a cost
+        prediction) through a SINGLE io_callback — the frozen serving
+        path's tap. One host roundtrip instead of two keeps the labeled
+        telemetry CHEAPER than the anonymous two-callback scheme it
+        replaced; the host side fans the operands back out into the
+        separate channels.
+
+        `cost_static` is `cost.predict_plan_static(...)` output (host
+        floats). It is baked into the callback partial, NOT traced: the
+        host recorder finishes the prediction from the fraction/bytes
+        operands already on the wire, so the cost channel adds no operands
+        and no graph ops — armed and unarmed steps compile identically."""
+        if not self._collect:
+            return
+        from jax.experimental import io_callback  # deferred: cheap import
+
+        frac = jnp.asarray(valid_fraction, jnp.float32)
+        nb = jnp.asarray(nbytes, jnp.float32)
+        if cost_static is not None:
+            io_callback(
+                functools.partial(self._record_gemm_cost, self._phase, site,
+                                  cost_static),
+                None, frac, nb, self._layer_arg(), ordered=False,
+            )
+        else:
+            io_callback(
+                functools.partial(self._record_gemm, self._phase, site),
+                None, frac, nb, self._layer_arg(), ordered=False,
+            )
+
     def end_stats(self):
-        """Stop collecting and drain: list of (phase, valid_fraction) pairs
-        tapped since `begin_stats` (empty when no gated GEMM executed)."""
+        """Stop collecting and drain: list of `Tap(phase, site, layer,
+        valid_fraction)` events recorded since `begin_stats` (empty when no
+        gated GEMM executed)."""
         taps, self._taps = self._taps, []
         self._collect = False
         return taps
 
     def drain_byte_stats(self):
-        """Drain the bytes-moved taps: list of (phase, bytes) pairs recorded
+        """Drain the bytes-moved taps: `Tap` events (value = bytes) recorded
         since `begin_stats`. Call before `end_stats` flips _collect off if
         callbacks may still be landing; the engine drains both together."""
         taps, self._byte_taps = self._byte_taps, []
+        return taps
+
+    def drain_cost_stats(self):
+        """Drain the cost-prediction taps: `Tap` events (value = predicted
+        seconds) — empty unless `enable_cost_taps` armed the channel before
+        the instrumented steps were traced."""
+        taps, self._cost_taps = self._cost_taps, []
         return taps
 
 
@@ -319,12 +443,13 @@ def spamm_bmm_linear(x: jax.Array, w: jax.Array, spamm_ctx) -> jax.Array:
         tile=cfg.tile, block_n=cfg.block_n, backend=cfg.backend,
         cache=spamm_ctx.cache, levels=getattr(cfg, "levels", 0),
     )
-    spamm_ctx.tap(info.valid_fraction)
+    spamm_ctx.tap(info.valid_fraction, site="moe_bmm")
     return c.astype(x.dtype)
 
 
 def spamm_linear_frozen(x: jax.Array, w: jax.Array, fp,
-                        ctx: Optional[SpammContext] = None) -> jax.Array:
+                        ctx: Optional[SpammContext] = None,
+                        site: Optional[str] = None) -> jax.Array:
     """Gated GEMM with a frozen weight side (forward-only serving path).
 
     `fp` is a `repro.plans.frozen.FrozenPlan` specialized to x's flattened
@@ -332,21 +457,29 @@ def spamm_linear_frozen(x: jax.Array, w: jax.Array, fp,
     computes only the activation-side gate and runs the frozen `SpammWork`
     step tables — no weight get-norm, no dense-bitmap sort. Bit-identical to
     `spamm_linear` with the same config (the frozen tables are a superset
-    re-gated by the exact flat τ-test). Inference path: no custom_vjp."""
+    re-gated by the exact flat τ-test). Inference path: no custom_vjp.
+
+    `site` labels the tap ("wq", "w1", ...); when the context has cost taps
+    armed the predicted call time rides the same callback — the static part
+    of the prediction is computed HERE at trace time (host floats baked
+    into the callback), the executed-work part on the host from the tap's
+    own operands, so arming costs zero extra graph ops."""
     tile = fp.tile
     xp, (lead, m, k) = _flatten_pad(x, tile)
     n = w.shape[-1]
     p = _plan.plan(xp, frozen_weight=fp)
     if ctx is not None:
-        ctx.tap(p.valid_fraction)
-        ctx.tap_bytes(p.bytes_moved())
+        cost = (_cost.predict_plan_static(p, ctx.cost_coeffs)
+                if ctx.cost_coeffs is not None else None)
+        ctx.tap_gemm(p.valid_fraction, p.bytes_moved(), cost, site=site)
     wp = pad_to_tile(w, tile, tile * fp.block_n)
     c = _plan.execute(p, xp, wp)
     return c[:m, :n].reshape(*lead, n).astype(x.dtype)
 
 
 def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any,
-                       frozen=None, require_frozen: bool = False) -> jax.Array:
+                       frozen=None, require_frozen: bool = False,
+                       site: Optional[str] = None) -> jax.Array:
     """The hook the model zoo calls for every eligible GEMM: dense when
     spamm_cfg is disabled, plan-routed spamm_linear when enabled.
     `spamm_cfg` may be a SpammConfig or a SpammContext (cfg + plan cache).
@@ -355,12 +488,13 @@ def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any,
     work-list path instead of tracing the gate from scratch.
     `require_frozen=True` (the decode path) falls back to DENSE when no
     frozen plan is available for this site — decode-step gating is only
-    worth its trace when the weight side comes precomputed."""
+    worth its trace when the weight side comes precomputed.
+    `site` is a static per-GEMM label ("wq", "w2", ...) for the telemetry."""
     ctx = as_context(spamm_cfg)
     if ctx is None or not ctx.enable or (require_frozen and frozen is None):
         return x @ w
     if frozen is not None:
-        return spamm_linear_frozen(x, w, frozen, ctx)
+        return spamm_linear_frozen(x, w, frozen, ctx, site=site)
     cfg = ctx.cfg
     y, frac = _spamm_linear_stats(
         x,
@@ -374,5 +508,5 @@ def maybe_spamm_matmul(x: jax.Array, w: jax.Array, spamm_cfg: Any,
         getattr(cfg, "levels", 0),
         getattr(cfg, "dtype", "float32"),
     )
-    ctx.tap(frac)
+    ctx.tap(frac, site=site)
     return y

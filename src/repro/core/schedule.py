@@ -462,6 +462,7 @@ class ReshardController:
         self.resharded = 0        # partition replacements (drift events)
         self.probes = 0           # estimate recomputations
         self.history: list = []   # one dict per probe (telemetry series)
+        self._published = 0       # history index consumed by publish()
 
     @property
     def live_imbalance(self) -> Optional[float]:
@@ -524,6 +525,39 @@ class ReshardController:
             "loads": [float(x) for x in loads],
         })
         return self.offsets
+
+    def publish(self, registry):
+        """Feed history entries recorded since the last call into an
+        `obs.MetricsRegistry`: probe/re-shard counters, the predicted
+        imbalance histogram, and a live-imbalance gauge. Incremental (the
+        controller keeps a cursor), so callers can publish per wave/step
+        without double counting; idempotent when no new probes landed."""
+        from repro.obs import IMBALANCE_BUCKETS
+
+        new = self.history[self._published:]
+        if not new:
+            return
+        self._published = len(self.history)
+        probes = registry.counter(
+            "spamm_reshard_probes_total", "Work-estimate recomputations")
+        events = registry.counter(
+            "spamm_reshard_events_total",
+            "Partition replacements (drift beyond threshold)")
+        imb = registry.histogram(
+            "spamm_partition_imbalance",
+            "Predicted imbalance of the live partition at each probe",
+            buckets=IMBALANCE_BUCKETS)
+        gauge = registry.gauge(
+            "spamm_partition_imbalance_live",
+            "Live partition's predicted imbalance at the latest probe")
+        probes.inc(len(new))
+        events.inc(sum(1 for h in new if h["resharded"]))
+        for h in new:
+            if h["live_imbalance"] is not None:
+                imb.observe(float(h["live_imbalance"]))
+        last = new[-1]["live_imbalance"]
+        if last is not None:
+            gauge.set(float(last))
 
 
 def resolve_reshard_devices(cfg: ReshardConfig, mesh,

@@ -88,6 +88,15 @@ def main():
                          "--spamm-tile requests each); 0 = 2·ceil(groups/"
                          "devices). Caps how far the equal-work cut can "
                          "skew without a recompile")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics registry here as a "
+                         "Prometheus text dump (TTFT/decode latency "
+                         "histograms, per-layer gated-GEMM series, plan "
+                         "cache/store and reshard counters)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the run's host-side spans here as Chrome-"
+                         "trace JSON (freeze, plan assembly, prefill, "
+                         "decode steps, reshard probes; load in Perfetto)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -120,12 +129,16 @@ def main():
         reshard_cfg = ReshardConfig(
             num_devices=args.reshard_devices, every=args.reshard_every,
             drift_threshold=args.reshard_threshold, level=args.reshard_level)
+    from repro.obs import Observability
+
+    obs = Observability(process_name="repro-serve")
     eng = Engine(cfg, pcfg, ctx, params, max_len=args.max_len,
                  spamm_cfg=spamm_cfg, plan_store=args.plan_store,
                  freeze_plans=not args.no_freeze_plans,
                  reshard_cfg=reshard_cfg,
                  mesh_devices=args.spamm_mesh_devices,
-                 shard_max_width=args.spamm_shard_width or None)
+                 shard_max_width=args.spamm_shard_width or None,
+                 obs=obs)
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -153,6 +166,25 @@ def main():
               f"decode_valid_fraction={dvf_s} "
               f"decode_gated_gemms={sp['decode_gated_gemms']} "
               f"cache={sp['plan_cache_hits']}h/{sp['plan_cache_misses']}m")
+        lat = sp.get("latency")
+        if lat is not None:
+            # engine-measured per-phase latency (TTFT from wave start to
+            # first token; decode stats over the wave's inter-token gaps)
+            ttft = lat.get("ttft_s")
+            line = (f"  latency: ttft="
+                    + (f"{ttft * 1e3:.1f}ms" if ttft is not None else "n/a"))
+            if lat.get("decode_steps"):
+                line += (f" decode mean={lat['decode_mean_s'] * 1e3:.1f}ms"
+                         f" p50={lat['decode_p50_s'] * 1e3:.1f}ms"
+                         f" p95={lat['decode_p95_s'] * 1e3:.1f}ms"
+                         f" ({lat['decode_steps']} steps)")
+            print(line)
+        cres = sp.get("cost_residual")
+        if cres:
+            for phase, c in cres.items():
+                print(f"  cost[{phase}]: predicted={c['predicted_s']:.4f}s "
+                      f"measured={c['measured_s']:.4f}s "
+                      f"log2_residual={c['log2_ratio']:+.2f}")
         gb = sp.get("gemm_bytes_moved")
         dgb = sp.get("decode_gemm_bytes_moved")
         if gb is not None or dgb is not None:
@@ -184,16 +216,25 @@ def main():
             print("  partition: unsharded (no reshard controller attached)")
         lay = eng.shard_layout
         if lay is not None:
-            # lockstep mesh: the measured per-step wall-clock is the
-            # slowest shard's; the per-shard layout shows where the rows sat
-            steps = 1 + max(len(o) - 1 for o in outs)
+            # lockstep mesh: the per-step wall-clock is the slowest shard's;
+            # the engine's own decode-step histogram is the measurement now
+            # (reshard stalls included), the per-shard layout shows where
+            # the rows sat
             o = lay["offsets"]
+            ms = (lat or {}).get("decode_mean_s")
+            ms_s = (f"{ms * 1e3:.1f} ms/step (lockstep)" if ms is not None
+                    else "n/a ms/step")
             print(f"  pod-sharded over {args.spamm_mesh_devices} devices: "
-                  f"{dt / steps * 1e3:.1f} ms/step (lockstep), "
-                  f"slot_width={lay['slot_width']} reqs/shard")
+                  f"{ms_s}, slot_width={lay['slot_width']} reqs/shard")
             for d, n in enumerate(lay["real"]):
                 print(f"    shard {d}: reqs [{o[d]}, {o[d + 1]}) "
                       f"({n} live, {lay['slot_width'] - n} pad slots)")
+    if args.metrics_out:
+        print(f"metrics -> {obs.write_metrics(args.metrics_out)}")
+    if args.trace_out:
+        print(f"trace -> {obs.write_trace(args.trace_out)}")
+    if args.metrics_out or args.trace_out:
+        print(obs.summary_table())
 
 
 if __name__ == "__main__":

@@ -50,6 +50,13 @@ def main():
     ap.add_argument("--reshard-threshold", type=float, default=1.2,
                     help="re-cut when the live partition's predicted "
                          "imbalance exceeds the fresh cut's by this factor")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's metrics registry here as a "
+                         "Prometheus text dump (train_step_seconds, "
+                         "per-layer spamm_valid_fraction, reshard series)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the run's host-side spans here as Chrome-"
+                         "trace JSON (load in Perfetto / about://tracing)")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -83,11 +90,15 @@ def main():
         reshard_cfg = ReshardConfig(
             num_devices=args.reshard_devices, every=args.reshard_every,
             drift_threshold=args.reshard_threshold)
+    from repro.obs import Observability
+
+    obs = Observability(process_name="repro-train")
     res = train(
         cfg, pcfg, tcfg, ctx,
         global_batch=args.batch, seq_len=args.seq, spamm_cfg=spamm_cfg,
         reshard_cfg=reshard_cfg,
         resume=(args.resume == "auto"),
+        obs=obs,
     )
     print(
         f"done: steps={res.final_step} first_loss={res.losses[0]:.4f} "
@@ -105,6 +116,12 @@ def main():
             imb_s = f"{imb:.3f}" if imb is not None else "n/a"
             print(f"reshard: events={last['resharded']} "
                   f"partition_imbalance={imb_s}")
+    if args.metrics_out:
+        print(f"metrics -> {obs.write_metrics(args.metrics_out)}")
+    if args.trace_out:
+        print(f"trace -> {obs.write_trace(args.trace_out)}")
+    if args.metrics_out or args.trace_out:
+        print(obs.summary_table())
 
 
 if __name__ == "__main__":

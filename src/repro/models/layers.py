@@ -57,21 +57,22 @@ def mlp(params: dict, x: jax.Array, act: str, spamm_cfg=None, frozen=None,
     if act in ("silu", "gelu"):
         g = maybe_spamm_matmul(x, params["w1"].astype(cdt), spamm_cfg,
                                frozen=fz.get("w1"),
-                               require_frozen=require_frozen)
+                               require_frozen=require_frozen, site="w1")
         u = maybe_spamm_matmul(x, params["w3"].astype(cdt), spamm_cfg,
                                frozen=fz.get("w3"),
-                               require_frozen=require_frozen)
+                               require_frozen=require_frozen, site="w3")
         g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
         return maybe_spamm_matmul(g * u, params["w2"].astype(cdt), spamm_cfg,
                                   frozen=fz.get("w2"),
-                                  require_frozen=require_frozen)
+                                  require_frozen=require_frozen, site="w2")
     if act == "gelu_mlp":
         h = jax.nn.gelu(maybe_spamm_matmul(x, params["w1"].astype(cdt),
                                            spamm_cfg, frozen=fz.get("w1"),
-                                           require_frozen=require_frozen))
+                                           require_frozen=require_frozen,
+                                           site="w1"))
         return maybe_spamm_matmul(h, params["w2"].astype(cdt), spamm_cfg,
                                   frozen=fz.get("w2"),
-                                  require_frozen=require_frozen)
+                                  require_frozen=require_frozen, site="w2")
     raise ValueError(act)
 
 

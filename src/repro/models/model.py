@@ -149,8 +149,8 @@ def forward_hidden(cfg, pcfg, ctx: NetCtx, params, batch, *, spamm_cfg=None,
     `spamm_cfg` may be a SpammConfig or a prebuilt `SpammContext` (config +
     shared WeightPlanCache); the stack threads the context object, not raw
     (tau, tile, backend, block_n) tuples. With `collect_spamm_stats` the
-    return gains a third element (frac_sum, gemm_count) of traced
-    gating-stat scalars (see `stack_fwd`)."""
+    return gains a third element (frac_sum, gemm_count, layer_frac_sums,
+    layer_gemm_counts) of traced gating-stat values (see `stack_fwd`)."""
     spamm_cfg = spmod.as_context(spamm_cfg)
     cdt = _dtype(pcfg.compute_dtype)
     if "embeds" in batch:
@@ -174,9 +174,9 @@ def loss_fn(cfg, pcfg, ctx, params, batch, *, spamm_cfg=None):
     spamm_cfg = spmod.as_context(spamm_cfg)
     collect = spamm_cfg is not None and spamm_cfg.enable
     if collect:
-        h, aux, (vs, vc) = forward_hidden(cfg, pcfg, ctx, params, batch,
-                                          spamm_cfg=spamm_cfg,
-                                          collect_spamm_stats=True)
+        h, aux, (vs, vc, lvs, lvc) = forward_hidden(
+            cfg, pcfg, ctx, params, batch, spamm_cfg=spamm_cfg,
+            collect_spamm_stats=True)
     else:
         h, aux = forward_hidden(cfg, pcfg, ctx, params, batch,
                                 spamm_cfg=spamm_cfg)
@@ -186,9 +186,12 @@ def loss_fn(cfg, pcfg, ctx, params, batch, *, spamm_cfg=None):
     met = {"ce": ce, "aux": aux}
     if collect:
         # same per-GEMM gating stats the serving engine taps, exported as
-        # step metrics (mean valid fraction over the step's gated GEMMs)
+        # step metrics (mean valid fraction over the step's gated GEMMs),
+        # plus the per-layer breakdown (stack order, (num_layers,) arrays)
         met["spamm_valid_fraction"] = vs / jnp.maximum(vc, 1.0)
         met["spamm_gated_gemms"] = vc
+        met["spamm_layer_valid_fraction"] = lvs / jnp.maximum(lvc, 1.0)
+        met["spamm_layer_gated_gemms"] = lvc
     return ce + aux_w * aux, met
 
 

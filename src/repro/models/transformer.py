@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
-from repro.core.module import maybe_spamm_matmul
+from repro.core.module import SpammContext, maybe_spamm_matmul
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
@@ -71,11 +71,14 @@ def _qkv(p, x, cfg: ModelConfig, ctx: NetCtx, positions, spamm_cfg=None,
     cdt = x.dtype
     fz = frozen or {}
     q = maybe_spamm_matmul(x, p["wq"].astype(cdt), spamm_cfg,
-                           frozen=fz.get("wq"), require_frozen=require_frozen)
+                           frozen=fz.get("wq"), require_frozen=require_frozen,
+                           site="wq")
     k = maybe_spamm_matmul(x, p["wk"].astype(cdt), spamm_cfg,
-                           frozen=fz.get("wk"), require_frozen=require_frozen)
+                           frozen=fz.get("wk"), require_frozen=require_frozen,
+                           site="wk")
     v = maybe_spamm_matmul(x, p["wv"].astype(cdt), spamm_cfg,
-                           frozen=fz.get("wv"), require_frozen=require_frozen)
+                           frozen=fz.get("wv"), require_frozen=require_frozen,
+                           site="wv")
     if "bq" in p:
         q = q + p["bq"].astype(cdt)
         k = k + p["bk"].astype(cdt)
@@ -112,7 +115,7 @@ def attention_layer(
     )
     o = o.reshape(*x.shape[:2], -1)
     out = maybe_spamm_matmul(o, p["wo"].astype(x.dtype), spamm_cfg,
-                             frozen=(frozen or {}).get("wo"))
+                             frozen=(frozen or {}).get("wo"), site="wo")
     if return_kv:
         return out, (k, v)
     return out
@@ -155,7 +158,7 @@ def attention_decode(
         )
     out = maybe_spamm_matmul(
         o.reshape(b, 1, hq * hd), p["wo"].astype(x.dtype), spamm_cfg,
-        frozen=(frozen or {}).get("wo"), require_frozen=True)
+        frozen=(frozen or {}).get("wo"), require_frozen=True, site="wo")
     return out, (cache_k, cache_v)
 
 
@@ -186,6 +189,14 @@ def layer_params(key, cfg: ModelConfig, dtype, kind: str, model_axis_size: int):
     return p
 
 
+def _tap_ctx(spamm_cfg) -> Optional[SpammContext]:
+    """The SpammContext behind what the stack threads, for label bracketing
+    (set_layer/swap_layer). None when taps can't be labeled — a raw
+    SpammConfig means maybe_spamm_matmul builds throwaway contexts, so
+    there is no shared object to label through."""
+    return spamm_cfg if isinstance(spamm_cfg, SpammContext) else None
+
+
 def _ffn(p, h, cfg: ModelConfig, ctx: NetCtx, spamm_cfg, frozen=None,
          require_frozen: bool = False):
     """MLP or MoE sub-layer on normalized input h. Returns (out, aux).
@@ -193,12 +204,21 @@ def _ffn(p, h, cfg: ModelConfig, ctx: NetCtx, spamm_cfg, frozen=None,
     MoE blocks keep the traced gating path (their expert buffers live
     inside shard_map; frozen plans cover the dense attention/MLP GEMMs)."""
     if cfg.moe is not None:
-        return moe_mod.moe_block(
-            p["moe"], h, cfg.moe, cfg.act,
-            mesh=ctx.mesh, batch_axes=ctx.batch_axes,
-            model_axis=ctx.model_axis,
-            spamm_cfg=None if require_frozen else spamm_cfg,
-        )
+        # MoE taps fire inside shard_map: an enclosing scan's layer-index
+        # tracer must not be closed over there, so the label is cleared for
+        # the block (those taps report layer=-1, like every shard_map tap).
+        tctx = _tap_ctx(spamm_cfg)
+        prev = tctx.swap_layer(None) if tctx is not None else None
+        try:
+            return moe_mod.moe_block(
+                p["moe"], h, cfg.moe, cfg.act,
+                mesh=ctx.mesh, batch_axes=ctx.batch_axes,
+                model_axis=ctx.model_axis,
+                spamm_cfg=None if require_frozen else spamm_cfg,
+            )
+        finally:
+            if tctx is not None:
+                tctx.swap_layer(prev)
     return mlp(p["mlp"], h, cfg.act, spamm_cfg, frozen,
                require_frozen), jnp.float32(0.0)
 
@@ -346,9 +366,12 @@ def stack_fwd(
     collect_spamm_stats: bool = False,
 ):
     """Run all layers (train/loss path, no caches). Returns (x, aux), or
-    (x, aux, (frac_sum, gemm_count)) with `collect_spamm_stats`.
+    (x, aux, (frac_sum, gemm_count, layer_frac_sums, layer_gemm_counts))
+    with `collect_spamm_stats` — the last two are (num_layers,) f32 arrays
+    of per-layer fraction sums / gated-GEMM counts (the per-layer
+    attribution the grad path cannot get from callbacks).
 
-    The stats ride the scan carry as traced values (SpammContext's trace
+    The stats ride the scan carry/ys as traced values (SpammContext's trace
     buffer), NOT io_callbacks — callbacks are dropped under
     grad-of-custom_vjp, dataflow is not, so the train step can export the
     same per-GEMM fractions the serving engine taps. MoE expert GEMMs trace
@@ -381,34 +404,50 @@ def stack_fwd(
 
         def gbody(carry, p):
             h, aux, vs, vc = carry
+            ss, cs = [], []
             for i, k in enumerate(gkinds):
                 h, a, s, c = tapped_layer(p[f"l{i}"], h, k)
                 aux, vs, vc = aux + a, vs + s, vc + c
-            return (h, aux, vs, vc), None
+                ss.append(s)
+                cs.append(c)
+            return (h, aux, vs, vc), (jnp.stack(ss), jnp.stack(cs))
 
-        (x, aux, vs, vc), _ = jax.lax.scan(
+        (x, aux, vs, vc), (gss, gcs) = jax.lax.scan(
             _remat(gbody, pcfg), (x, zero, zero, zero), params["groups"]
         )
+        # per-layer ys come out (n_groups, glen); flatten to stack order and
+        # append the unrolled tail
+        lvs = [gss.reshape(-1)]
+        lvc = [gcs.reshape(-1)]
         for i, k in enumerate(tail):
             x, a, s, c = tapped_layer(params["tail"][f"l{i}"], x, k)
             aux, vs, vc = aux + a, vs + s, vc + c
-        return (x, aux, (vs, vc)) if collect else (x, aux)
+            lvs.append(s[None])
+            lvc.append(c[None])
+        if collect:
+            return x, aux, (vs, vc, jnp.concatenate(lvs),
+                            jnp.concatenate(lvc))
+        return x, aux
 
     def body(carry, p):
         h, aux, vs, vc = carry
         h, a, s, c = tapped_layer(p, h, kind)
-        return (h, aux + a, vs + s, vc + c), None
+        return (h, aux + a, vs + s, vc + c), (s, c)
 
     if pcfg.scan_layers:
-        (x, aux, vs, vc), _ = jax.lax.scan(
+        (x, aux, vs, vc), (lvs, lvc) = jax.lax.scan(
             _remat(body, pcfg), (x, zero, zero, zero), params["layers"]
         )
     else:
         aux = vs = vc = zero
+        ls, lc = [], []
         for i in range(cfg.num_layers):
             p = jax.tree.map(lambda t: t[i], params["layers"])
-            (x, aux, vs, vc), _ = _remat(body, pcfg)((x, aux, vs, vc), p)
-    return (x, aux, (vs, vc)) if collect else (x, aux)
+            (x, aux, vs, vc), (s, c) = _remat(body, pcfg)((x, aux, vs, vc), p)
+            ls.append(s)
+            lc.append(c)
+        lvs, lvc = jnp.stack(ls), jnp.stack(lc)
+    return (x, aux, (vs, vc, lvs, lvc)) if collect else (x, aux)
 
 
 def stack_prefill(
@@ -430,10 +469,15 @@ def stack_prefill(
     `frozen` mirrors the params structure at the gated-weight subtrees with
     FrozenPlan jit inputs (stacked per layer under "layers"/"groups" — they
     ride the layer scan as a second xs); {} / missing keys fall back to the
-    traced gate."""
+    traced gate.
+
+    When `spamm_cfg` is a SpammContext, each layer's index rides the scan
+    as an extra xs and is fed to `set_layer` — the taps inside the scanned
+    body then report per-layer labels at execution time."""
     kind = stack_kinds(cfg)
     s = x.shape[1]
     fz = frozen or {}
+    tctx = _tap_ctx(spamm_cfg)
 
     def trim(c):
         """Ring-ify sliding-window KV caches: token t lives at slot t % W."""
@@ -451,37 +495,54 @@ def stack_prefill(
 
     if kind == "hybrid":
         n_groups, gkinds, tail = hybrid_pattern(cfg)
+        glen = len(gkinds)
 
-        def gbody(h, pf):
-            p, f = pf
+        def gbody(h, pfg):
+            p, f, g = pfg
             caches = {}
             for i, k in enumerate(gkinds):
+                if tctx is not None:
+                    tctx.set_layer(g * glen + i)
                 h, _, c = layer_fwd(p[f"l{i}"], h, cfg, pcfg, ctx, positions, k,
                                     spamm_cfg=spamm_cfg, collect_cache=True,
                                     frozen=f.get(f"l{i}"))
                 caches[f"l{i}"] = trim(c)
             return h, caches
 
-        x, gcaches = jax.lax.scan(
-            gbody, x, (params["groups"], fz.get("groups", {})))
-        tcaches = {}
-        for i, k in enumerate(tail):
-            x, _, c = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
-                                positions, k, spamm_cfg=spamm_cfg,
-                                collect_cache=True,
-                                frozen=fz.get("tail", {}).get(f"l{i}"))
-            tcaches[f"l{i}"] = trim(c)
+        try:
+            x, gcaches = jax.lax.scan(
+                gbody, x, (params["groups"], fz.get("groups", {}),
+                           jnp.arange(n_groups)))
+            tcaches = {}
+            for i, k in enumerate(tail):
+                if tctx is not None:
+                    tctx.set_layer(n_groups * glen + i)
+                x, _, c = layer_fwd(params["tail"][f"l{i}"], x, cfg, pcfg, ctx,
+                                    positions, k, spamm_cfg=spamm_cfg,
+                                    collect_cache=True,
+                                    frozen=fz.get("tail", {}).get(f"l{i}"))
+                tcaches[f"l{i}"] = trim(c)
+        finally:
+            if tctx is not None:
+                tctx.set_layer(None)
         return x, {"groups": gcaches, "tail": tcaches}
 
-    def body(h, pf):
-        p, f = pf
+    def body(h, pfl):
+        p, f, li = pfl
+        if tctx is not None:
+            tctx.set_layer(li)
         h, _, c = layer_fwd(p, h, cfg, pcfg, ctx, positions, kind,
                             spamm_cfg=spamm_cfg, collect_cache=True,
                             frozen=f)
         return h, trim(c)
 
-    x, caches = jax.lax.scan(body, x, (params["layers"],
-                                       fz.get("layers", {})))
+    try:
+        x, caches = jax.lax.scan(body, x, (params["layers"],
+                                           fz.get("layers", {}),
+                                           jnp.arange(cfg.num_layers)))
+    finally:
+        if tctx is not None:
+            tctx.set_layer(None)
     return x, {"layers": caches}
 
 
@@ -499,40 +560,61 @@ def stack_decode(
 ):
     """Decode gating is frozen-plan-only: sites with a FrozenPlan run the
     compiled work-list, sites without fall back to dense (require_frozen in
-    `layer_decode`) — per-step re-tracing of the gate is never paid."""
+    `layer_decode`) — per-step re-tracing of the gate is never paid.
+
+    Layer labels ride the scan like `stack_prefill`'s."""
     kind = stack_kinds(cfg)
     fz = frozen or {}
+    tctx = _tap_ctx(spamm_cfg)
 
     if kind == "hybrid":
         n_groups, gkinds, tail = hybrid_pattern(cfg)
+        glen = len(gkinds)
 
-        def gbody(h, pcf):
-            p, c, f = pcf
+        def gbody(h, pcfg_):
+            p, c, f, g = pcfg_
             newc = {}
             for i, k in enumerate(gkinds):
+                if tctx is not None:
+                    tctx.set_layer(g * glen + i)
                 h, nc = layer_decode(p[f"l{i}"], h, c[f"l{i}"], pos, cfg, pcfg,
                                      ctx, k, spamm_cfg=spamm_cfg,
                                      frozen=f.get(f"l{i}"))
                 newc[f"l{i}"] = nc
             return h, newc
 
-        x, gcaches = jax.lax.scan(
-            gbody, x, (params["groups"], cache["groups"],
-                       fz.get("groups", {})))
-        tcaches = {}
-        for i, k in enumerate(tail):
-            x, nc = layer_decode(params["tail"][f"l{i}"], x, cache["tail"][f"l{i}"],
-                                 pos, cfg, pcfg, ctx, k, spamm_cfg=spamm_cfg,
-                                 frozen=fz.get("tail", {}).get(f"l{i}"))
-            tcaches[f"l{i}"] = nc
+        try:
+            x, gcaches = jax.lax.scan(
+                gbody, x, (params["groups"], cache["groups"],
+                           fz.get("groups", {}), jnp.arange(n_groups)))
+            tcaches = {}
+            for i, k in enumerate(tail):
+                if tctx is not None:
+                    tctx.set_layer(n_groups * glen + i)
+                x, nc = layer_decode(params["tail"][f"l{i}"], x,
+                                     cache["tail"][f"l{i}"],
+                                     pos, cfg, pcfg, ctx, k,
+                                     spamm_cfg=spamm_cfg,
+                                     frozen=fz.get("tail", {}).get(f"l{i}"))
+                tcaches[f"l{i}"] = nc
+        finally:
+            if tctx is not None:
+                tctx.set_layer(None)
         return x, {"groups": gcaches, "tail": tcaches}
 
     def body(h, pcf):
-        p, c, f = pcf
+        p, c, f, li = pcf
+        if tctx is not None:
+            tctx.set_layer(li)
         h, nc = layer_decode(p, h, c, pos, cfg, pcfg, ctx, kind,
                              spamm_cfg=spamm_cfg, frozen=f)
         return h, nc
 
-    x, caches = jax.lax.scan(body, x, (params["layers"], cache["layers"],
-                                       fz.get("layers", {})))
+    try:
+        x, caches = jax.lax.scan(body, x, (params["layers"], cache["layers"],
+                                           fz.get("layers", {}),
+                                           jnp.arange(cfg.num_layers)))
+    finally:
+        if tctx is not None:
+            tctx.set_layer(None)
     return x, {"layers": caches}

@@ -9,6 +9,7 @@ caches come back from prefill and are padded to the engine's max length.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -21,6 +22,8 @@ from repro.core import schedule as _schedule
 from repro.core.plan import _bucket
 from repro.models import model as M
 from repro.models.transformer import NetCtx
+from repro.obs import (FRACTION_BUCKETS, Histogram, LATENCY_BUCKETS_S,
+                       Observability)
 
 
 @dataclasses.dataclass
@@ -101,6 +104,28 @@ class Engine:
     re-sharding on, off, or at any cadence; `Request.out["spamm"]` reports
     the wave's `resharded` event count, probe count, and the live
     partition's predicted imbalance.
+
+    Telemetry (`obs`, a `repro.obs.Observability` bundle): the engine feeds
+    three sinks. (1) The METRICS REGISTRY gets labeled per-execution samples
+    from the context's `Tap` events — valid-fraction histograms and
+    GEMM/byte counters keyed (phase, layer, site[, dtype]) — plus TTFT and
+    per-decode-step latency histograms, wave/token counters, plan-cache and
+    plan-store hit/miss counters, and the `ReshardController`'s probe
+    history; `Observability.write_metrics` dumps it in Prometheus text
+    form. (2) The SPAN TRACER records host wall-clock spans (freeze,
+    plan_assembly, prefill, decode_step, reshard_probe, cache_permute,
+    wave) exportable as Chrome-trace JSON for Perfetto. (3) The
+    COST-RESIDUAL channel pairs each phase's roofline-predicted seconds
+    (summed over the wave's executed gated GEMMs via in-graph
+    `cost.predict_plan_time_s` taps) with measured wall-clock into a
+    log2-ratio histogram — the live calibration check on the cost model
+    the autotuner and the re-sharder both lean on. `obs=False` is the
+    hard-off A/B baseline: no spans, no latency reads, and the cost taps
+    never embed, so the traced graphs are exactly the pre-telemetry ones
+    (benchmarks/obs_overhead.py holds the instrumented engine to <2%
+    overhead and bit-identical tokens against it). Labels ride the existing
+    callbacks as static partial args or traced operands — jit cache keys
+    and `trace_counts` are unchanged by instrumentation.
     """
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
@@ -108,12 +133,18 @@ class Engine:
                  plan_store=None, freeze_plans: Optional[bool] = None,
                  reshard_cfg: Optional[_schedule.ReshardConfig] = None,
                  mesh_devices: int = 0,
-                 shard_max_width: Optional[int] = None):
+                 shard_max_width: Optional[int] = None,
+                 obs=None):
         self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
         self.params = params
         self.max_len = max_len
         self.spamm_ctx = spmod.as_context(spamm_cfg)
         enabled = self.spamm_ctx is not None and self.spamm_ctx.enable
+        # `obs`: an Observability bundle to share (CLI passes one so the
+        # exported dump covers the whole run), None for a private enabled
+        # bundle, False for hard-off (no spans, no latency blocks, no cost
+        # taps in the traced graphs — the uninstrumented A/B baseline)
+        self.obs = Observability.ensure(obs, process_name="repro-engine")
         if isinstance(plan_store, str):
             from repro.plans.store import PlanStore  # deferred: optional dep
 
@@ -167,6 +198,51 @@ class Engine:
                     f"the engine shards over {self._ndev} devices — they "
                     f"must match (the cut IS the placement)")
             self._resharder = _schedule.ReshardController(reshard_cfg)
+        if enabled and self._freeze and self.obs.enabled:
+            # arm the cost-prediction tap channel BEFORE the first trace:
+            # coefficients resolve once, host-side, from the tune profile
+            # (or the nominal table) at the config's resolved backend
+            from repro.core import cost as _cost
+            from repro.kernels.ops import resolve_backend
+
+            scfg = self.spamm_ctx.cfg
+            prof = _cost.CostProfile.load_or_default(
+                getattr(scfg, "tune_profile", None))
+            self.spamm_ctx.enable_cost_taps(
+                prof.coeffs(resolve_backend(scfg.backend)))
+        if self.obs.enabled:
+            reg = self.obs.registry
+            self._m_ttft = reg.histogram(
+                "serve_ttft_seconds", labelnames=(),
+                help="wave start to first-token available (includes reshard "
+                     "probe + prefill dispatch + execution)",
+                buckets=LATENCY_BUCKETS_S)
+            self._m_decode_s = reg.histogram(
+                "serve_decode_step_seconds", labelnames=(),
+                help="inter-token latency per decode step (reshard stalls "
+                     "included)", buckets=LATENCY_BUCKETS_S)
+            self._m_vf = reg.histogram(
+                "spamm_valid_fraction", labelnames=("phase", "layer", "site"),
+                help="per-execution gated-GEMM valid fraction",
+                buckets=FRACTION_BUCKETS)
+            self._m_gemms = reg.counter(
+                "spamm_gated_gemms_total",
+                labelnames=("phase", "layer", "site"),
+                help="gated GEMM executions (per shard in sharded mode)")
+            self._m_bytes = reg.counter(
+                "spamm_gemm_bytes_total",
+                labelnames=("phase", "layer", "site", "dtype"),
+                help="analytic GEMM bytes moved by the executed work-lists")
+            self._m_waves = reg.counter(
+                "serve_waves_total", help="request waves served")
+            self._m_tokens = reg.counter(
+                "serve_tokens_total", help="tokens emitted")
+            self._m_cache = reg.counter(
+                "spamm_plan_cache_total", labelnames=("result",),
+                help="WeightPlanCache hits/misses")
+            self._m_store = reg.counter(
+                "spamm_plan_store_total", labelnames=("result",),
+                help="on-disk PlanStore hits/misses")
         self._build_steps()
 
     def _counted(self, fn, key: str):
@@ -275,19 +351,24 @@ class Engine:
 
         toks = np.concatenate([recent(r, o)
                                for r, o in zip(requests, outs)])
-        M.reshard_probe(rs, self.spamm_ctx, self.params, step, tokens=toks)
+        with self.obs.span("reshard_probe", step=step):
+            M.reshard_probe(rs, self.spamm_ctx, self.params, step,
+                            tokens=toks)
         if self._sharded and self._shard is not None:
             src = self._refresh_shard()
             if src is not None:
-                if cache is not None:
-                    cache = self._permute_cache(cache, src)
-                if cur is not None:
-                    from jax.sharding import NamedSharding
-                    from jax.sharding import PartitionSpec as P
+                with self.obs.span("cache_permute", step=step):
+                    if cache is not None:
+                        cache = self._permute_cache(cache, src)
+                    if cur is not None:
+                        from jax.sharding import NamedSharding
+                        from jax.sharding import PartitionSpec as P
 
-                    cur = jax.device_put(
-                        jnp.take(cur, jnp.asarray(src), axis=0),
-                        NamedSharding(self._spamm_mesh, P("rows")))
+                        cur = jax.device_put(
+                            jnp.take(cur, jnp.asarray(src), axis=0),
+                            NamedSharding(self._spamm_mesh, P("rows")))
+        if self.obs.enabled and rs is not None:
+            rs.publish(self.obs.registry)
         return cache, cur
 
     # -- frozen-plan assembly ------------------------------------------------
@@ -305,7 +386,10 @@ class Engine:
         if hit is not None:
             return hit
         self._ensure_fw_tree()
+        with self.obs.span("plan_assembly", gm=gm):
+            return self._assemble_frozen(gm)
 
+    def _assemble_frozen(self, gm: int) -> dict:
         from repro.plans.frozen import stack_plans
 
         def specialize(node):
@@ -335,9 +419,11 @@ class Engine:
         if self._fw_tree is None:
             from repro.plans.precompute import freeze_tree
 
-            self._fw_tree, _ = freeze_tree(
-                self.params, self.spamm_ctx.cfg, cache=self.spamm_ctx.cache,
-                store=self.plan_store)
+            with self.obs.span("freeze",
+                               store=self.plan_store is not None):
+                self._fw_tree, _ = freeze_tree(
+                    self.params, self.spamm_ctx.cfg,
+                    cache=self.spamm_ctx.cache, store=self.plan_store)
 
     def _note_gm(self, gm: int, n: int = 1):
         self._gm_hist[int(gm)] = self._gm_hist.get(int(gm), 0) + int(n)
@@ -432,6 +518,11 @@ class Engine:
         if hit is not None:
             return hit
         self._ensure_fw_tree()
+        with self.obs.span("plan_assembly", tpg=tpg, sharded=True):
+            return self._assemble_sharded(tpg, key)
+
+    def _assemble_sharded(self, tpg: int, key) -> dict:
+        sh = self._shard
 
         from repro.plans.frozen import stack_plans
 
@@ -512,9 +603,10 @@ class Engine:
 
     def _spamm_stats(self, taps, hits0: int, misses0: int,
                      store0: Optional[tuple], reshard0: Optional[tuple],
-                     byte_taps=()):
-        """Per-wave gating stats dict from the drained (phase, fraction)
-        taps and the plan-cache/plan-store counter DELTAS across this wave
+                     byte_taps=(), cost_taps=(), ttft_s=None,
+                     decode_lat=()):
+        """Per-wave gating stats dict from the drained `module.Tap` events
+        and the plan-cache/plan-store counter DELTAS across this wave
         (every counter in the dict is per-wave: after first population a
         warm wave reports 0/0 store traffic, never stale lifetime totals).
         With re-sharding on, `resharded`/`reshard_probes` are the wave's
@@ -525,12 +617,32 @@ class Engine:
         pod-sharded mode the taps fire PER SHARD (io_callback runs on every
         mesh device), so `gated_gemms` counts scale by mesh size and the
         fractions average over shards — pad tiles included, which is the
-        honest number: pad steps are part of each shard's bucket."""
+        honest number: pad steps are part of each shard's bucket.
+
+        Labeled channels (new in the telemetry subsystem):
+
+        - `per_layer`: {layer: {site: {...}}} breakdown of the same taps —
+          fractions average and counts/bytes sum within each (layer, site)
+          cell, so summing `gated_gemms` over cells reproduces the wave
+          aggregate exactly. Taps without a layer label (layer < 0: eager
+          callers, MoE shard_map interiors) stay out of the breakdown but
+          remain in the aggregates.
+        - `latency`: host wall-clock — `ttft_s` (wave start to first token
+          materialized) and decode-step stats (mean/p50/p95 over the wave's
+          measured inter-token gaps; p50/p95 are bucket-interpolated from
+          a wave-local histogram with the registry's latency ladder).
+        - `cost_residual`: per phase, the roofline-predicted seconds summed
+          over this wave's executed gated GEMMs (÷ mesh size when sharded:
+          taps fire per shard, shards run concurrently) paired with the
+          measured wall-clock, plus log2(measured/predicted). Only present
+          when the cost channel is armed (engine obs enabled) and both
+          sides are positive.
+        """
         cache = self.spamm_ctx.cache
-        pre = [v for ph, v in taps if ph != "decode"]
-        dec = [v for ph, v in taps if ph == "decode"]
-        pre_b = [v for ph, v in byte_taps if ph != "decode"]
-        dec_b = [v for ph, v in byte_taps if ph == "decode"]
+        pre = [t.value for t in taps if t.phase != "decode"]
+        dec = [t.value for t in taps if t.phase == "decode"]
+        pre_b = [t.value for t in byte_taps if t.phase != "decode"]
+        dec_b = [t.value for t in byte_taps if t.phase == "decode"]
         stats = {
             "valid_fraction": float(np.mean(pre)) if pre else None,
             "gated_gemms": len(pre),
@@ -550,6 +662,80 @@ class Engine:
             stats["resharded"] = rs.resharded - reshard0[0]
             stats["reshard_probes"] = rs.probes - reshard0[1]
             stats["partition_imbalance"] = rs.live_imbalance
+        # -- per-(layer, site) breakdown ------------------------------------
+        acc: dict = {}
+        for t in taps:
+            if t.layer < 0:
+                continue
+            a = acc.setdefault((t.layer, t.site or ""),
+                               [0.0, 0, 0.0, 0, 0.0])
+            if t.phase == "decode":
+                a[2] += t.value
+                a[3] += 1
+            else:
+                a[0] += t.value
+                a[1] += 1
+        for t in byte_taps:
+            if t.layer < 0:
+                continue
+            a = acc.setdefault((t.layer, t.site or ""),
+                               [0.0, 0, 0.0, 0, 0.0])
+            a[4] += t.value
+        per_layer: dict = {}
+        for (layer, site), a in sorted(acc.items()):
+            per_layer.setdefault(layer, {})[site] = {
+                "valid_fraction": a[0] / a[1] if a[1] else None,
+                "gated_gemms": a[1],
+                "decode_valid_fraction": a[2] / a[3] if a[3] else None,
+                "decode_gated_gemms": a[3],
+                "gemm_bytes_moved": a[4] if a[4] else None,
+            }
+        stats["per_layer"] = per_layer
+        # -- latency ---------------------------------------------------------
+        decode_lat = list(decode_lat)
+        if ttft_s is not None or decode_lat:
+            lat = {"ttft_s": ttft_s, "decode_steps": len(decode_lat)}
+            if decode_lat:
+                h = Histogram("wave_decode_step_seconds",
+                              buckets=LATENCY_BUCKETS_S)
+                for v in decode_lat:
+                    h.observe(v)
+                lat["decode_mean_s"] = float(np.mean(decode_lat))
+                lat["decode_p50_s"] = h.quantile(0.5)
+                lat["decode_p95_s"] = h.quantile(0.95)
+            stats["latency"] = lat
+        # -- cost residual ---------------------------------------------------
+        if cost_taps:
+            ndev = self._ndev if self._sharded else 1
+            pred_pre = sum(t.value for t in cost_taps
+                           if t.phase != "decode") / ndev
+            pred_dec = sum(t.value for t in cost_taps
+                           if t.phase == "decode") / ndev
+            meas_dec = float(np.sum(decode_lat)) if decode_lat else 0.0
+            cres = {}
+            for phase, pred, meas in (("prefill", pred_pre, ttft_s or 0.0),
+                                      ("decode", pred_dec, meas_dec)):
+                if pred > 0.0 and meas > 0.0:
+                    r = self.obs.residual.record(phase, pred, meas)
+                    cres[phase] = {"predicted_s": pred, "measured_s": meas,
+                                   "log2_ratio": r}
+            if cres:
+                stats["cost_residual"] = cres
+        # -- registry feed ---------------------------------------------------
+        if self.obs.enabled:
+            for t in taps:
+                lab = dict(phase=t.phase, layer=t.layer, site=t.site or "")
+                self._m_vf.observe(t.value, **lab)
+                self._m_gemms.inc(**lab)
+            dtype = stats["compute_dtype"]
+            for t in byte_taps:
+                self._m_bytes.inc(t.value, phase=t.phase, layer=t.layer,
+                                  site=t.site or "", dtype=dtype)
+            self._m_cache.inc(stats["plan_cache_hits"], result="hit")
+            self._m_cache.inc(stats["plan_cache_misses"], result="miss")
+            if store0 is not None:
+                self._m_store.inc(stats["plan_store_hits"], result="hit")
+                self._m_store.inc(stats["plan_store_misses"], result="miss")
         return stats
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
@@ -560,13 +746,29 @@ class Engine:
         gating stats of its wave, split by phase: prefill (valid_fraction /
         gated_gemms over the gated prefill GEMMs) and decode
         (decode_valid_fraction / decode_gated_gemms summed over the wave's
-        decode steps), plus plan-cache hit/miss deltas.
+        decode steps), plus plan-cache hit/miss deltas, a `per_layer`
+        breakdown keyed by layer index and GEMM site, `latency` (TTFT and
+        decode-step wall-clock stats), and — when the cost channel is armed
+        — a `cost_residual` predicted-vs-measured pairing per phase (see
+        `_spamm_stats`).
+
+        Host timing uses the lockstep loop's OWN blocking points: the loop
+        top's `np.asarray(cur)` blocks on the previous step's output, so the
+        engine records `perf_counter_ns` at dispatch and closes the span
+        retroactively at the next block (`SpanTracer.add_complete`) — zero
+        added device syncs, which is how the instrumented engine stays
+        within the obs_overhead benchmark's budget.
         """
         assert requests, "empty batch"
         b = len(requests)
         plen = min(min(len(r.prompt) for r in requests), self.max_len - 1)
         toks = np.stack([r.prompt[-plen:] for r in requests]).astype(np.int32)
         collect = self.spamm_ctx is not None and self.spamm_ctx.enable
+        obs_on = self.obs.enabled
+        t_wave0 = time.perf_counter_ns() if obs_on else 0
+        pend = None          # (name, t0_ns) of a dispatched, un-blocked span
+        ttft_s = None
+        decode_lat: list = []
         spamm_meta = None
         store0 = None
         reshard0 = None
@@ -603,6 +805,8 @@ class Engine:
                 toks_in = toks[self._shard["perm"]]
             else:
                 toks_in = toks
+            if obs_on:
+                pend = ("prefill", time.perf_counter_ns())
             cache, logits = self._prefill(
                 self.params, {"tokens": jnp.asarray(toks_in)}, frozen_pre)
             if collect:
@@ -618,7 +822,19 @@ class Engine:
             if collect:
                 self.spamm_ctx.set_phase("decode")
             for t in range(budget):
-                vis = np.asarray(cur)
+                vis = np.asarray(cur)   # blocks on the previous step
+                if pend is not None:
+                    t1 = time.perf_counter_ns()
+                    name, t0_ns = pend
+                    pend = None
+                    self.obs.tracer.add_complete(name, t0_ns, t1, step=t)
+                    if name == "prefill":
+                        ttft_s = (t1 - t_wave0) / 1e9
+                        self._m_ttft.observe(ttft_s)
+                    else:
+                        dt = (t1 - t0_ns) / 1e9
+                        decode_lat.append(dt)
+                        self._m_decode_s.observe(dt)
                 if self._sharded:
                     # pad slots mirror their strip's last real group; the
                     # kept-slot table reads each request exactly once
@@ -631,6 +847,10 @@ class Engine:
                             done[i] = True
                 if done.all() or pos >= self.max_len - 1:
                     break
+                if obs_on:
+                    # the decode-step interval opens HERE so reshard stalls
+                    # (probe + cache permute) land inside the step's latency
+                    pend = ("decode_step", time.perf_counter_ns())
                 cache, cur = self._maybe_reshard(requests, outs, cache, cur)
                 if self._sharded:
                     frozen_dec = self._sharded_frozen_for(1)
@@ -653,12 +873,28 @@ class Engine:
                 # context's telemetry can't be left collecting forever
                 jax.effects_barrier()
                 byte_taps = self.spamm_ctx.drain_byte_stats()
+                cost_taps = self.spamm_ctx.drain_cost_stats()
                 taps = self.spamm_ctx.end_stats()
                 self.spamm_ctx.set_phase("prefill")
+            if pend is not None:
+                # loop left by budget exhaustion with a step still in
+                # flight: close its span at wall-clock now (no forced
+                # block), but keep it out of the latency histogram —
+                # only fully-blocked intervals are measurements
+                self.obs.tracer.add_complete(pend[0], pend[1],
+                                             time.perf_counter_ns())
+                pend = None
         if collect:
             spamm_meta = self._spamm_stats(taps, hits0, misses0, store0,
-                                           reshard0, byte_taps)
+                                           reshard0, byte_taps, cost_taps,
+                                           ttft_s, decode_lat)
         results = [np.asarray(o, np.int32) for o in outs]
+        if obs_on:
+            self.obs.tracer.add_complete("wave", t_wave0,
+                                         time.perf_counter_ns(),
+                                         batch=b, prompt_len=plen)
+            self._m_waves.inc()
+            self._m_tokens.inc(sum(len(o) for o in results))
         for r, toks_out in zip(requests, results):
             r.out = {"tokens": toks_out, "spamm": spamm_meta}
         return results

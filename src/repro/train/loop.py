@@ -27,6 +27,7 @@ from repro.data.pipeline import SyntheticLM
 from repro.distributed.compression import Int8EF
 from repro.models import model as M
 from repro.models.transformer import NetCtx
+from repro.obs import FRACTION_BUCKETS, LATENCY_BUCKETS_S, Observability
 from repro.optim.adamw import AdamW
 
 
@@ -39,10 +40,17 @@ class TrainResult:
     # per-step SpAMM gating stats, one entry per executed step (the same
     # stats the serving engine attaches to Request.out["spamm"]): list of
     # {"step", "valid_fraction", "gated_gemms"} dicts, empty when SpAMM off.
+    # Each entry also carries "per_layer": {layer: {valid_fraction,
+    # gated_gemms}} — the grad-safe trace-buffer tier threads the per-layer
+    # sums through the scan carry, so the breakdown survives value_and_grad.
     # With re-sharding on, each entry also carries the live equal-work
     # partition's predicted "imbalance" (the drift series — None until the
     # first probe) and the cumulative "resharded" event count
     spamm_stats: list = dataclasses.field(default_factory=list)
+    # the run's Observability bundle (registry with train_step_seconds /
+    # spamm_valid_fraction series, spans around probe + checkpoint I/O) —
+    # what launch.train exports via --metrics-out/--trace-out
+    obs: Optional[Observability] = None
 
 
 def train(
@@ -59,7 +67,15 @@ def train(
     resume: bool = False,
     straggler_factor: float = 3.0,
     log_every: int = 10,
+    obs=None,
 ) -> TrainResult:
+    obs = Observability.ensure(obs, process_name="repro-train")
+    # step wall-clock lands in the registry (monotonic perf_counter — the
+    # old time.time() readout jumped with NTP slews); keep_recent=50 retains
+    # the raw samples the straggler watchdog's rolling median reads
+    step_h = obs.registry.histogram(
+        "train_step_seconds", "optimizer step wall-clock (dispatch + block)",
+        buckets=LATENCY_BUCKETS_S, keep_recent=50)
     compression = (
         Int8EF() if pcfg.grad_compression == "int8_ef" else None
     )
@@ -120,21 +136,30 @@ def train(
                             x=jnp.asarray(batch["embeds"]).reshape(
                                 -1, cfg.d_model))
 
-    losses, durations, spamm_stats = [], [], []
+    losses, spamm_stats = [], []
     stragglers = 0
     restarts = 1 if resume and start_step else 0
     step = start_step
+    m_vf = (obs.registry.histogram(
+        "spamm_valid_fraction", labelnames=("phase", "layer", "site"),
+        buckets=FRACTION_BUCKETS) if obs.enabled and collect_spamm else None)
     while step < tcfg.total_steps:
         if fail_at_step is not None and step == fail_at_step:
             raise RuntimeError(f"injected failure at step {step}")
         batch = data.batch_at(step)
-        t0 = time.time()
+        t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns()
         params, opt_state, metrics = step_fn(
             params, opt_state, batch, jnp.int32(step)
         )
         loss = float(metrics["loss"])
+        obs.tracer.add_complete("train_step", t0_ns, time.perf_counter_ns(),
+                                step=step)
         if resharder is not None and resharder.due(step):
-            probe_reshard(step, batch)
+            with obs.span("reshard_probe", step=step):
+                probe_reshard(step, batch)
+            if obs.enabled:
+                resharder.publish(obs.registry)
         sp = None
         if collect_spamm and "spamm_valid_fraction" in metrics:
             n_gemms = int(metrics["spamm_gated_gemms"])
@@ -142,6 +167,19 @@ def train(
                   "valid_fraction": (float(metrics["spamm_valid_fraction"])
                                      if n_gemms else None),
                   "gated_gemms": n_gemms}
+            if "spamm_layer_valid_fraction" in metrics:
+                lvf = np.asarray(metrics["spamm_layer_valid_fraction"])
+                lvc = np.asarray(metrics["spamm_layer_gated_gemms"])
+                sp["per_layer"] = {
+                    int(i): {"valid_fraction": (float(lvf[i]) if lvc[i]
+                                                else None),
+                             "gated_gemms": int(lvc[i])}
+                    for i in range(lvf.shape[0])}
+                if m_vf is not None:
+                    for i in range(lvf.shape[0]):
+                        if lvc[i]:
+                            m_vf.observe(float(lvf[i]), phase="train",
+                                         layer=int(i), site="")
             if resharder is not None:
                 sp["imbalance"] = resharder.live_imbalance
                 sp["resharded"] = resharder.resharded
@@ -154,10 +192,13 @@ def train(
                 sp["loads"] = (None if loads is None
                                else [float(x) for x in loads])
             spamm_stats.append(sp)
-        dt = time.time() - t0
-        durations.append(dt)
-        med = float(np.median(durations[-50:]))
-        if len(durations) > 5 and dt > straggler_factor * med:
+        dt = time.perf_counter() - t0
+        step_h.observe(dt)
+        # straggler watchdog: rolling median over the histogram's retained
+        # raw samples (keep_recent=50) — the registry is the one owner of
+        # step durations now, no shadow list to drift out of sync
+        med = float(np.median(step_h.recent()))
+        if step_h.count() > 5 and dt > straggler_factor * med:
             stragglers += 1
         losses.append(loss)
         if log_every and step % log_every == 0:
@@ -169,9 +210,11 @@ def train(
                   flush=True)
         step += 1
         if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
-            ckpt.save(
-                tcfg.ckpt_dir, step,
-                {"params": params, "opt_state": opt_state},
-                async_=False,
-            )
-    return TrainResult(losses, restarts, stragglers, step, spamm_stats)
+            with obs.span("checkpoint_save", step=step):
+                ckpt.save(
+                    tcfg.ckpt_dir, step,
+                    {"params": params, "opt_state": opt_state},
+                    async_=False,
+                )
+    return TrainResult(losses, restarts, stragglers, step, spamm_stats,
+                       obs=obs)
