@@ -30,6 +30,7 @@ MODULES = {
     "mixed_precision": "mixed_precision",
     "autotune": "autotune",
     "obs_overhead": "obs_overhead",
+    "scenario_sweep": "scenario_sweep",
     "roofline": "roofline",
 }
 

@@ -58,6 +58,21 @@ def bucket(n: int, minimum: int = 16) -> int:
     return max(minimum, 1 << max(n - 1, 0).bit_length())
 
 
+def bucket_ladder(n_max: int, minimum: int = 16) -> list:
+    """Every bucket `bucket(n, minimum)` can return for n in [1, n_max] —
+    the power-of-two ladder from `bucket(1)` up to `bucket(n_max)`. Its
+    LENGTH is the compile-count bound for shape-bucketed serving: a sweep
+    over arbitrary batch/slot counts ≤ n_max compiles at most
+    `len(bucket_ladder(n_max, m))` distinct bucketed shapes (the serving
+    engine's `trace_counts` guard asserts against exactly this)."""
+    lo = bucket(1, minimum)
+    hi = bucket(max(int(n_max), 1), minimum)
+    out = [lo]
+    while out[-1] < hi:
+        out.append(out[-1] * 2)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # machine coefficients
 # ---------------------------------------------------------------------------

@@ -231,8 +231,10 @@ class SpammWork(NamedTuple):
 
 
 # the ONE bucket function lives in core.cost (the autotuner searches over
-# its `minimum`); this alias keeps the historical import path working
+# its `minimum`); these aliases keep the historical import path working —
+# `bucket_ladder` is the compile-count bound shape-bucketed serving asserts
 _bucket = kcost.bucket
+bucket_ladder = kcost.bucket_ladder
 
 
 def compact_from_triples(ii, jj, kk, *, gm: int, gn: int, gk: int,

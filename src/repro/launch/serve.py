@@ -26,9 +26,26 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="draw each request's prompt length uniformly from "
+                         "[prompt_len/2, prompt_len] instead of one uniform "
+                         "length — exercises the chunked slot scheduler "
+                         "(attention stacks; implies chunked prefill)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: advance prompts C tokens per "
+                         "engine step at ONE static shape, interleaved with "
+                         "decode (C % spamm-tile == 0 when gating). Default "
+                         "auto: chunk only for mixed-length batches; 0 "
+                         "disables chunking (mixed lengths then rejected)")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="cap the chunked scheduler's concurrent slot pool "
+                         "(power-of-two bucketed); below --num-requests the "
+                         "queue drives admission into freed slots between "
+                         "decode steps")
     ap.add_argument("--spamm-tau", type=float, default=None,
-                    help="enable SpAMM-gated prefill GEMMs at this τ "
-                         "(one SpammContext per engine)")
+                    help="enable SpAMM norm-gated GEMMs at this τ — prefill "
+                         "AND decode gate (decode through frozen plans); "
+                         "one SpammContext per engine")
     ap.add_argument("--spamm-tile", type=int, default=32)
     ap.add_argument("--spamm-backend", default="auto")
     ap.add_argument("--spamm-block-n", type=int, default=1,
@@ -61,8 +78,9 @@ def main():
                          "starts from it instead of running a planning pass")
     ap.add_argument("--no-freeze-plans", action="store_true",
                     help="legacy in-trace gating (weight normmaps re-derived "
-                         "inside the compiled prefill) instead of frozen "
-                         "plans as jit inputs")
+                         "inside the compiled prefill; decode GEMMs fall "
+                         "back to dense — decode only gates through frozen "
+                         "plans) instead of frozen plans as jit inputs")
     ap.add_argument("--reshard-every", type=int, default=0,
                     help="drift-triggered re-sharding probe cadence in "
                          "engine steps (prefill + decode); 0 = off; needs "
@@ -138,15 +156,23 @@ def main():
                  reshard_cfg=reshard_cfg,
                  mesh_devices=args.spamm_mesh_devices,
                  shard_max_width=args.spamm_shard_width or None,
+                 prefill_chunk=args.prefill_chunk,
+                 max_slots=args.max_slots,
                  obs=obs)
 
     rng = np.random.default_rng(args.seed)
+    if args.mixed_lengths:
+        plens = rng.integers(max(1, args.prompt_len // 2),
+                             args.prompt_len + 1,
+                             size=args.num_requests)
+    else:
+        plens = np.full(args.num_requests, args.prompt_len)
     reqs = [
         Request(
-            prompt=rng.integers(1, cfg.vocab, size=args.prompt_len).astype(np.int32),
+            prompt=rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32),
             max_new_tokens=args.max_new,
         )
-        for _ in range(args.num_requests)
+        for n in plens
     ]
     t0 = time.time()
     outs = eng.generate(reqs)

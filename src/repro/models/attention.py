@@ -28,18 +28,25 @@ NEG_INF = -1e30
 
 
 def _mask_bias(qpos, kpos, window: Optional[int], kv_limit: Optional[int] = None):
-    """(..., q, k) additive bias: causal + optional sliding window."""
-    ok = kpos[None, :] <= qpos[:, None]
+    """(..., q, k) additive bias: causal + optional sliding window.
+
+    `qpos` may carry leading batch dims — chunked prefill hands per-row
+    absolute positions (B, q) and gets a (B, q, k) bias back."""
+    qp = qpos[..., :, None]
+    ok = kpos <= qp
     if window is not None:
-        ok &= kpos[None, :] > (qpos[:, None] - window)
+        ok &= kpos > (qp - window)
     if kv_limit is not None:
-        ok &= (kpos < kv_limit)[None, :]
+        ok &= kpos < kv_limit
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
 def _attend_chunk(q, k, v, bias, scale):
-    """q: (B,qc,Hk,G,D) k/v: (B,kc,Hk,D) bias: (qc,kc) → partial (o,m,l)."""
+    """q: (B,qc,Hk,G,D) k/v: (B,kc,Hk,D) bias: (qc,kc) or batched
+    (B,qc,kc) → partial (o,m,l)."""
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    if getattr(bias, "ndim", 0) == 3:      # per-row bias → (B,1,1,qc,kc)
+        bias = bias[:, None, None]
     s = s * scale + bias
     m = jnp.max(s, axis=-1)                       # (B,Hk,G,q)
     p = jnp.exp(s - m[..., None])
@@ -113,13 +120,18 @@ def flash_attention(
     window: Optional[int] = None,
     q_chunk: int = 512,
     kv_chunk: int = 1024,
-    q_offset: int = 0,       # absolute position of q[0] (prefill continuation)
+    q_offset=0,              # absolute position of q[0] (prefill continuation):
+                             # static int, traced scalar, or (B,) per-row array
     packed: bool = True,     # pair-packed causal scan (skips masked blocks)
 ) -> jax.Array:
     b, sq, hq, d = q.shape
     _, skv, hk, _ = k.shape
     g = hq // hk
     scale = 1.0 / math.sqrt(d)
+    # only a STATIC offset can drive the banded dynamic-slice window path or
+    # the packed lower-triangular scan; traced/per-row offsets take the
+    # general kv-scan with the window folded into the additive bias
+    off_static = isinstance(q_offset, int)
     q_chunk = min(q_chunk, sq)
     kv_chunk = min(kv_chunk, skv)
     # pad to chunk multiples (padded q rows discarded; padded kv masked out)
@@ -136,7 +148,7 @@ def flash_attention(
     nq = sq // q_chunk
     q5 = q.reshape(b, nq, q_chunk, hk, g, d)
 
-    if window is not None:
+    if window is not None and off_static:
         # static KV band per q chunk: [q_start - window + 1, q_start + q_chunk)
         band = window + q_chunk
 
@@ -167,6 +179,7 @@ def flash_attention(
     if (
         causal
         and packed
+        and off_static
         and q_offset == 0
         and sq == skv
         and q_chunk == kv_chunk
@@ -176,16 +189,18 @@ def flash_attention(
         return _causal_flash_packed(q5, k4, v4, scale, q_chunk)
 
     def per_q(iq, qc):
-        qpos = iq * q_chunk + q_offset + jnp.arange(q_chunk)
+        # (qc,) for scalar offsets, (B, qc) for per-row offsets — _mask_bias
+        # and _attend_chunk broadcast either shape
+        qpos = jnp.asarray(q_offset)[..., None] + iq * q_chunk + jnp.arange(q_chunk)
 
         def kv_body(carry, xs):
             ik, kc, vc = xs
             o_acc, m_acc, l_acc = carry
             kpos = ik * kv_chunk + jnp.arange(kv_chunk)
             if causal or kv_limit is not None:
-                bias = _mask_bias(qpos, kpos, None, kv_limit)
+                bias = _mask_bias(qpos, kpos, window, kv_limit)
                 if not causal:
-                    bias = _mask_bias(jnp.full_like(qpos, skv), kpos, None, kv_limit)
+                    bias = _mask_bias(jnp.full((q_chunk,), skv), kpos, None, kv_limit)
             else:
                 bias = jnp.float32(0.0)
             o, m, l = _attend_chunk(qc, kc, vc, bias, scale)

@@ -331,6 +331,42 @@ def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
     return step
 
 
+def make_prefill_chunk_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                            ctx: NetCtx, *, spamm_cfg=None):
+    """fn(params, batch, cache, positions, last_idx, frozen=None) →
+    (cache, logits). One tile-aligned chunk of position-offset prefill: the
+    chunk's tokens run the layer stack at ONE static (B, C) shape, writing
+    K/V into the LINEAR decode cache at `positions` (B, C) — absolute
+    per-row token indices; entries ≥ cache length are idle/pad sentinels
+    whose writes drop (`.at[].set(mode="drop")`). `logits` (B, V) is read
+    at `last_idx` (B,), the in-chunk index of each row's final prompt token
+    (clamped, so rows whose prompt does not end in this chunk return values
+    the caller ignores). Attention stacks only — see `stack_prefill_chunk`.
+
+    `frozen` is the chunk-shape FrozenPlan pytree (rows = B·C), a jit
+    argument exactly like the one-shot prefill's."""
+    spamm_cfg = spmod.as_context(spamm_cfg)  # one context for every call
+
+    def step(params, batch, cache, positions, last_idx, frozen=None):
+        cdt = _dtype(pcfg.compute_dtype)
+        if "embeds" in batch:
+            x = batch["embeds"].astype(cdt)
+        else:
+            x = params["embed"]["embedding"].astype(cdt)[batch["tokens"]]
+        x = ctx.shard(x, ctx.batch_axes, None, None)
+        b, c, _ = x.shape
+        x, cache = tr.stack_prefill_chunk(
+            params, x, cache, positions, cfg, pcfg, ctx,
+            spamm_cfg=spamm_cfg, frozen=frozen)
+        idx = jnp.clip(last_idx, 0, c - 1)
+        h_last = rms_norm(x[jnp.arange(b), idx], params["final_norm"],
+                          cfg.norm_eps)
+        logits = (h_last @ params["unembed"]["kernel"].astype(cdt)).astype(jnp.float32)
+        return cache, logits
+
+    return step
+
+
 def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, ctx: NetCtx,
                      *, spamm_cfg=None):
     """fn(params, tokens_or_embeds (B,1[,d]), cache, pos, frozen=None) →

@@ -126,7 +126,11 @@ def attention_decode(
     x: jax.Array,            # (B, 1, d)
     cache_k: jax.Array,      # (B, S, Hk, hd) — full or ring buffer
     cache_v: jax.Array,
-    pos: jax.Array,          # scalar int32: index of the incoming token
+    pos: jax.Array,          # scalar int32 (lockstep) or (B,) per-row index
+                             # of the incoming token; per-row entries ≥ S are
+                             # idle-slot sentinels — their cache writes DROP
+                             # and their outputs are garbage the caller
+                             # discards (chunked-engine slot scheduling)
     cfg: ModelConfig,
     pcfg: ParallelConfig,
     ctx: NetCtx,
@@ -138,16 +142,38 @@ def attention_decode(
 ):
     b = x.shape[0]
     hq, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    vector_pos = pos.ndim > 0
+    posb = pos.reshape(b, 1) if vector_pos else jnp.full((b, 1), pos, jnp.int32)
     # decode gates only through frozen plans (require_frozen): re-tracing the
     # gate per decode step is never worth it, but a frozen weight side is
-    q, k, v = _qkv(p, x, cfg, ctx, jnp.full((b, 1), pos, jnp.int32),
-                   spamm_cfg, frozen, require_frozen=True)
+    q, k, v = _qkv(p, x, cfg, ctx, posb, spamm_cfg, frozen,
+                   require_frozen=True)
     q1 = q[:, 0]  # (B, Hq, hd)
     if pcfg.decode_seq_shard and ctx.mesh is not None and ctx.mesh.shape[ctx.model_axis] > 1:
+        if vector_pos:
+            raise NotImplementedError(
+                "decode_seq_shard expects a lockstep scalar position; "
+                "per-row decode positions (chunked serving) need the "
+                "unsharded decode path")
         o, cache_k, cache_v = attn_mod.decode_attention_seqsharded(
             q1, k, v, cache_k, cache_v, pos + 1,
             mesh=ctx.mesh, batch_axes=ctx.batch_axes, axis=ctx.model_axis,
             window=window, ring=ring,
+        )
+    elif vector_pos:
+        # per-row scatter; mode="drop" discards rows whose position is out
+        # of range, which is exactly the idle-slot sentinel contract (only
+        # meaningful for linear caches — a ring modulo would wrap sentinels
+        # back into range, so chunked serving allocates full-length caches)
+        slot = (pos % cache_k.shape[1]) if ring else pos
+        bi = jnp.arange(b)
+        cache_k = cache_k.at[bi, slot].set(k[:, 0].astype(cache_k.dtype),
+                                           mode="drop")
+        cache_v = cache_v.at[bi, slot].set(v[:, 0].astype(cache_v.dtype),
+                                           mode="drop")
+        o = attn_mod.decode_attention(
+            q1, cache_k, cache_v, pos + 1, window=window, ring=ring,
         )
     else:
         slot = (pos % cache_k.shape[1]) if ring else pos
@@ -159,6 +185,54 @@ def attention_decode(
     out = maybe_spamm_matmul(
         o.reshape(b, 1, hq * hd), p["wo"].astype(x.dtype), spamm_cfg,
         frozen=(frozen or {}).get("wo"), require_frozen=True, site="wo")
+    return out, (cache_k, cache_v)
+
+
+def attention_prefill_chunk(
+    p: dict,
+    x: jax.Array,            # (B, C, d) — one tile-aligned prompt chunk
+    cache_k: jax.Array,      # (B, S, Hk, hd) — LINEAR cache (no ring)
+    cache_v: jax.Array,
+    positions: jax.Array,    # (B, C) int32 absolute positions; entries ≥ S
+                             # are sentinels: the K/V write DROPS and the
+                             # row's output is garbage the caller discards
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    *,
+    window: Optional[int] = None,
+    spamm_cfg=None,
+    frozen=None,
+):
+    """One chunk of position-offset prefill: project/rope the chunk at its
+    absolute positions, scatter K/V into the linear cache, then flash-attend
+    the chunk's queries against the WHOLE cache with a per-row causal bias.
+
+    Bit-parity contract with one-shot prefill (tile-aligned equal lengths):
+    cache slots at/beyond each row's position are fully masked, and a fully
+    masked KV block is bitwise neutral in the online softmax (NEG_INF
+    absorbs finite f32 scores exactly; exp underflows to exact 0 and the
+    rescale factor is exp(0)=1), so attending over max_len cache slots
+    chunk by chunk reproduces the one-shot scores block for block."""
+    b, c, _ = x.shape
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, ctx, positions, spamm_cfg, frozen)
+    bi = jnp.arange(b)[:, None]
+    cache_k = cache_k.at[bi, positions].set(k.astype(cache_k.dtype),
+                                            mode="drop")
+    cache_v = cache_v.at[bi, positions].set(v.astype(cache_v.dtype),
+                                            mode="drop")
+    o = attn_mod.flash_attention(
+        q, cache_k, cache_v,
+        causal=True,
+        window=window,
+        q_chunk=pcfg.attn_q_chunk,
+        kv_chunk=pcfg.attn_kv_chunk,
+        q_offset=positions[:, 0],
+    )
+    out = maybe_spamm_matmul(
+        o.reshape(b, c, hq * hd), p["wo"].astype(x.dtype), spamm_cfg,
+        frozen=(frozen or {}).get("wo"), site="wo")
     return out, (cache_k, cache_v)
 
 
@@ -276,6 +350,37 @@ def layer_fwd(
     f, aux = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, spamm_cfg,
                   fz.get("mlp"))
     return x + f, aux, cache
+
+
+def layer_prefill_chunk(
+    p: dict,
+    x: jax.Array,               # (B, C, d)
+    cache: dict,
+    positions: jax.Array,       # (B, C) absolute positions (sentinels ≥ S)
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    *,
+    spamm_cfg=None,
+    frozen=None,
+):
+    """One residual layer of chunked prefill: attention writes the chunk's
+    K/V into the linear cache at its absolute positions; the FFN is
+    stateless per position, so it is the plain prefill body. Only "attn"
+    stacks chunk — recurrent state (ssm/rec) would have to thread through
+    every chunk carry, which is the decode path's job."""
+    fz = frozen or {}
+    x = ctx.shard(x, ctx.batch_axes, None, None)
+    h, (ck, cv) = attention_prefill_chunk(
+        p["mix"], rms_norm(x, p["ln1"], cfg.norm_eps), cache["k"], cache["v"],
+        positions, cfg, pcfg, ctx, window=cfg.sliding_window,
+        spamm_cfg=spamm_cfg, frozen=fz.get("mix"),
+    )
+    new = dict(cache, k=ck, v=cv)
+    x = x + h
+    f, _ = _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ctx, spamm_cfg,
+                fz.get("mlp"))
+    return x + f, new
 
 
 def layer_decode(
@@ -538,6 +643,52 @@ def stack_prefill(
 
     try:
         x, caches = jax.lax.scan(body, x, (params["layers"],
+                                           fz.get("layers", {}),
+                                           jnp.arange(cfg.num_layers)))
+    finally:
+        if tctx is not None:
+            tctx.set_layer(None)
+    return x, {"layers": caches}
+
+
+def stack_prefill_chunk(
+    params: dict,
+    x: jax.Array,          # (B, C, d) — one chunk of embedded prompt tokens
+    cache: dict,
+    positions: jax.Array,  # (B, C) absolute positions (sentinels ≥ max_len)
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    ctx: NetCtx,
+    *,
+    spamm_cfg=None,
+    frozen=None,
+):
+    """Chunked prefill over the layer stack: like `stack_decode`, the decode
+    caches ride the scan as xs and come back as ys, so each chunk runs at
+    ONE static (B, C) shape regardless of where in the prompt it lands.
+    Attention ("attn") stacks only — ssm/hybrid recurrent state cannot
+    resume from a position offset without threading the whole state chain.
+
+    Layer labels ride the scan like `stack_prefill`'s."""
+    kind = stack_kinds(cfg)
+    if kind != "attn":
+        raise NotImplementedError(
+            f"chunked prefill covers stateless-FFN attention stacks only "
+            f"(got stack kind {kind!r}: recurrent prefill state does not "
+            f"checkpoint at a chunk boundary)")
+    fz = frozen or {}
+    tctx = _tap_ctx(spamm_cfg)
+
+    def body(h, pcf):
+        p, c, f, li = pcf
+        if tctx is not None:
+            tctx.set_layer(li)
+        h, nc = layer_prefill_chunk(p, h, c, positions, cfg, pcfg, ctx,
+                                    spamm_cfg=spamm_cfg, frozen=f)
+        return h, nc
+
+    try:
+        x, caches = jax.lax.scan(body, x, (params["layers"], cache["layers"],
                                            fz.get("layers", {}),
                                            jnp.arange(cfg.num_layers)))
     finally:

@@ -241,7 +241,13 @@ class FrozenWeight:
         present; pass a common `min_steps` when plans of several weights
         must stack into one scan input. Padding steps repeat the last real
         triple with the `real` bit clear, so the traced gate can never
-        activate them. Cached per (gm, bucket)."""
+        activate them. Cached per (gm, bucket).
+
+        Shape-bucketed serving leans on this cache: the engine rounds its
+        slot pool to a power of two (`cost.bucket`), so a sweep of
+        arbitrary batch shapes resolves to at most
+        `len(cost.bucket_ladder(max_batch, 1))` distinct `gm` values —
+        O(buckets) specializations and jit traces, not O(shapes)."""
         return self._specialize(gm, gm, min_steps)
 
     def slice_rows(self, lo: int, hi: int, *, gm: Optional[int] = None,

@@ -1,10 +1,23 @@
 """Batched serving engine: prefill + greedy decode with slot-based batching.
 
-A fixed pool of `batch` slots; requests (prompts) fill free slots, a slot
-frees when its sequence emits EOS or hits max_new_tokens (continuous-
-batching-lite: admission happens between decode steps; prefill per admission
-wave). The decode step is the same jitted fn the dry-run lowers — decode
-caches come back from prefill and are padded to the engine's max length.
+Two data planes share the jitted decode step:
+
+* WAVE mode (default for equal-length prompts): the batch prefills in one
+  shot, then decodes in lockstep until every sequence finishes — a slot
+  that emits EOS stays in the batch as dead weight until the wave drains.
+* CHUNKED mode (`prefill_chunk`, and the automatic path for mixed-length
+  prompts on attention stacks): a power-of-two-bucketed pool of slots;
+  prompts prefill in tile-aligned chunks at ONE static chunk shape,
+  interleaved with decode steps, writing into the KV cache at per-slot
+  position offsets. Here the continuous-batching story is real: a slot
+  frees when its sequence emits EOS or hits max_new_tokens, and queued
+  requests are admitted into freed slots between decode steps via chunked
+  prefill — no prompt is ever trimmed and per-step latency is bounded by
+  the chunk size.
+
+The decode step is the same jitted fn the dry-run lowers — decode caches
+come back from prefill (wave mode pads them to the engine's max length;
+chunked mode allocates full-length linear caches up front).
 """
 from __future__ import annotations
 
@@ -21,9 +34,12 @@ from repro.core import module as spmod
 from repro.core import schedule as _schedule
 from repro.core.plan import _bucket
 from repro.models import model as M
-from repro.models.transformer import NetCtx
+from repro.models.transformer import NetCtx, stack_kinds
 from repro.obs import (FRACTION_BUCKETS, Histogram, LATENCY_BUCKETS_S,
                        Observability)
+
+# queue-depth / occupancy histograms bucket on a request-count ladder
+COUNT_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 
 
 @dataclasses.dataclass
@@ -40,6 +56,32 @@ class Engine:
     """`spamm_cfg` (SpammConfig or SpammContext) turns on norm-gated GEMMs in
     prefill AND decode. The engine owns ONE SpammContext threaded through
     every request.
+
+    Chunked prefill + slot admission (`prefill_chunk`, `max_slots`): with
+    `prefill_chunk=C` (or automatically for mixed-length prompts on
+    attention stacks when `prefill_chunk is None`), `generate` runs the
+    slot scheduler instead of the one-shot wave. The slot pool is bucketed
+    to a power of two (`cost.bucket`, capped by `max_slots`), so the
+    chunked-prefill and decode jit caches are keyed by the BUCKET ladder,
+    not by every distinct (batch, prompt_len) — a mixed-shape sweep
+    compiles O(log slots) traces (`cost.bucket_ladder` names the bound and
+    `trace_counts` proves it). Each scheduler iteration admits queued
+    requests into idle slots, advances every prefilling slot by one
+    tile-aligned chunk of C tokens (ONE static (slots, C) shape, written
+    into full-length linear KV caches at per-slot position offsets via
+    drop-mode scatters — idle/pad slots carry position sentinels ≥ max_len
+    so their writes vanish), then runs one decode step over the decoding
+    slots (per-row positions). Finished slots free between decode steps.
+    Bit-parity contract: chunk cuts fall on row-tile boundaries
+    (C % tile == 0), so on tile-aligned equal-length prompts the chunked
+    tokens are bit-identical to the one-shot wave's — fully masked KV
+    blocks are bitwise neutral in the online softmax, and tile membership
+    (hence the gate) is unchanged. Recurrent stacks (ssm/hybrid) cannot
+    chunk (state does not checkpoint at a chunk boundary): they reject
+    mixed-length batches loudly instead of silently trimming. In
+    pod-sharded mode `prefill_chunk` swaps the wave's one-shot prefill for
+    a chunk loop at the same static shard shapes (equal lengths still
+    required; admission stays wave-based).
 
     Frozen-plan contract (the amortization story): the weight-side gating
     artifacts are a pure function of the static weights, so the engine
@@ -134,12 +176,40 @@ class Engine:
                  reshard_cfg: Optional[_schedule.ReshardConfig] = None,
                  mesh_devices: int = 0,
                  shard_max_width: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 max_slots: Optional[int] = None,
                  obs=None):
         self.cfg, self.pcfg, self.ctx = cfg, pcfg, ctx
         self.params = params
         self.max_len = max_len
         self.spamm_ctx = spmod.as_context(spamm_cfg)
         enabled = self.spamm_ctx is not None and self.spamm_ctx.enable
+        # `prefill_chunk`: None = auto (chunked scheduler only for
+        # mixed-length attention-stack batches), int C = always chunk at C
+        # tokens, 0/False = never chunk (mixed lengths are rejected).
+        # `max_slots` caps the chunked scheduler's concurrent slot pool —
+        # below the batch size it exercises queue-driven admission.
+        self._prefill_chunk = prefill_chunk
+        self._max_slots = int(max_slots) if max_slots else None
+        if self._max_slots is not None and self._max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        if prefill_chunk:
+            c = int(prefill_chunk)
+            if c < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1 (or 0/None), got "
+                    f"{prefill_chunk}")
+            if stack_kinds(cfg) != "attn":
+                raise ValueError(
+                    f"chunked prefill needs a stateless-FFN attention stack "
+                    f"(got {stack_kinds(cfg)!r}: recurrent prefill state "
+                    f"does not checkpoint at a chunk boundary)")
+            if enabled and c % self.spamm_ctx.cfg.tile:
+                raise ValueError(
+                    f"prefill_chunk={c} must be a multiple of the SpAMM "
+                    f"tile ({self.spamm_ctx.cfg.tile}): gating is per row "
+                    f"tile, so a chunk cut inside a tile would change tile "
+                    f"membership and the gate")
         # `obs`: an Observability bundle to share (CLI passes one so the
         # exported dump covers the whole run), None for a private enabled
         # bundle, False for hard-off (no spans, no latency blocks, no cost
@@ -243,6 +313,21 @@ class Engine:
             self._m_store = reg.counter(
                 "spamm_plan_store_total", labelnames=("result",),
                 help="on-disk PlanStore hits/misses")
+            self._m_admit = reg.counter(
+                "serve_admissions_total",
+                help="requests admitted into a slot (chunked scheduler)")
+            self._m_chunks = reg.counter(
+                "serve_prefill_chunks_total",
+                help="chunked-prefill steps executed (each advances every "
+                     "prefilling slot by prefill_chunk tokens)")
+            self._m_queue = reg.histogram(
+                "serve_queue_depth", labelnames=(),
+                help="requests waiting for a slot, sampled per scheduler "
+                     "iteration (chunked mode)", buckets=COUNT_BUCKETS)
+            self._m_occupancy = reg.histogram(
+                "serve_slot_occupancy", labelnames=(),
+                help="live slots per scheduler iteration (chunked mode)",
+                buckets=COUNT_BUCKETS)
         self._build_steps()
 
     def _counted(self, fn, key: str):
@@ -256,6 +341,7 @@ class Engine:
 
     def _build_steps(self):
         cfg, pcfg = self.cfg, self.pcfg
+        chunkable = stack_kinds(cfg) == "attn"
         if not self._sharded:
             self._prefill = jax.jit(self._counted(
                 M.make_prefill_step(cfg, pcfg, self.ctx,
@@ -264,6 +350,12 @@ class Engine:
                 cfg, pcfg, self.ctx,
                 spamm_cfg=self.spamm_ctx if self._freeze else None),
                 "decode"))
+            # chunked prefill shares the "prefill" trace counter: the
+            # jit-cache-bound guard counts every prefill-side trace
+            self._chunk = None if not chunkable else jax.jit(self._counted(
+                M.make_prefill_chunk_step(cfg, pcfg, self.ctx,
+                                          spamm_cfg=self.spamm_ctx),
+                "prefill"))
             return
         from jax.sharding import PartitionSpec as P
 
@@ -303,6 +395,23 @@ class Engine:
             self._counted(dec_body, "decode"), mesh=mesh,
             in_specs=(P(), P("rows"), P("rows"), P(), P("rows")),
             out_specs=(P("rows"), P("rows"))))
+        self._chunk = None
+        if chunkable:
+            inner_chunk = M.make_prefill_chunk_step(
+                cfg, pcfg, body_ctx, spamm_cfg=self.spamm_ctx)
+
+            def chunk_body(params, batch, cache, positions, last_idx,
+                           frozen):
+                cache, logits = inner_chunk(params, batch, unstack(cache),
+                                            positions, last_idx,
+                                            unstack(frozen))
+                return restack(cache), logits
+
+            self._chunk = jax.jit(shard_map(
+                self._counted(chunk_body, "prefill"), mesh=mesh,
+                in_specs=(P(), P("rows"), P("rows"), P("rows"), P("rows"),
+                          P("rows")),
+                out_specs=(P("rows"), P("rows"))))
 
     # -- drift-triggered re-sharding (control plane) -------------------------
     @property
@@ -584,11 +693,16 @@ class Engine:
 
         return jax.tree_util.tree_map_with_path(fix, cache)
 
-    def _pad_cache(self, cache, cur_len: int):
-        """Grow linear KV caches from cur_len to max_len slots."""
+    def _pad_cache(self, cache, *, full: bool = False):
+        """Grow linear KV caches to the engine's slot budget: max_len, or
+        the sliding window when one is smaller (the decode ring). With
+        `full=True` always grow to max_len — chunked prefill scatters at
+        absolute positions, so windowed archs keep a LINEAR full-length
+        cache (the window applies as a mask; `layer_decode`'s ring
+        condition turns itself off on a cache longer than the window)."""
         target = (
             min(self.max_len, self.cfg.sliding_window)
-            if self.cfg.sliding_window else self.max_len
+            if self.cfg.sliding_window and not full else self.max_len
         )
 
         def grow(path, t):
@@ -738,9 +852,34 @@ class Engine:
                 self._m_store.inc(stats["plan_store_misses"], result="miss")
         return stats
 
+    # -- wave layout / dispatch ----------------------------------------------
+    def _default_chunk(self) -> int:
+        """Tile-aligned default chunk size for the auto mixed-length path."""
+        tile = (self.spamm_ctx.cfg.tile
+                if self.spamm_ctx is not None and self.spamm_ctx.enable
+                else 1)
+        return -(-16 // tile) * tile
+
+    def _resolve_chunk(self, mixed: bool) -> Optional[int]:
+        """The chunk size this batch prefills at, or None for one-shot."""
+        pc = self._prefill_chunk
+        if pc is not None and not pc:      # 0/False: chunking disabled
+            return None
+        if pc is None:                     # auto: chunk only when needed
+            if not mixed or self._sharded or self._chunk is None:
+                return None
+            return self._default_chunk()
+        return int(pc)
+
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
-        """Greedy-decode a batch of same-length prompts (engine pads to the
-        longest prompt internally with left-trim to uniform length).
+        """Greedy-decode a batch of prompts. Equal-length batches run the
+        lockstep wave (one-shot prefill unless `prefill_chunk` asks for
+        chunking); mixed-length batches run the chunked slot scheduler on
+        attention stacks — every prompt's tokens are used in full. Batches
+        the engine cannot serve faithfully raise ValueError instead of
+        silently truncating: prompts longer than max_len - 1, and mixed
+        lengths where chunking is unavailable (recurrent stacks,
+        pod-sharded mode, or an explicit `prefill_chunk=0`).
 
         When SpAMM is enabled, each request's `out` metadata carries the
         gating stats of its wave, split by phase: prefill (valid_fraction /
@@ -760,9 +899,48 @@ class Engine:
         within the obs_overhead benchmark's budget.
         """
         assert requests, "empty batch"
+        plens = [len(r.prompt) for r in requests]
+        if min(plens) < 1:
+            raise ValueError("empty prompt")
+        if max(plens) > self.max_len - 1:
+            raise ValueError(
+                f"prompt of {max(plens)} tokens does not fit "
+                f"max_len={self.max_len} (a sequence needs at least one "
+                f"decode slot) — raise max_len instead of losing prompt "
+                f"tokens")
+        mixed = len(set(plens)) > 1
+        chunk = self._resolve_chunk(mixed)
+        if not self._sharded and chunk:
+            return self._generate_chunked(requests, chunk)
+        if mixed:
+            # loud rejection instead of the old silent left-trim to the
+            # shortest prompt: every alternative here loses prompt tokens
+            if self._sharded:
+                raise ValueError(
+                    "pod-sharded serving needs equal-length prompts (the "
+                    "chunked mixed-length scheduler is unsharded-only); "
+                    "pad client-side or serve unsharded")
+            if self._chunk is None:
+                raise ValueError(
+                    f"{stack_kinds(self.cfg)!r} stacks cannot chunk "
+                    f"mixed-length prompts (recurrent prefill state does "
+                    f"not checkpoint at a chunk boundary); pad client-side "
+                    f"to one length")
+            raise ValueError(
+                "mixed-length prompts need chunked prefill, but "
+                "prefill_chunk=0 disabled it; drop the override or pad "
+                "client-side")
+        return self._generate_wave(requests, chunk)
+
+    def _generate_wave(self, requests: List[Request],
+                       chunk: Optional[int] = None) -> List[np.ndarray]:
+        """Lockstep wave: prefill the whole (equal-length) batch, decode
+        until every sequence finishes. `chunk` (pod-sharded mode only —
+        unsharded chunked batches take `_generate_chunked`) swaps the
+        one-shot prefill for a chunk loop at one static shard shape."""
         b = len(requests)
-        plen = min(min(len(r.prompt) for r in requests), self.max_len - 1)
-        toks = np.stack([r.prompt[-plen:] for r in requests]).astype(np.int32)
+        plen = len(requests[0].prompt)
+        toks = np.stack([r.prompt for r in requests]).astype(np.int32)
         collect = self.spamm_ctx is not None and self.spamm_ctx.enable
         obs_on = self.obs.enabled
         t_wave0 = time.perf_counter_ns() if obs_on else 0
@@ -807,14 +985,20 @@ class Engine:
                 toks_in = toks
             if obs_on:
                 pend = ("prefill", time.perf_counter_ns())
-            cache, logits = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks_in)}, frozen_pre)
-            if collect:
-                if self._sharded:
-                    self._note_gm(self._shard["wmax_g"] * plen, self._ndev)
-                else:
-                    self._note_gm(-(-(b * plen) // tile))
-            cache = self._pad_cache(cache, plen)
+            if chunk:
+                cache, logits = self._sharded_chunk_prefill(
+                    toks_in, plen, chunk)
+            else:
+                cache, logits = self._prefill(
+                    self.params, {"tokens": jnp.asarray(toks_in)},
+                    frozen_pre)
+                if collect:
+                    if self._sharded:
+                        self._note_gm(self._shard["wmax_g"] * plen,
+                                      self._ndev)
+                    else:
+                        self._note_gm(-(-(b * plen) // tile))
+                cache = self._pad_cache(cache)
             done = np.zeros(b, bool)
             cur = jnp.argmax(logits, -1).astype(jnp.int32)
             pos = plen
@@ -893,6 +1077,215 @@ class Engine:
             self.obs.tracer.add_complete("wave", t_wave0,
                                          time.perf_counter_ns(),
                                          batch=b, prompt_len=plen)
+            self._m_waves.inc()
+            self._m_tokens.inc(sum(len(o) for o in results))
+        for r, toks_out in zip(requests, results):
+            r.out = {"tokens": toks_out, "spamm": spamm_meta}
+        return results
+
+    def _sharded_chunk_prefill(self, toks_in: np.ndarray, plen: int,
+                               chunk: int):
+        """Prefill the padded sharded wave in `chunk`-token chunks at ONE
+        static shard shape. Pad slots replicate live rows (the clamp-pad
+        idiom), so every chunk runs the identical program; a partial final
+        chunk clamp-pads its token tail and carries sentinel positions
+        (>= max_len) there, whose drop-mode cache writes vanish. Returns
+        (stacked full-length linear cache, final-chunk logits)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        collect = self.spamm_ctx is not None and self.spamm_ctx.enable
+        btot = toks_in.shape[0]
+        per = btot // self._ndev
+        one = self._pad_cache(
+            M.init_cache(self.cfg, self.pcfg, per, self.max_len), full=True)
+        stacked = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (self._ndev, *t.shape)), one)
+        rows = NamedSharding(self._spamm_mesh, P("rows"))
+        cache = jax.tree.map(lambda t: jax.device_put(t, rows), stacked)
+        frozen_ck = self._sharded_frozen_for(chunk)
+        logits = None
+        for lo in range(0, plen, chunk):
+            n = min(chunk, plen - lo)
+            tk = np.empty((btot, chunk), np.int32)
+            tk[:, :n] = toks_in[:, lo:lo + n]
+            if n < chunk:
+                tk[:, n:] = tk[:, n - 1:n]
+            posr = np.full(chunk, self.max_len, np.int32)
+            posr[:n] = lo + np.arange(n)
+            pos = np.broadcast_to(posr, (btot, chunk)).copy()
+            last = np.full(btot, n - 1 if lo + n >= plen else -1, np.int32)
+            cache, logits = self._chunk(
+                self.params, {"tokens": jnp.asarray(tk)}, cache,
+                jnp.asarray(pos), jnp.asarray(last), frozen_ck)
+            if collect:
+                self._note_gm(self._shard["wmax_g"] * chunk, self._ndev)
+            if self.obs.enabled:
+                self._m_chunks.inc()
+        return cache, logits
+
+    def _generate_chunked(self, requests: List[Request],
+                          chunk: int) -> List[np.ndarray]:
+        """Slot scheduler: chunked prefill interleaved with decode over a
+        power-of-two-bucketed slot pool. Per iteration: (1) queued requests
+        are admitted into idle slots, (2) every prefilling slot advances by
+        one `chunk`-token chunk at ONE static (slots, chunk) shape — a slot
+        whose prompt ends inside the chunk captures its first generated
+        token from that chunk's logits, (3) pending tokens are emitted and
+        finished slots freed, (4) one decode step runs over the decoding
+        slots at per-slot positions. Idle/pad lanes carry position
+        sentinels (>= max_len): their cache writes drop and their outputs
+        are never read. Termination per slot matches the lockstep wave
+        exactly (EOS / max_new_tokens / pos >= max_len - 1 at emit time)."""
+        b = len(requests)
+        collect = self.spamm_ctx is not None and self.spamm_ctx.enable
+        obs_on = self.obs.enabled
+        cap = min(b, self._max_slots) if self._max_slots else b
+        nslots = _bucket(cap, 1)
+        tile = self.spamm_ctx.cfg.tile if collect else 0
+        t_wave0 = time.perf_counter_ns() if obs_on else 0
+        ttft_s = None
+        decode_lat: list = []
+        spamm_meta = None
+        store0 = None
+        reshard0 = None
+        if collect:
+            hits0 = self.spamm_ctx.cache.hits
+            misses0 = self.spamm_ctx.cache.misses
+            if self.plan_store is not None:
+                store0 = (self.plan_store.hits, self.plan_store.misses)
+            if self._resharder is not None:
+                reshard0 = (self._resharder.resharded,
+                            self._resharder.probes)
+        frozen_ck = self._frozen_for(nslots * chunk)
+        frozen_dec = self._frozen_for(nslots) if self._freeze else {}
+        cache = self._pad_cache(
+            M.init_cache(self.cfg, self.pcfg, nslots, self.max_len),
+            full=True)
+        outs: List[list] = [[] for _ in range(b)]
+        queue = list(range(b))
+        slot_req = [-1] * nslots       # request index per slot, -1 when idle
+        mode = ["idle"] * nslots       # idle | prefill | decode
+        cursor = [0] * nslots          # prompt tokens already fed
+        pos = [0] * nslots             # tokens materialized in the cache
+        pending: List[Optional[int]] = [None] * nslots
+        cur = np.zeros(nslots, np.int32)
+        if collect:
+            self.spamm_ctx.begin_stats()
+        try:
+            while queue or any(m != "idle" for m in mode):
+                if obs_on:
+                    self._m_queue.observe(len(queue))
+                # -- admission: queued requests claim idle slots ----------
+                for s in range(nslots):
+                    if mode[s] == "idle" and queue:
+                        slot_req[s] = queue.pop(0)
+                        mode[s] = "prefill"
+                        cursor[s] = pos[s] = 0
+                        pending[s] = None
+                        if obs_on:
+                            self._m_admit.inc()
+                if obs_on:
+                    self._m_occupancy.observe(
+                        sum(m != "idle" for m in mode))
+                # -- one chunk of prefill over the prefilling slots -------
+                if any(m == "prefill" for m in mode):
+                    tk = np.zeros((nslots, chunk), np.int32)
+                    posc = np.full((nslots, chunk), self.max_len, np.int32)
+                    last = np.full(nslots, -1, np.int32)
+                    fin = []
+                    for s in range(nslots):
+                        if mode[s] != "prefill":
+                            continue
+                        pr = np.asarray(requests[slot_req[s]].prompt,
+                                        np.int32)
+                        n = min(len(pr) - cursor[s], chunk)
+                        tk[s, :n] = pr[cursor[s]:cursor[s] + n]
+                        if n < chunk:
+                            tk[s, n:] = tk[s, n - 1]
+                        posc[s, :n] = cursor[s] + np.arange(n)
+                        cursor[s] += n
+                        if cursor[s] >= len(pr):
+                            last[s] = n - 1
+                            fin.append(s)
+                    if collect:
+                        self.spamm_ctx.set_phase("prefill")
+                    t0 = time.perf_counter_ns() if obs_on else 0
+                    cache, logits = self._chunk(
+                        self.params, {"tokens": jnp.asarray(tk)}, cache,
+                        jnp.asarray(posc), jnp.asarray(last), frozen_ck)
+                    step_tok = np.asarray(
+                        jnp.argmax(logits, -1).astype(jnp.int32))
+                    if obs_on:
+                        t1 = time.perf_counter_ns()
+                        self.obs.tracer.add_complete("prefill_chunk", t0, t1)
+                        self._m_chunks.inc()
+                    if collect:
+                        self._note_gm(-(-(nslots * chunk) // tile))
+                    self._maybe_reshard(requests, outs)
+                    for s in fin:
+                        mode[s] = "decode"
+                        pos[s] = len(requests[slot_req[s]].prompt)
+                        pending[s] = int(step_tok[s])
+                    if fin and ttft_s is None and obs_on:
+                        ttft_s = (time.perf_counter_ns() - t_wave0) / 1e9
+                        self._m_ttft.observe(ttft_s)
+                # -- emit pending tokens; finished slots free -------------
+                for s in range(nslots):
+                    if mode[s] != "decode" or pending[s] is None:
+                        continue
+                    r = requests[slot_req[s]]
+                    tok = pending[s]
+                    pending[s] = None
+                    outs[slot_req[s]].append(tok)
+                    if ((r.eos_id is not None and tok == r.eos_id)
+                            or len(outs[slot_req[s]]) >= r.max_new_tokens
+                            or pos[s] >= self.max_len - 1):
+                        mode[s] = "idle"
+                        slot_req[s] = -1
+                # -- one decode step over the decoding slots --------------
+                dec = [s for s in range(nslots) if mode[s] == "decode"]
+                if dec:
+                    posv = np.full(nslots, self.max_len, np.int32)
+                    for s in dec:
+                        cur[s] = outs[slot_req[s]][-1]
+                        posv[s] = pos[s]
+                    if collect:
+                        self.spamm_ctx.set_phase("decode")
+                    t0 = time.perf_counter_ns() if obs_on else 0
+                    logits, cache = self._decode(
+                        self.params, jnp.asarray(cur)[:, None], cache,
+                        jnp.asarray(posv), frozen_dec)
+                    step_tok = np.asarray(
+                        jnp.argmax(logits, -1).astype(jnp.int32))
+                    if obs_on:
+                        t1 = time.perf_counter_ns()
+                        dt = (t1 - t0) / 1e9
+                        self.obs.tracer.add_complete("decode_step", t0, t1)
+                        decode_lat.append(dt)
+                        self._m_decode_s.observe(dt)
+                    if collect:
+                        self._note_gm(-(-nslots // tile))
+                    self._maybe_reshard(requests, outs)
+                    for s in dec:
+                        pending[s] = int(step_tok[s])
+                        pos[s] += 1
+        finally:
+            if collect:
+                jax.effects_barrier()
+                byte_taps = self.spamm_ctx.drain_byte_stats()
+                cost_taps = self.spamm_ctx.drain_cost_stats()
+                taps = self.spamm_ctx.end_stats()
+                self.spamm_ctx.set_phase("prefill")
+        if collect:
+            spamm_meta = self._spamm_stats(taps, hits0, misses0, store0,
+                                           reshard0, byte_taps, cost_taps,
+                                           ttft_s, decode_lat)
+        results = [np.asarray(o, np.int32) for o in outs]
+        if obs_on:
+            self.obs.tracer.add_complete(
+                "wave", t_wave0, time.perf_counter_ns(), batch=b,
+                slots=nslots, chunk=chunk)
             self._m_waves.inc()
             self._m_tokens.inc(sum(len(o) for o in results))
         for r, toks_out in zip(requests, results):
