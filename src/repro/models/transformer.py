@@ -163,10 +163,13 @@ def attention_decode(
         )
     elif vector_pos:
         # per-row scatter; mode="drop" discards rows whose position is out
-        # of range, which is exactly the idle-slot sentinel contract (only
-        # meaningful for linear caches — a ring modulo would wrap sentinels
-        # back into range, so chunked serving allocates full-length caches)
-        slot = (pos % cache_k.shape[1]) if ring else pos
+        # of range, which is exactly the idle-slot sentinel contract. Per-row
+        # positions REQUIRE a linear full-length cache (chunked serving pads
+        # to max_len), so never apply the ring modulo here: for valid lanes
+        # (pos < S) it is a no-op, while a sentinel (pos == max_len == S,
+        # when sliding_window >= max_len keeps `ring` True) would wrap to
+        # slot 0 and clobber a mid-prefill lane's K/V instead of dropping.
+        slot = pos
         bi = jnp.arange(b)
         cache_k = cache_k.at[bi, slot].set(k[:, 0].astype(cache_k.dtype),
                                            mode="drop")

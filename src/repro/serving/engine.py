@@ -42,6 +42,14 @@ from repro.obs import (FRACTION_BUCKETS, Histogram, LATENCY_BUCKETS_S,
 COUNT_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 
 
+def _floor_pow2(n: int) -> int:
+    """Largest power of two <= n (n >= 1). The slot pool floors a
+    non-power-of-two `max_slots` so the documented cap on concurrent slots
+    (and their KV-cache memory) is never exceeded while the pool stays on
+    the power-of-two bucket ladder."""
+    return 1 << (int(n).bit_length() - 1)
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray           # (S,) int32
@@ -699,7 +707,10 @@ class Engine:
         `full=True` always grow to max_len — chunked prefill scatters at
         absolute positions, so windowed archs keep a LINEAR full-length
         cache (the window applies as a mask; `layer_decode`'s ring
-        condition turns itself off on a cache longer than the window)."""
+        condition turns itself off on a cache longer than the window, and
+        when window >= max_len keeps it True the per-row decode path still
+        writes linearly — it never applies the ring modulo, so position
+        sentinels drop instead of wrapping)."""
         target = (
             min(self.max_len, self.cfg.sliding_window)
             if self.cfg.sliding_window and not full else self.max_len
@@ -1142,6 +1153,11 @@ class Engine:
         obs_on = self.obs.enabled
         cap = min(b, self._max_slots) if self._max_slots else b
         nslots = _bucket(cap, 1)
+        if self._max_slots and nslots > self._max_slots:
+            # the bucket ladder rounds UP — past a non-power-of-two
+            # max_slots that would run up to 2x the capped slot pool, so
+            # floor to the largest power of two that honors the cap
+            nslots = _floor_pow2(self._max_slots)
         tile = self.spamm_ctx.cfg.tile if collect else 0
         t_wave0 = time.perf_counter_ns() if obs_on else 0
         ttft_s = None

@@ -5,6 +5,8 @@ left-trimmed every prompt to the shortest in the batch), the chunked/one-shot
 bit-parity contract, queue-driven slot admission, the jit-cache bucket bound,
 and loud rejection everywhere the engine cannot serve a batch faithfully.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -164,6 +166,53 @@ def test_slot_capped_admission_queue(setup):
     # every request was admitted through the slot pool
     assert eng._m_admit.value() >= len(mix)
     assert eng._m_chunks.value() > 0
+
+
+def test_windowed_arch_window_ge_max_len_chunked(setup):
+    """sliding_window >= max_len keeps layer_decode's ring condition True on
+    the chunked engine's full-length LINEAR cache. During decode steps a
+    still-prefilling lane carries the position sentinel (pos == max_len),
+    whose write must DROP — the old ring modulo wrapped it to slot 0 and
+    silently clobbered that lane's token-0 K/V."""
+    cfg, ctx, params = setup
+    wcfg = dataclasses.replace(cfg, sliding_window=64)
+    rng = np.random.default_rng(9)
+    # lane 0 (len 5) finishes prefill and decodes while lane 1 (len 23) is
+    # still chunking — the corruption window the regression needs
+    mix = [rng.integers(1, cfg.vocab, n).astype(np.int32) for n in (5, 23)]
+    eng = Engine(wcfg, PCFG, ctx, params, max_len=64, spamm_cfg=_sc(),
+                 prefill_chunk=8)
+    outs = eng.generate([Request(prompt=p, max_new_tokens=4) for p in mix])
+    for p, o in zip(mix, outs):
+        solo = Engine(wcfg, PCFG, ctx, params, max_len=64, spamm_cfg=_sc())
+        ref = solo.generate([Request(prompt=p, max_new_tokens=4)])[0]
+        np.testing.assert_array_equal(ref, o)
+
+
+def test_non_pow2_max_slots_floors_not_rounds_up(setup):
+    """max_slots=3 must not run 4 concurrent slots: the pool floors to the
+    largest power of two <= the cap so the documented slot/KV budget is
+    never exceeded."""
+    from repro.serving.engine import _floor_pow2
+    assert [_floor_pow2(n) for n in (1, 2, 3, 4, 5, 6, 7, 8)] == \
+        [1, 2, 2, 4, 4, 4, 4, 8]
+    cfg, _, _ = setup
+    rng = np.random.default_rng(10)
+    mix = [rng.integers(1, cfg.vocab, n).astype(np.int32)
+           for n in (5, 16, 23, 9)]
+    eng = _engine(setup, prefill_chunk=8, max_slots=3)
+    widths = []
+    orig = eng._chunk
+
+    def spy(params, batch, *a):
+        widths.append(int(batch["tokens"].shape[0]))
+        return orig(params, batch, *a)
+
+    eng._chunk = spy
+    outs = eng.generate([Request(prompt=p, max_new_tokens=4) for p in mix])
+    assert widths and set(widths) == {2}, widths
+    for p, o in zip(mix, outs):
+        np.testing.assert_array_equal(_solo_reference(setup, p, 4), o)
 
 
 def test_eos_frees_slot_midwave(setup):
